@@ -1,0 +1,58 @@
+"""Wall-clock persistence overhead per PCG iteration (crash-free run) on
+this container's CPU, plus recovery-path timing: the end-to-end version
+of Figs. 9/10 on real (simulated-NVM) execution.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    FailurePlan,
+    InMemoryESR,
+    JacobiPreconditioner,
+    NVMESRHomogeneous,
+    NVMESRPRD,
+    PCGConfig,
+    make_poisson_problem,
+    solve,
+)
+
+
+def _run(backend=None, failures=(), grid=(32, 16, 16), nblocks=8):
+    op, b = make_poisson_problem(*grid, nblocks=nblocks)
+    pre = JacobiPreconditioner(op)
+    # warm the jit caches so wall time measures the steady state
+    solve(op, b, pre, PCGConfig(tol=1e-2, maxiter=3))
+    t0 = time.perf_counter()
+    _, rep, _ = solve(op, b, pre, PCGConfig(tol=1e-10), backend=backend,
+                      failures=list(failures))
+    wall = time.perf_counter() - t0
+    return wall, rep
+
+
+def rows():
+    out = []
+    base_wall, base_rep = _run()
+    per_iter = base_wall / max(base_rep.iterations, 1)
+    out.append(("pcg_plain_us_per_iter", per_iter * 1e6,
+                f"{base_rep.iterations} iters to 1e-10"))
+    mk = {
+        "esr_inmemory": lambda op_n, bs: InMemoryESR(op_n, bs, np.float64),
+        "nvm_homogeneous": lambda op_n, bs: NVMESRHomogeneous(op_n, bs, np.float64),
+        "nvm_prd": lambda op_n, bs: NVMESRPRD(op_n, bs, np.float64),
+    }
+    op, _ = make_poisson_problem(32, 16, 16, nblocks=8)
+    for name, f in mk.items():
+        be = f(op.nblocks, op.partition.block_size)
+        wall, rep = _run(backend=be)
+        out.append((f"pcg_{name}_us_per_iter", wall / max(rep.iterations, 1) * 1e6,
+                    f"modeled persist {rep.persist_cost_s*1e3:.2f}ms total"))
+    # recovery path
+    be = NVMESRPRD(op.nblocks, op.partition.block_size, np.float64)
+    wall, rep = _run(backend=be, failures=[FailurePlan(20, (2, 5))])
+    out.append(("pcg_nvm_prd_recovery_run_us_per_iter",
+                wall / max(rep.iterations, 1) * 1e6,
+                f"recovered={rep.failures_recovered} wasted={rep.wasted_iterations}"))
+    return out

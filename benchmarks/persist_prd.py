@@ -1,0 +1,55 @@
+"""Paper Fig. 10: time overhead of one persistence iteration in the PRD
+sub-cluster architecture:
+
+  - NVM-ESR: MPI OSC over RDMA to remote NVRAM (PSCW, wait_persist)
+  - MPI OSC over RDMA to remote RAM (no persist) — the persistence cost
+  - remote SATA-SSD via SSH-FS — the traditional C/R reference
+  - in-memory ESR (for the crossover with small process counts)
+
+The PRD NIC serializes incoming puts, so origin-visible time grows with
+total bytes — the Fig. 10 trend.  PSCW lets origins exit before the PRD
+flush: ``origin`` vs ``target`` columns show the overlap win.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.esr import InMemoryESR
+from repro.core.nvm_esr import NVMESRPRD
+from repro.nvm.store import Tier
+
+LOCAL_N = 176_400
+
+
+def prd_costs(nprocs: int, tier: Tier, network: str):
+    be = NVMESRPRD(nprocs, LOCAL_N, np.float64, tier=tier, network=network,
+                   async_drain=True)
+    rng = np.random.default_rng(0)
+    p = rng.standard_normal(nprocs * LOCAL_N)
+    origin = be.persist(1, 0.5, p)
+    target = be.drain()
+    return origin, target
+
+
+def rows():
+    out = []
+    for nprocs in (1, 8, 32, 64, 128, 256):
+        o_nvm, t_nvm = prd_costs(nprocs, Tier.NVM, "rdma")
+        o_ram, _ = prd_costs(nprocs, Tier.DRAM, "rdma")
+        o_ssd, t_ssd = prd_costs(nprocs, Tier.SSD, "sshfs")
+        esr = InMemoryESR(max(nprocs, 2), LOCAL_N, np.float64)
+        e = esr.persist(1, 0.5, np.zeros(max(nprocs, 2) * LOCAL_N)) / max(nprocs, 2)
+        out.append((f"fig10_prd_rdma_nvm_p{nprocs}", o_nvm * 1e6,
+                    f"origin us; target drain {t_nvm*1e6:.0f}us overlapped"))
+        out.append((f"fig10_prd_rdma_ram_p{nprocs}", o_ram * 1e6,
+                    "origin us (no persistence)"))
+        out.append((f"fig10_prd_sshfs_ssd_p{nprocs}", o_ssd * 1e6, "origin us"))
+        out.append((f"fig10_esr_inmemory_p{nprocs}", e * 1e6, "per-proc us"))
+    # headline claims
+    o_nvm, _ = prd_costs(128, Tier.NVM, "rdma")
+    o_ssd, _ = prd_costs(128, Tier.SSD, "sshfs")
+    o_ram, _ = prd_costs(128, Tier.DRAM, "rdma")
+    out.append(("fig10_claim_nvm_vs_remote_ssd_128p", o_ssd / o_nvm, "x faster (>1)"))
+    out.append(("fig10_claim_persist_overhead_vs_ram", o_nvm / o_ram,
+                "x (persistence cost is small, ~1)"))
+    return out

@@ -1,0 +1,62 @@
+"""Benchmark harness: one module per paper figure/table.
+
+Prints ``name,value,derived`` CSV rows.  Values are microseconds for
+time-like rows (modeled with paper-cluster calibration constants where
+the real hardware is simulated — see repro/nvm/store.py), bytes/ratios
+otherwise (stated per row).
+
+Modules:
+  memory_overhead     — paper Fig. 2 + Fig. 8 (RAM/NVRAM utilization)
+  persist_homogeneous — paper Fig. 9 (homogeneous persistence tiers)
+  persist_prd         — paper Fig. 10 (PRD sub-cluster over RDMA)
+  iteration_overhead  — wall-clock per-iteration overhead + recovery
+  solver_roofline     — ESR vs NVM-ESR collective bytes on the mesh
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    from benchmarks import (
+        iteration_overhead,
+        memory_overhead,
+        persist_homogeneous,
+        persist_prd,
+        solver_roofline,
+    )
+
+    modules = [
+        ("memory_overhead", memory_overhead),
+        ("persist_homogeneous", persist_homogeneous),
+        ("persist_prd", persist_prd),
+        ("iteration_overhead", iteration_overhead),
+        ("solver_roofline", solver_roofline),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,value,derived")
+    failed = []
+    for name, mod in modules:
+        if only and name != only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for row_name, value, derived in mod.rows():
+                print(f"{row_name},{value:.6g},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failed.append((name, repr(e)))
+            traceback.print_exc()
+        print(f"_bench_{name}_wall_s,{time.perf_counter()-t0:.2f},harness timing")
+    if failed:
+        for name, err in failed:
+            print(f"_bench_{name}_FAILED,0,{err}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

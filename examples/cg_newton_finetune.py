@@ -1,0 +1,74 @@
+"""The paper's technique INSIDE an NN training loop: a Gauss-Newton /
+CG fine-tuning step whose inner linear solver is the fault-tolerant PCG.
+
+Second-order fine-tuning of a tiny regression head solves
+``(J'J + lambda I) dx = J'r`` every outer step — a symmetric positive
+definite system, i.e. exactly the solver class ESR covers.  We run the
+inner CG under NVM-ESR and kill a block mid-solve on one of the outer
+iterations; training is unaffected because the solver state is
+reconstructed exactly.
+
+    PYTHONPATH=src python examples/cg_newton_finetune.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DenseOperator,
+    FailurePlan,
+    JacobiPreconditioner,
+    NVMESRPRD,
+    PCGConfig,
+    solve,
+)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n_feat, n_out, n_data = 64, 8, 512
+    w_true = rng.standard_normal((n_feat, n_out))
+    x_data = rng.standard_normal((n_data, n_feat))
+    y_data = x_data @ w_true + 0.01 * rng.standard_normal((n_data, n_out))
+
+    w = jnp.zeros((n_feat, n_out))
+    lam = 1e-3
+
+    def residual(w):
+        return x_data @ w - y_data
+
+    # Gauss-Newton normal operator (J'J + lam I) is SPD and fixed here
+    a = np.asarray(x_data.T @ x_data + lam * np.eye(n_feat))
+    op = DenseOperator(a, nblocks=8)
+    pre = JacobiPreconditioner(op)
+
+    for outer in range(5):
+        r = residual(w)
+        loss = float(jnp.mean(r * r))
+        g = jnp.asarray(x_data.T @ r)           # (n_feat, n_out)
+        # one fault-tolerant CG solve per output column
+        dw = []
+        for j in range(n_out):
+            backend = NVMESRPRD(op.nblocks, op.partition.block_size, np.float64)
+            failures = [FailurePlan(5, (2, 3))] if (outer == 2 and j == 0) else []
+            st, rep, _ = solve(op, g[:, j], pre,
+                               PCGConfig(tol=1e-10, local_solve="dense"),
+                               backend=backend, failures=failures)
+            if failures:
+                print(f"  [outer {outer}] inner-CG failure healed: "
+                      f"recovered={rep.failures_recovered}, "
+                      f"iters={rep.iterations}")
+            dw.append(st.x)
+        w = w - jnp.stack(dw, axis=1)
+        print(f"outer {outer}: loss {loss:.6f}")
+
+    final = float(jnp.mean(residual(w) ** 2))
+    print(f"final loss {final:.2e} (noise floor ~1e-4)")
+    assert final < 1e-3
+
+
+if __name__ == "__main__":
+    main()

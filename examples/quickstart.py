@@ -1,0 +1,55 @@
+"""Quickstart: the paper in 60 seconds.
+
+Solve a 3-D Poisson system with distributed PCG, kill two "nodes"
+mid-solve, and watch NVM-ESR reconstruct the exact state from the
+persisted minimal set (two p-vectors and a scalar) — no checkpoint of
+x/r/z ever taken.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    FailurePlan,
+    JacobiPreconditioner,
+    NVMESRPRD,
+    PCGConfig,
+    make_poisson_problem,
+    solve,
+)
+
+
+def main() -> None:
+    # 24x16x16 grid = 6144 unknowns over 8 process blocks (z-slabs)
+    op, b = make_poisson_problem(24, 16, 16, nblocks=8)
+    pre = JacobiPreconditioner(op)
+
+    # recovery data goes to a (simulated) remote NVRAM PRD node via
+    # MPI-OSC/PSCW — O(n) NVM bytes, ZERO peer RAM
+    backend = NVMESRPRD(op.nblocks, op.partition.block_size, np.float64)
+
+    state, report, _ = solve(
+        op, b, pre, PCGConfig(tol=1e-10),
+        backend=backend,
+        failures=[FailurePlan(at_iteration=25, blocks=(2, 5))],
+    )
+
+    res = float(jnp.linalg.norm(b - op.apply(state.x)) / jnp.linalg.norm(b))
+    print(f"converged       : {report.converged} in {report.iterations} iterations")
+    print(f"final rel. res. : {res:.2e}")
+    print(f"failures healed : {report.failures_recovered} "
+          f"(blocks 2 and 5 died at iteration 25)")
+    print(f"wasted iters    : {report.wasted_iterations} (ESR persists every iter)")
+    print(f"RAM redundancy  : {backend.memory_overhead_values()} values "
+          f"(in-memory ESR would hold {2*(op.nblocks-1)*op.n})")
+    print(f"NVM footprint   : {backend.nvm_values()} values (4-slot ring of p-shards)")
+    assert report.converged and res < 1e-9
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Batched serving demo: prefill + token-by-token decode over sharded KV
+caches (ring buffers on sliding-window layers), greedy sampling.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch starcoder2_3b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry as R
+from repro.serving.engine import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2_3b",
+                    help="any assigned arch id (SMOKE config is used on CPU)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = R.get_config(args.arch, smoke=True)
+    if cfg.frontend == "vision":
+        raise SystemExit("vision arch serving needs patch-embedding inputs; "
+                         "use a text arch for this demo")
+    params, _ = R.init_params(cfg, jax.random.PRNGKey(0))
+
+    inputs_wrap = (lambda p, t, c: R.make_prefill(cfg)(
+        p, {"tokens": t, "frames": jnp.zeros((t.shape[0], cfg.enc_seq,
+                                              cfg.d_model), cfg.cdt)}, c)
+    ) if cfg.family == "encdec" else (
+        lambda p, t, c: R.make_prefill(cfg)(p, {"tokens": t}, c))
+
+    eng = ServeEngine(
+        prefill_fn=inputs_wrap,
+        decode_fn=R.make_decode(cfg),
+        cache_init=lambda b, s: R.init_caches(cfg, b, s)[0],
+    )
+
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0, cfg.vocab)
+    t0 = time.perf_counter()
+    out = eng.generate(params, prompt, steps=args.gen)
+    wall = time.perf_counter() - t0
+    print(f"arch {cfg.name}: generated {out.shape} tokens in {wall:.2f}s "
+          f"({args.batch*args.gen/wall:.1f} tok/s incl. compile)")
+    print("sample:", out[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Assigned architecture configs (exact published shapes) + reduced SMOKE
+configs of the same family for CPU tests.
+
+Each module exposes ``CONFIG`` and ``SMOKE``.  Sources are cited per file;
+verification tier from the assignment is noted in the docstring.
+"""

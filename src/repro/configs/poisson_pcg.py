@@ -1,0 +1,37 @@
+"""The paper's own workload: PCG on the 7-point stencil of a 3-D Poisson
+equation (HPCG-style), with ESR / NVM-ESR recovery.
+
+``GRIDS`` defines the dry-run problem sizes on the production mesh
+(z sharded across all 512 devices) and ``SMOKE`` the CPU test problem.
+"""
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    name: str
+    grid: Tuple[int, int, int]     # (nz, ny, nx)
+    nblocks: int                   # process blocks (z-slabs)
+    precond: str = "jacobi"
+    esr_mode: str = "nvm"          # "none" | "nvm" | "inmemory"
+    tol: float = 1e-10
+    maxiter: int = 10_000
+    persistence_period: int = 1
+    variant: str = "auto"          # "auto" (GSPMD baseline) | "shardmap" (§Perf)
+
+
+# dry-run cells: one pod-scale grid per ESR mode (512-way z sharding)
+GRIDS = {
+    "pcg_1g": SolverConfig("pcg_1g", (1024, 1024, 1024), 512),
+    "pcg_1g_esr": SolverConfig("pcg_1g_esr", (1024, 1024, 1024), 512, esr_mode="inmemory"),
+    "pcg_128m": SolverConfig("pcg_128m", (512, 512, 512), 512),
+    "pcg_128m_esr": SolverConfig("pcg_128m_esr", (512, 512, 512), 512, esr_mode="inmemory"),
+    # §Perf hillclimbed variants: shard_map + single-plane ppermute halos
+    # (+ Pallas stencil/fused-update kernels on TPU)
+    "pcg_1g_opt": SolverConfig("pcg_1g_opt", (1024, 1024, 1024), 512, variant="shardmap"),
+    "pcg_1g_esr_opt": SolverConfig("pcg_1g_esr_opt", (1024, 1024, 1024), 512,
+                                   esr_mode="inmemory", variant="shardmap"),
+}
+
+SMOKE = SolverConfig("pcg_smoke", (16, 12, 10), 8)

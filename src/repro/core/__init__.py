@@ -1,0 +1,37 @@
+"""The paper's primary contribution: exact state reconstruction (ESR) for
+distributed PCG, with NVM-backed persistence (NVM-ESR).
+
+Public API
+----------
+- :func:`repro.core.pcg.solve` / :func:`repro.core.pcg.solve_jit`
+- operators/preconditioners in :mod:`repro.core.poisson`
+- recovery backends: :class:`repro.core.esr.InMemoryESR`,
+  :class:`repro.core.nvm_esr.NVMESRHomogeneous`,
+  :class:`repro.core.nvm_esr.NVMESRPRD`
+- :func:`repro.core.reconstruction.reconstruct` (Algorithm 3/5)
+"""
+from repro.core.pcg import (  # noqa: F401
+    FailurePlan,
+    PCGConfig,
+    SolveReport,
+    init_state,
+    make_step,
+    solve,
+    solve_jit,
+)
+from repro.core.poisson import (  # noqa: F401
+    BlockJacobiPreconditioner,
+    BlockPartition,
+    DenseOperator,
+    IdentityPreconditioner,
+    JacobiPreconditioner,
+    PRECONDITIONERS,
+    StencilOperator,
+    make_poisson_problem,
+    random_spd,
+    stencil7,
+)
+from repro.core.esr import InMemoryESR, UnrecoverableFailure  # noqa: F401
+from repro.core.nvm_esr import NVMESRHomogeneous, NVMESRPRD  # noqa: F401
+from repro.core.reconstruction import reconstruct  # noqa: F401
+from repro.core.state import PCGState, minimal_recovery_state  # noqa: F401

@@ -1,0 +1,126 @@
+"""In-memory ESR (the paper's baseline; Chen '11 / Pachajoa et al.).
+
+Redundancy of the search direction ``p`` is piggybacked on the SpMV
+transition (ASpMV, Algorithm 2) and replicated into the **volatile RAM of
+peer processes**.  To tolerate ``c`` simultaneous failures, ``c+1`` copies
+are placed; full fault tolerance places a copy at every process —
+``O(n * proc)`` values of RAM and an all-to-all every persistence
+iteration (paper §2 and §3.1).
+
+Copy placement: copy ``i`` of block ``b`` lives in the RAM of rank
+``(b + i + 1) mod nblocks``.  A failure of block set ``F`` wipes every
+copy hosted on ranks in ``F``; recovery succeeds iff each failed block
+still has a surviving copy — which the placement guarantees whenever
+``copies > |F|``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.state import RecoveryPayload, decode_payload, encode_payload
+from repro.nvm.store import TIER_SPECS, NETWORK_SPECS, CostModel, Tier
+
+
+class UnrecoverableFailure(RuntimeError):
+    """All redundancy copies of some failed block were lost with it."""
+
+
+class InMemoryESR:
+    """Peer-RAM redundancy backend with explicit copy placement."""
+
+    name = "esr-inmemory"
+
+    def __init__(self, nblocks: int, block_size: int, dtype, copies: Optional[int] = None,
+                 slots: int = 3):
+        # 3 slots: the paper's logical minimum is 2 (two successive p's),
+        # plus one staging slot so a failure BETWEEN the two writes of an
+        # ESRP burst still leaves the previous pair intact.
+        self.nblocks = nblocks
+        self.block_size = block_size
+        self.dtype = np.dtype(dtype)
+        # full fault tolerance by default: a copy at every other process
+        self.copies = nblocks - 1 if copies is None else copies
+        if not (1 <= self.copies <= nblocks - 1):
+            raise ValueError(f"copies must be in [1, nblocks-1], got {self.copies}")
+        self.slots = slots
+        # ram[host_rank][(owner_block, slot)] -> payload bytes
+        self.ram: List[Dict[Tuple[int, int], bytes]] = [dict() for _ in range(nblocks)]
+        self._event = 0  # event-addressed slots (ESRP persists with gaps)
+        self.cost = CostModel()
+        self._dram = TIER_SPECS[Tier.DRAM]
+        self._net = NETWORK_SPECS["rdma"]
+
+    # ------------------------------------------------------------------
+    def _hosts(self, block: int) -> List[int]:
+        return [(block + i + 1) % self.nblocks for i in range(self.copies)]
+
+    def persist(self, k: int, beta: float, p_full: np.ndarray) -> float:
+        """One redundancy iteration: every block's shard is sent to its
+        ``copies`` peer hosts (modeled as the ASpMV all-to-all surplus)."""
+        p_full = np.asarray(p_full, self.dtype)
+        slot = self._event % self.slots
+        self._event += 1
+        cost = 0.0
+        for b in range(self.nblocks):
+            shard = p_full[b * self.block_size : (b + 1) * self.block_size]
+            payload = encode_payload(k, beta, shard)
+            for host in self._hosts(b):
+                self.ram[host][(b, slot)] = payload
+                # network transfer + peer DRAM write (per copy)
+                cost += self._net.transfer_cost(len(payload))
+                cost += self._dram.write_cost(len(payload))
+        self.cost.add("persist", cost)
+        return cost
+
+    # ------------------------------------------------------------------
+    def fail(self, failed_blocks: Sequence[int]) -> None:
+        """Process crash: the peer-RAM copies hosted on failed ranks die too."""
+        for b in failed_blocks:
+            self.ram[b] = {}
+
+    def recover(self, failed_blocks: Sequence[int], k: int) -> Tuple[RecoveryPayload, RecoveryPayload]:
+        """Fetch (p^(k-1), p^(k), beta^(k-1)) for the failed union from
+        surviving peer RAM. Returns concatenated payloads (prev, cur)."""
+        prev_parts, cur_parts = [], []
+        beta = None
+        for b in failed_blocks:
+            got = {}
+            for kk in (k - 1, k):
+                payload = None
+                for host in self._hosts(b):
+                    if host in failed_blocks:
+                        continue
+                    # content-matched scan over the host's slots
+                    for sl in range(self.slots):
+                        cand = self.ram[host].get((b, sl))
+                        if cand is not None and decode_payload(cand, self.dtype).k == kk:
+                            payload = cand
+                            break
+                    if payload is not None:
+                        self.cost.add("recover", self._net.transfer_cost(len(payload)))
+                        break
+                if payload is None:
+                    raise UnrecoverableFailure(
+                        f"block {b}: no surviving copy of p^({kk}) — "
+                        f"{len(failed_blocks)} failures exceed tolerance c={self.copies - 1}"
+                    )
+                got[kk] = decode_payload(payload, self.dtype)
+            prev_parts.append(got[k - 1].p)
+            cur_parts.append(got[k].p)
+            beta = got[k].beta
+        return (
+            RecoveryPayload(k - 1, 0.0, np.concatenate(prev_parts)),
+            RecoveryPayload(k, beta, np.concatenate(cur_parts)),
+        )
+
+    # ------------------------------------------------------------------
+    def memory_overhead_values(self) -> int:
+        """Redundancy values resident in system RAM.  Paper §3.1 models
+        ~2*copies*n (the two live p's); steady state here is slots(=3)*
+        copies*n — the extra n*copies is the ESRP mid-burst staging slot."""
+        return sum(len(v) for host in self.ram for v in host.values()) // self.dtype.itemsize
+
+    def nvm_values(self) -> int:
+        return 0

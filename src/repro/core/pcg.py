@@ -1,0 +1,214 @@
+"""Distributed Preconditioned Conjugate Gradient with ESR recovery.
+
+Implements paper Algorithm 1 (PCG), Algorithm 2/4 (redundancy /
+persistence iterations) and drives Algorithm 3/5 (reconstruction) through
+pluggable recovery backends (:mod:`repro.core.esr`,
+:mod:`repro.core.nvm_esr`).
+
+Two execution paths:
+
+- :func:`solve` — Python driver around a jitted iteration.  Supports the
+  persistence schedule (classic ESR: every iteration; ESRP: period ``T``),
+  failure injection, recovery, and convergence monitoring.  This is the
+  paper-faithful path used by tests/benchmarks.
+- :func:`solve_jit` — fully fused ``lax.while_loop`` solver (no recovery
+  hooks) used for performance baselines and the dry-run lowering.
+
+Note on Algorithm 1 line 3: the paper writes ``alpha = r'z / r'Ap``; we use
+the standard ``alpha = r'z / p'Ap``, which is identical in exact arithmetic
+(``r = p - beta p_prev`` and ``p_prev'Ap = 0`` by conjugacy) and is the
+numerically conventional choice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import reconstruction
+from repro.core.state import PCGState, wipe_blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class PCGConfig:
+    tol: float = 1e-10            # relative residual tolerance ||r|| / ||b||
+    maxiter: int = 10_000
+    persistence_period: int = 1   # T=1: classic ESR; T>1: ESRP bursts
+    local_solve: str = "auto"     # reconstruction local solver
+
+
+@dataclasses.dataclass(frozen=True)
+class FailurePlan:
+    """Inject a failure of ``blocks`` right after iteration ``at_iteration``."""
+
+    at_iteration: int
+    blocks: Tuple[int, ...]
+
+
+@dataclasses.dataclass
+class SolveReport:
+    iterations: int = 0
+    wasted_iterations: int = 0
+    failures_recovered: int = 0
+    converged: bool = False
+    final_relres: float = float("nan")
+    persist_cost_s: float = 0.0
+    persist_events: int = 0
+    residual_history: List[float] = dataclasses.field(default_factory=list)
+
+
+def init_state(op, precond, b: jax.Array, x0: Optional[jax.Array] = None) -> PCGState:
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    r0 = b - op.apply(x0)
+    z0 = precond.apply(r0)
+    return PCGState(
+        x=x0, r=r0, z=z0, p=z0, rz=jnp.vdot(r0, z0),
+        beta_prev=jnp.zeros((), b.dtype), k=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_step(op_apply: Callable, precond_apply: Callable) -> Callable[[PCGState], PCGState]:
+    """One PCG iteration (Algorithm 1 lines 3-8) as a jittable pure fn."""
+
+    def step(state: PCGState) -> PCGState:
+        ap = op_apply(state.p)                       # (A)SpMV
+        alpha = state.rz / jnp.vdot(state.p, ap)     # line 3
+        x = state.x + alpha * state.p                # line 4
+        r = state.r - alpha * ap                     # line 5
+        z = precond_apply(r)                         # line 6
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / state.rz                     # line 7
+        p = z + beta * state.p                       # line 8
+        return PCGState(x=x, r=r, z=z, p=p, rz=rz_new, beta_prev=beta, k=state.k + 1)
+
+    return step
+
+
+def should_persist(k: int, period: int) -> bool:
+    """Persistence schedule: classic ESR persists every iteration; ESRP
+    persists bursts of two successive iterations every ``period``."""
+    if period <= 1:
+        return True
+    return k % period in (0, 1)
+
+
+def solve(
+    op,
+    b: jax.Array,
+    precond,
+    config: PCGConfig = PCGConfig(),
+    backend=None,
+    failures: Sequence[FailurePlan] = (),
+    x0: Optional[jax.Array] = None,
+    capture_states_at: Sequence[int] = (),
+) -> Tuple[PCGState, SolveReport, Dict[int, PCGState]]:
+    """PCG with optional ESR/NVM-ESR fault tolerance.
+
+    ``backend`` is an in-memory-ESR or NVM-ESR recovery backend (or None
+    for plain PCG).  ``failures`` injects block crashes.  Returns the
+    final state, a report, and any states captured for verification.
+    """
+    step = jax.jit(make_step(op.apply, precond.apply))
+    state = init_state(op, precond, b, x0)
+    bnorm = float(jnp.linalg.norm(b))
+    report = SolveReport()
+    captured: Dict[int, PCGState] = {}
+    pending = sorted(failures, key=lambda f: f.at_iteration)
+    pending_idx = 0
+
+    # Survivor-side snapshot at the last completed persistence pair: the
+    # surviving processes' own state copy kept in their local RAM (cheap,
+    # one shard each).  Needed to roll back to the recovery point when
+    # persistence is periodic (ESRP trade-off, paper §2).
+    snapshot: Optional[PCGState] = None
+    last_persisted_k = -10
+
+    def persist_now(st: PCGState) -> None:
+        nonlocal snapshot, last_persisted_k
+        if backend is None:
+            return
+        k = int(st.k)
+        cost = backend.persist(k, float(st.beta_prev), np.asarray(st.p))
+        report.persist_cost_s += cost
+        report.persist_events += 1
+        if last_persisted_k == k - 1 or k == 0:
+            # pair (k-1, k) now durable (or initial state) -> new recovery point
+            snapshot = st
+        last_persisted_k = k
+
+    # Iteration 0 state counts as persisted so the first pair completes at k=1.
+    persist_now(state)
+
+    while int(state.k) < config.maxiter:
+        k = int(state.k)
+        if k in capture_states_at:
+            captured[k] = state
+
+        relres = float(jnp.linalg.norm(state.r)) / bnorm
+        report.residual_history.append(relres)
+        if relres < config.tol:
+            report.converged = True
+            break
+
+        # ---- failure injection + recovery ----
+        if pending_idx < len(pending) and k == pending[pending_idx].at_iteration and k > 0:
+            plan = pending[pending_idx]
+            pending_idx += 1
+            if backend is None:
+                raise RuntimeError("failure injected but no recovery backend configured")
+            state = wipe_blocks(state, op.partition, plan.blocks)  # VM lost
+            backend.fail(plan.blocks)
+            assert snapshot is not None, "no completed persistence pair before failure"
+            k_rec = int(snapshot.k)
+            report.wasted_iterations += k - k_rec  # ESRP discard cost
+            prev, cur = backend.recover(plan.blocks, k_rec)
+            state = reconstruction.reconstruct(
+                op, precond, b,
+                state_surviving=snapshot,
+                failed_blocks=list(plan.blocks),
+                p_prev_f=jnp.asarray(prev.p, b.dtype),
+                p_cur_f=jnp.asarray(cur.p, b.dtype),
+                beta=cur.beta,
+                local_method=config.local_solve,
+            )
+            report.failures_recovered += 1
+            if int(state.k) in capture_states_at:
+                captured[int(state.k)] = state
+            continue
+
+        state = step(state)
+        if backend is not None and should_persist(int(state.k), config.persistence_period):
+            persist_now(state)
+
+    report.iterations = int(state.k)
+    report.final_relres = float(jnp.linalg.norm(state.r)) / bnorm
+    report.converged = report.converged or report.final_relres < config.tol
+    return state, report, captured
+
+
+def solve_jit(
+    op_apply: Callable,
+    precond_apply: Callable,
+    b: jax.Array,
+    tol: float = 1e-10,
+    maxiter: int = 10_000,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused while-loop PCG (no recovery hooks): perf/dry-run path."""
+    step = make_step(op_apply, precond_apply)
+    bnorm2 = jnp.vdot(b, b)
+
+    def cond(state: PCGState):
+        rr = jnp.vdot(state.r, state.r)
+        return jnp.logical_and(rr > (tol * tol) * bnorm2, state.k < maxiter)
+
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    z0 = precond_apply(r0)
+    init = PCGState(x=x0, r=r0, z=z0, p=z0, rz=jnp.vdot(r0, z0),
+                    beta_prev=jnp.zeros((), b.dtype), k=jnp.zeros((), jnp.int32))
+    final = jax.lax.while_loop(cond, lambda s: step(s), init)
+    return final.x, final.k

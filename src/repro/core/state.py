@@ -1,0 +1,81 @@
+"""Solver state pytrees and minimal-state identification.
+
+Following the generic strategy of Pachajoa et al. [14], the *minimal*
+persistent set for PCG is ``{p^(k), p^(k-1), beta^(k-1), k}`` — every other
+state variable (x, r, z, and the scalars) is reconstructible from it plus
+surviving shards and static data.  This module defines the state pytree
+and the extraction of the minimal set.
+"""
+from __future__ import annotations
+
+import struct
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PCGState(NamedTuple):
+    """State after ``k`` completed PCG iterations.
+
+    Invariants (exact arithmetic):
+      - ``r = b - A x``
+      - ``z = P r``
+      - ``p = z + beta_prev * p_prev``  (``p = z`` when k == 0)
+      - ``rz = <r, z>``
+    """
+
+    x: jax.Array
+    r: jax.Array
+    z: jax.Array
+    p: jax.Array
+    rz: jax.Array
+    beta_prev: jax.Array
+    k: jax.Array
+
+
+class RecoveryPayload(NamedTuple):
+    """Minimal recovery data persisted at iteration ``k`` (one slot)."""
+
+    k: int
+    beta: float  # beta^(k-1): the scalar linking p^(k-1) -> p^(k)
+    p: np.ndarray  # p^(k), the block shard (or full vector)
+
+
+_SCALARS = struct.Struct("<qd")  # k, beta
+
+
+def encode_payload(k: int, beta: float, p_block: np.ndarray) -> bytes:
+    """Serialize one slot's recovery payload (dtype fixed by caller)."""
+    return _SCALARS.pack(int(k), float(beta)) + np.ascontiguousarray(p_block).tobytes()
+
+
+def decode_payload(raw: bytes, dtype) -> RecoveryPayload:
+    k, beta = _SCALARS.unpack(raw[: _SCALARS.size])
+    p = np.frombuffer(raw[_SCALARS.size :], dtype=dtype).copy()
+    return RecoveryPayload(k=k, beta=beta, p=p)
+
+
+def payload_nbytes(block_size: int, dtype) -> int:
+    return _SCALARS.size + block_size * np.dtype(dtype).itemsize
+
+
+def minimal_recovery_state(state: PCGState) -> Tuple[int, float, jax.Array]:
+    """The paper's minimal persistent set at this iteration: (k, beta, p)."""
+    return int(state.k), float(state.beta_prev), state.p
+
+
+def wipe_blocks(state: PCGState, partition, blocks) -> PCGState:
+    """Simulate failure of ``blocks``: their shards of every volatile
+    vector become garbage (NaN), as their VM is lost (paper §3 model)."""
+    nan = float("nan")
+
+    def wipe(v):
+        vb = v.reshape(partition.nblocks, partition.block_size)
+        return vb.at[jnp.asarray(list(blocks))].set(nan).reshape(-1)
+
+    return state._replace(
+        x=wipe(state.x), r=wipe(state.r), z=wipe(state.z), p=wipe(state.p),
+        rz=jnp.asarray(nan, state.rz.dtype),
+    )

@@ -1,0 +1,10 @@
+"""Distribution substrate: logical-axis sharding rules and helpers."""
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    current_rules,
+    logical_spec,
+    set_rules,
+    shard,
+    use_rules,
+)

@@ -1,0 +1,140 @@
+"""Logical-axis sharding: model code names *logical* dimensions; a rules
+table maps them onto physical mesh axes per deployment.
+
+Parallelism realized through the rules (DESIGN.md §5):
+
+- **DP**   batch        -> ("pod", "data")
+- **FSDP** fsdp         -> "data"   (ZeRO-3 parameter/optimizer sharding)
+- **TP**   heads/mlp/vocab -> "model" (Megatron tensor parallelism)
+- **EP**   experts      -> "model"  (expert parallelism, aligned with TP)
+- **SP**   seq          -> "model"  (Megatron sequence parallelism of the
+  residual stream between blocks; GSPMD inserts the all-gather /
+  reduce-scatter transitions at block boundaries)
+- **KV-seq** kv_seq     -> "model"  (sequence-sharded decode caches ->
+  flash-decode style distributed softmax)
+
+Model code calls ``shard(x, "batch", "seq", "embed")`` etc.; with no mesh
+configured (CPU smoke tests) this is the identity.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """Mapping of logical axis names to physical mesh axes."""
+
+    mesh: Optional[Mesh]
+    rules: Dict[str, Axis]
+
+    def physical(self, logical: Optional[str]) -> Axis:
+        if logical is None:
+            return None
+        axis = self.rules.get(logical)
+        if axis is None or self.mesh is None:
+            return None
+        # keep only axes present in this mesh (e.g. no "pod" single-pod)
+        if isinstance(axis, tuple):
+            kept = tuple(a for a in axis if a in self.mesh.axis_names)
+            return kept if kept else None
+        return axis if axis in self.mesh.axis_names else None
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*(self.physical(l) for l in logical))
+
+
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "seq": "model",      # sequence parallelism of the residual stream
+    "kv_seq": "model",   # sequence-sharded decode caches
+    "embed": None,
+    "layers": None,
+    "state": None,       # SSM state dim
+}
+
+_ctx = threading.local()
+
+
+def set_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, Axis]] = None) -> AxisRules:
+    r = AxisRules(mesh, dict(DEFAULT_RULES if rules is None else rules))
+    _ctx.rules = r
+    return r
+
+
+def current_rules() -> AxisRules:
+    r = getattr(_ctx, "rules", None)
+    if r is None:
+        r = AxisRules(None, dict(DEFAULT_RULES))
+        _ctx.rules = r
+    return r
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, Axis]] = None):
+    prev = getattr(_ctx, "rules", None)
+    set_rules(mesh, rules)
+    try:
+        yield current_rules()
+    finally:
+        _ctx.rules = prev
+
+
+def logical_spec(*logical: Optional[str]) -> P:
+    return current_rules().spec(*logical)
+
+
+def spec_for_shape(rules: AxisRules, shape: Sequence[int],
+                   logical: Sequence[Optional[str]]) -> P:
+    """Physical spec with per-dimension divisibility degradation.
+
+    A logical axis whose mapped mesh extent does not divide the tensor
+    dimension is dropped (for tuple mappings, the longest divisible prefix
+    is kept) — e.g. kv_heads=8 on a model=16 axis falls back to
+    replication while q-heads=32 shard fully.
+    """
+    phys = []
+    mesh = rules.mesh
+    for dim, l in zip(shape, logical):
+        ax = rules.physical(l)
+        if ax is None or mesh is None:
+            phys.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        kept = []
+        prod = 1
+        for a in axes:
+            ext = mesh.shape[a]
+            if dim % (prod * ext) == 0:
+                kept.append(a)
+                prod *= ext
+        if not kept:
+            phys.append(None)
+        elif len(kept) == 1:
+            phys.append(kept[0])
+        else:
+            phys.append(tuple(kept))
+    return P(*phys)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (identity w/o mesh)."""
+    r = current_rules()
+    if r.mesh is None:
+        return x
+    spec = spec_for_shape(r, x.shape, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))

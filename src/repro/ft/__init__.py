@@ -1,0 +1,6 @@
+"""Fault-tolerant training substrate (the paper's NVM persistence
+machinery as a first-class training feature — DESIGN.md §4)."""
+from repro.ft.checkpoint import NVMCheckpointManager, CheckpointConfig  # noqa: F401
+from repro.ft.period import optimal_period, PersistencePeriodTuner  # noqa: F401
+from repro.ft.recovery import TrainingRecovery, inject_host_failure  # noqa: F401
+from repro.ft.straggler import StragglerMonitor, StragglerAdvice  # noqa: F401

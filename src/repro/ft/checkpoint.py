@@ -1,0 +1,225 @@
+"""NVM-tier training checkpoints with the paper's persistence protocol.
+
+Carries the NVM-ESR design into NN training (DESIGN.md §4):
+
+- **minimal-state identification**: only (params, optimizer moments, step,
+  data cursor, RNG) persist; activations are *reconstructed* by
+  recomputation — the training analogue of ESR's solve-don't-store.
+- **double-buffered alternating slots** (Dorożyński et al. [4]): two slot
+  directories written alternately; a manifest (step + per-file CRC32) is
+  committed *after* the payload is durable, so one valid checkpoint always
+  survives a crash mid-persist.
+- **PSCW-style overlap**: ``save_async`` snapshots device arrays to host
+  (the access epoch), returns immediately, and a drainer thread plays the
+  PRD target (exposure epoch) writing + fsync'ing — training overlaps the
+  NVM drain exactly like the solver's compute overlaps the PRD flush.
+- **elastic restore**: arrays are restored host-side and re-placed with
+  ``jax.device_put`` under the *current* mesh/sharding — a checkpoint
+  taken on N devices restores onto M devices (elastic scaling).
+
+Tier cost accounting uses the same calibrated models as the solver
+backends, so benchmarks can compare DRAM/NVM/SSD persistence for training
+exactly as the paper's Fig. 9/10 do for the solver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import time
+import zlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.nvm.store import TIER_SPECS, CostModel, Tier
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    directory: str
+    tier: Tier = Tier.NVM
+    async_drain: bool = True
+    keep_fsync: bool = False  # real fsync per file (slow on CI; modeled anyway)
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class NVMCheckpointManager:
+    """Double-buffered, asynchronous, tier-modeled checkpoint manager."""
+
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        self.spec = TIER_SPECS[cfg.tier]
+        self.cost = CostModel()
+        os.makedirs(cfg.directory, exist_ok=True)
+        self._seq = self._latest_valid()[0] or 0
+        self._drainer: Optional[threading.Thread] = None
+        self._last_persist_wall = 0.0
+        self._last_persist_model = 0.0
+
+    # ------------------------------------------------------------------
+    def _slot_dir(self, seq: int) -> str:
+        return os.path.join(self.cfg.directory, f"slot{seq % 2}")
+
+    def _manifest_path(self, slot: str) -> str:
+        return os.path.join(slot, "MANIFEST.json")
+
+    # ------------------------------------------------------------------
+    def save(self, tree: Any, step: int, extra: Optional[Dict[str, Any]] = None) -> float:
+        """Synchronous persist; returns modeled seconds."""
+        host = self._snapshot(tree)
+        return self._drain(host, step, extra or {})
+
+    def save_async(self, tree: Any, step: int,
+                   extra: Optional[Dict[str, Any]] = None) -> None:
+        """Access epoch: snapshot to host and return; drain overlaps."""
+        self.join()
+        host = self._snapshot(tree)  # device -> host pull (origin-side cost)
+
+        def _run():
+            self._drain(host, step, extra or {})
+
+        if self.cfg.async_drain:
+            self._drainer = threading.Thread(target=_run, name="ckpt-drainer")
+            self._drainer.start()
+        else:
+            _run()
+
+    def join(self) -> None:
+        if self._drainer is not None:
+            self._drainer.join()
+            self._drainer = None
+
+    # ------------------------------------------------------------------
+    def _snapshot(self, tree: Any) -> Dict[str, np.ndarray]:
+        flat = _flatten(jax.device_get(tree))
+        return flat
+
+    def _drain(self, flat: Dict[str, np.ndarray], step: int,
+               extra: Dict[str, Any]) -> float:
+        t0 = time.monotonic()
+        seq = self._seq + 1
+        slot = self._slot_dir(seq)
+        shutil.rmtree(slot, ignore_errors=True)
+        os.makedirs(slot, exist_ok=True)
+        modeled = 0.0
+        entries = {}
+        total_bytes = 0
+        for key, arr in flat.items():
+            fn = key.replace("/", "__") + ".npy"
+            path = os.path.join(slot, fn)
+            data = arr.tobytes()
+            with open(path, "wb") as f:
+                np.save(f, arr)
+                if self.cfg.keep_fsync:
+                    f.flush()
+                    os.fsync(f.fileno())
+            entries[key] = {"file": fn, "crc": zlib.crc32(data) & 0xFFFFFFFF,
+                            "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            modeled += self.spec.write_cost(len(data))
+            total_bytes += len(data)
+        modeled += self.spec.flush_cost(total_bytes)
+        # manifest commit AFTER payload is durable (crash-consistent ordering)
+        manifest = {"seq": seq, "step": step, "entries": entries, "extra": extra}
+        mp = self._manifest_path(slot)
+        with open(mp + ".tmp", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(mp + ".tmp", mp)
+        self._seq = seq
+        self.cost.add("persist", modeled)
+        self._last_persist_wall = time.monotonic() - t0
+        self._last_persist_model = modeled
+        return modeled
+
+    # ------------------------------------------------------------------
+    def _read_manifest(self, slot: str) -> Optional[Dict[str, Any]]:
+        mp = self._manifest_path(slot)
+        if not os.path.exists(mp):
+            return None
+        try:
+            with open(mp) as f:
+                return json.load(f)
+        except (json.JSONDecodeError, OSError):
+            return None
+
+    def _latest_valid(self) -> Tuple[Optional[int], Optional[str]]:
+        best_seq, best_slot = None, None
+        for i in (0, 1):
+            slot = os.path.join(self.cfg.directory, f"slot{i}")
+            m = self._read_manifest(slot)
+            if m is None:
+                continue
+            ok = all(
+                os.path.exists(os.path.join(slot, e["file"]))
+                for e in m["entries"].values()
+            )
+            if ok and (best_seq is None or m["seq"] > best_seq):
+                best_seq, best_slot = m["seq"], slot
+        return best_seq, best_slot
+
+    def _try_load_slot(self, slot: str, flat_keys) -> Optional[Tuple[Dict, Dict]]:
+        m = self._read_manifest(slot)
+        if m is None:
+            return None
+        restored = {}
+        for key in flat_keys:
+            e = m["entries"].get(key)
+            if e is None:
+                return None  # structure mismatch
+            try:
+                arr = np.load(os.path.join(slot, e["file"]))
+            except (ValueError, OSError):
+                return None  # torn/corrupt file (even the npy header)
+            if (zlib.crc32(arr.tobytes()) & 0xFFFFFFFF) != e["crc"]:
+                return None  # torn payload detected by checksum
+            restored[key] = arr
+        return restored, m
+
+    def restore(self, like: Any, shardings: Optional[Any] = None
+                ) -> Optional[Tuple[Any, int, Dict[str, Any]]]:
+        """Restore the newest FULLY-VALID checkpoint into the structure of
+        ``like`` (a pytree of arrays or ShapeDtypeStructs).  Slots are
+        tried newest-first; any torn/corrupt payload (CRC or even a
+        mangled npy header) makes the whole slot invalid and the previous
+        slot wins — the double-buffer guarantee.  With ``shardings`` the
+        arrays are placed onto the *current* mesh — elastic restore onto
+        a different device count."""
+        self.join()
+        flat_keys = list(_flatten(like).keys())
+        candidates = []
+        for i in (0, 1):
+            slot = os.path.join(self.cfg.directory, f"slot{i}")
+            m = self._read_manifest(slot)
+            if m is not None:
+                candidates.append((m["seq"], slot))
+        for _, slot in sorted(candidates, reverse=True):
+            got = self._try_load_slot(slot, flat_keys)
+            if got is None:
+                continue
+            restored, m = got
+            _, treedef = jax.tree_util.tree_flatten(like)
+            tree = jax.tree_util.tree_unflatten(
+                treedef, [restored[k] for k in flat_keys])
+            if shardings is not None:
+                tree = jax.tree.map(lambda a, s: jax.device_put(a, s),
+                                    tree, shardings)
+            return tree, m["step"], m.get("extra", {})
+        return None
+
+    # ------------------------------------------------------------------
+    @property
+    def last_persist_seconds(self) -> Tuple[float, float]:
+        """(wall, modeled) duration of the last drain."""
+        return self._last_persist_wall, self._last_persist_model

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the solver's compute hot-spots.
+
+- ``stencil7.py`` — 7-point Poisson SpMV (the PCG/HPCG hot loop):
+  z-slab VMEM tiling with single-plane halo blocks.
+- ``fused_cg.py`` — fused PCG vector update (Alg. 1 lines 4-7a) with an
+  fp32 dual-reduction: one HBM pass instead of four ops.
+- ``ops.py`` — jit'd dispatch (pallas on TPU / interpret / jnp ref).
+- ``ref.py`` — pure-jnp oracles; every kernel is swept against them over
+  shapes/dtypes in ``tests/test_kernels.py``.
+
+The NN side intentionally has no custom kernels: the paper's contribution
+is solver-level; transformer blocks rely on XLA (chunked attention and
+SSD are structured for fusion instead — see DESIGN.md §2).
+"""
+from repro.kernels import ops, ref  # noqa: F401

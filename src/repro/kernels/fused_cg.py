@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: fused PCG vector update (lines 4-7a of Algorithm 1).
+
+CG's per-iteration vector work is HBM-bandwidth-bound (arithmetic
+intensity < 1 flop/byte).  Executed as separate XLA ops, the update
+reads/writes each of ``x, r, z`` plus ``p, ap`` several times:
+
+    x' = x + a p; r' = r - a ap; z' = M^{-1} r'; rz' = <r', z'>
+    (>= 9n reads + 3n writes as 4 standalone ops)
+
+This kernel performs all four in **one pass over VMEM tiles**: 5n reads +
+3n writes (the theoretical minimum with a fused reduction), a ~1.5x cut
+of HBM traffic on the dominant term of the solver roofline.  The dual
+reduction is accumulated per-tile into a (grid,)-shaped partials vector
+(hierarchical reduction: VREG -> VMEM partial -> tiny jnp.sum epilogue).
+
+Layout: inputs are viewed as ``(m, 128)`` — lane-aligned for the VPU;
+``bm`` rows per tile (sublane-multiple).  ``inv_diag`` supports any
+diagonal preconditioner (Jacobi); pass ones for plain CG.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _fused_cg_kernel(x_ref, r_ref, p_ref, ap_ref, inv_ref, alpha_ref,
+                     xo_ref, ro_ref, zo_ref, partial_ref):
+    alpha = alpha_ref[0]
+    p = p_ref[...]
+    ap = ap_ref[...]
+    xn = x_ref[...] + alpha * p
+    rn = r_ref[...] - alpha * ap
+    zn = rn * inv_ref[...]
+    xo_ref[...] = xn
+    ro_ref[...] = rn
+    zo_ref[...] = zn
+    # fp32 accumulation for the dual reduction (bf16 partial sums of
+    # near-cancelling terms would destroy CG's beta)
+    partial_ref[0, 0] = jnp.sum(rn.astype(jnp.float32) * zn.astype(jnp.float32))
+
+
+def fused_cg_update_pallas(
+    x: jax.Array,
+    r: jax.Array,
+    p: jax.Array,
+    ap: jax.Array,
+    alpha: jax.Array,
+    inv_diag: jax.Array,
+    bm: int = 256,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Single-pass fused CG update; returns (x', r', z', rz')."""
+    n = x.shape[0]
+    if n % LANES != 0:
+        raise ValueError(f"n={n} must be a multiple of {LANES}")
+    m = n // LANES
+    bm = min(bm, m)
+    if m % bm != 0:
+        raise ValueError(f"rows m={m} not divisible by block rows bm={bm}")
+    grid = m // bm
+
+    def as2d(v):
+        return v.reshape(m, LANES)
+
+    vec_spec = pl.BlockSpec((bm, LANES), lambda i: (i, 0))
+    alpha_arr = jnp.broadcast_to(jnp.asarray(alpha, x.dtype), (1,))
+
+    xo, ro, zo, partials = pl.pallas_call(
+        _fused_cg_kernel,
+        grid=(grid,),
+        in_specs=[
+            vec_spec, vec_spec, vec_spec, vec_spec, vec_spec,
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            vec_spec, vec_spec, vec_spec,
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, LANES), x.dtype),
+            jax.ShapeDtypeStruct((m, LANES), x.dtype),
+            jax.ShapeDtypeStruct((m, LANES), x.dtype),
+            jax.ShapeDtypeStruct((grid, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(as2d(x), as2d(r), as2d(p), as2d(ap), as2d(inv_diag), alpha_arr)
+
+    rz = jnp.sum(partials).astype(x.dtype)  # tiny fp32 epilogue
+    return xo.reshape(n), ro.reshape(n), zo.reshape(n), rz

@@ -1,0 +1,60 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the Pallas path compiles natively; on CPU (this container) the
+kernels run under ``interpret=True`` (the kernel body executed step-by-
+step for correctness) or fall back to the jnp reference for speed.
+``mode`` resolution:
+
+- ``"auto"``    — pallas on TPU, reference on CPU (fast tests/benches)
+- ``"pallas"``  — force the kernel (interpret=True off-TPU): oracle tests
+- ``"ref"``     — force the jnp reference
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.fused_cg import fused_cg_update_pallas
+from repro.kernels.stencil7 import stencil7_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(mode: str) -> str:
+    if mode == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return mode
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bz"))
+def stencil7(u: jax.Array, mode: str = "auto", bz: int = 8) -> jax.Array:
+    """7-point stencil SpMV; drop-in for :func:`repro.kernels.ref.stencil7_ref`."""
+    m = _resolve(mode)
+    if m == "ref":
+        return _ref.stencil7_ref(u)
+    return stencil7_pallas(u, bz=bz, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bm"))
+def fused_cg_update(
+    x: jax.Array,
+    r: jax.Array,
+    p: jax.Array,
+    ap: jax.Array,
+    alpha: jax.Array,
+    inv_diag: jax.Array,
+    mode: str = "auto",
+    bm: int = 256,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused PCG vector update; drop-in for the 4-op jnp sequence."""
+    m = _resolve(mode)
+    if m == "ref":
+        return _ref.fused_cg_update_ref(x, r, p, ap, alpha, inv_diag)
+    return fused_cg_update_pallas(x, r, p, ap, alpha, inv_diag, bm=bm,
+                                  interpret=not _on_tpu())

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for tests)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def stencil7_ref(u: jax.Array) -> jax.Array:
+    """7-point Poisson stencil, homogeneous Dirichlet BC. u: (nz, ny, nx)."""
+    p = jnp.pad(u, 1)
+    return (
+        6.0 * u
+        - p[:-2, 1:-1, 1:-1]
+        - p[2:, 1:-1, 1:-1]
+        - p[1:-1, :-2, 1:-1]
+        - p[1:-1, 2:, 1:-1]
+        - p[1:-1, 1:-1, :-2]
+        - p[1:-1, 1:-1, 2:]
+    )
+
+
+def fused_cg_update_ref(
+    x: jax.Array,
+    r: jax.Array,
+    p: jax.Array,
+    ap: jax.Array,
+    alpha: jax.Array,
+    inv_diag: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused PCG lines 4-7a: x', r', z' = P r', and rz' = <r', z'>.
+
+    Reference semantics for the single-pass TPU kernel: one read of each
+    input, one write of each output, reduction produced on the fly.
+    """
+    xn = x + alpha * p
+    rn = r - alpha * ap
+    zn = rn * inv_diag
+    # fp32 accumulation (the kernel contract): bf16 sums of near-
+    # cancelling r.z terms would destroy CG's beta
+    rz = jnp.sum(rn.astype(jnp.float32) * zn.astype(jnp.float32)).astype(x.dtype)
+    return xn, rn, zn, rz

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state.  Single-pod:
+(data=16, model=16) = 256 chips (one v5e pod); multi-pod adds a leading
+pod axis: (pod=2, data=16, model=16) = 512 chips across the DCI.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_mesh_for(devices: int, model_parallel: int = None) -> jax.sharding.Mesh:
+    """Elastic mesh for whatever device count is actually available."""
+    model = model_parallel or min(devices, 16)
+    while devices % model:
+        model -= 1
+    data = devices // model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+# Hardware constants for the roofline (TPU v5e per chip).
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW_PER_LINK = 50e9        # B/s per link direction

@@ -1,0 +1,93 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run JSONL results.
+
+TPU-corrected collective estimate (documented in EXPERIMENTS.md §Roofline):
+the CPU backend promotes bf16 program values to f32 (2x byte inflation on
+every collective of a bf16 model) and lacks the all-reduce->reduce-scatter
+rewrite the TPU pipeline applies to the activation-psum + slice pattern.
+We report RAW (what the compiled CPU HLO does) and a CORRECTED estimate:
+
+    corrected = 0.5 * (AG + AA + CP) + 0.25 * AR     [bf16 models]
+    (AR factor: 0.5 dtype x 0.5 scatter-rewrite)
+
+f32 programs (the PCG solver) get no correction.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+def load(path: str) -> Dict:
+    rows = {}
+    for line in open(path):
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if r.get("ok"):
+            rows[(r["arch"], r["shape"], r["mesh"])] = r
+    return rows
+
+
+def corrected_coll_bytes(r: dict, bf16: bool = True) -> Optional[float]:
+    kinds = r.get("coll_by_kind")
+    if kinds is None:
+        return None
+    if not bf16:
+        return float(sum(kinds.values()))
+    ar = kinds.get("all-reduce", 0)
+    rest = sum(v for k, v in kinds.items() if k != "all-reduce")
+    return 0.5 * rest + 0.25 * ar
+
+
+def table(rows: Dict, mesh: str = "16x16", corrected: bool = True) -> str:
+    out = []
+    hdr = ("| arch | shape | peak GiB/dev | fits | t_comp ms | t_mem ms | "
+           "t_coll ms | bottleneck | useful-flop | roofline frac |")
+    out.append(hdr)
+    out.append("|" + "---|" * 10)
+    for (a, s, m), r in sorted(rows.items()):
+        if m != mesh or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        bf16 = a != "poisson_pcg"
+        coll = corrected_coll_bytes(r, bf16) if corrected else rf["coll_bytes_per_chip"]
+        hbm = rf["hbm_bytes_per_chip"] * (0.5 if (corrected and bf16) else 1.0)
+        tc = rf["flops_per_chip"] / PEAK_FLOPS_BF16
+        tm = hbm / HBM_BW
+        tx = (coll or 0) / ICI_BW_PER_LINK
+        terms = {"compute": tc, "memory": tm, "collective": tx}
+        bneck = max(terms, key=terms.get)
+        peak = r["memory"].get("peak_bytes", 0)
+        fits = "Y" if peak <= HBM_PER_CHIP else "n"
+        mf = r.get("model_flops_per_chip") or 0
+        uf = r.get("useful_flop_ratio")
+        t_useful = mf / PEAK_FLOPS_BF16
+        frac = t_useful / max(tc, tm, tx) if max(tc, tm, tx) > 0 else 0
+        out.append(
+            f"| {a} | {s} | {peak/2**30:.2f} | {fits} | {tc*1e3:.1f} | "
+            f"{tm*1e3:.1f} | {tx*1e3:.1f} | {bneck} | "
+            f"{uf:.2f} | {frac:.3f} |" if uf is not None else
+            f"| {a} | {s} | {peak/2**30:.2f} | {fits} | - | - | - | - | - | - |")
+    return "\n".join(out)
+
+
+def multipod_table(rows: Dict) -> str:
+    out = ["| arch | shape | mesh | peak GiB/dev | compile s |",
+           "|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(rows.items()):
+        if m != "2x16x16":
+            continue
+        peak = r["memory"].get("peak_bytes", 0)
+        out.append(f"| {a} | {s} | {m} | {peak/2**30:.2f} | {r['compile_s']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl")
+    print(table(rows))

@@ -1,0 +1,55 @@
+"""Production serving driver: batched prefill + decode for any arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3_12b --smoke \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import set_rules
+from repro.launch.mesh import make_mesh_for
+from repro.models import registry as R
+from repro.serving.engine import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=R.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = R.get_config(args.arch, smoke=args.smoke)
+    ndev = len(jax.devices())
+    if ndev > 1:
+        set_rules(make_mesh_for(ndev))
+    params, _ = R.init_params(cfg, jax.random.PRNGKey(0))
+
+    def prefill(p, t, c):
+        inputs = {"tokens": t}
+        if cfg.family == "encdec":
+            inputs["frames"] = jnp.zeros((t.shape[0], cfg.enc_seq, cfg.d_model), cfg.cdt)
+        if cfg.frontend == "vision":
+            raise SystemExit("vision serving takes patch embeddings; see examples/")
+        return R.make_prefill(cfg)(p, inputs, c)
+
+    eng = ServeEngine(prefill_fn=prefill, decode_fn=R.make_decode(cfg),
+                      cache_init=lambda b, s: R.init_caches(cfg, b, s)[0])
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0, cfg.vocab)
+    t0 = time.perf_counter()
+    out = eng.generate(params, prompt, steps=args.gen)
+    wall = time.perf_counter() - t0
+    print(f"{cfg.name}: {out.shape} tokens in {wall:.2f}s "
+          f"({args.batch*args.gen/wall:.1f} tok/s incl. compile)")
+
+
+if __name__ == "__main__":
+    main()

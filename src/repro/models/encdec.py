@@ -1,0 +1,193 @@
+"""Encoder-decoder family (whisper-small backbone).
+
+The conv/log-mel audio frontend is a STUB per the assignment:
+``input_specs()`` supplies precomputed frame embeddings ``(B, enc_seq, d)``.
+The encoder is a bidirectional transformer; the decoder adds causal
+self-attention (+KV cache) and cross-attention to the encoder output
+(cross K/V computed once at prefill and cached).
+
+Whisper uses learned absolute positions (``use_rope=False``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.transformer import _stack_init
+
+Params = Dict[str, Any]
+
+
+def _init_enc_layer(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 2)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = L.init_rmsnorm(cfg.d_model, cfg.pdt)
+    p["attn"], s["attn"] = L.init_attention(ks[0], cfg)
+    p["ln2"], s["ln2"] = L.init_rmsnorm(cfg.d_model, cfg.pdt)
+    p["mlp"], s["mlp"] = L.init_mlp(ks[1], cfg)
+    return p, s
+
+
+def _init_dec_layer(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = L.init_rmsnorm(cfg.d_model, cfg.pdt)
+    p["attn"], s["attn"] = L.init_attention(ks[0], cfg)
+    p["ln_x"], s["ln_x"] = L.init_rmsnorm(cfg.d_model, cfg.pdt)
+    p["xattn"], s["xattn"] = L.init_attention(ks[1], cfg)
+    p["ln2"], s["ln2"] = L.init_rmsnorm(cfg.d_model, cfg.pdt)
+    p["mlp"], s["mlp"] = L.init_mlp(ks[2], cfg)
+    return p, s
+
+
+def init_encdec(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 8)
+    params: Params = {}
+    specs: Params = {}
+    params["embed"] = L._dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), cfg.pdt)
+    specs["embed"] = ("vocab", "fsdp")
+    params["enc_pos"] = L._dense_init(ks[1], (cfg.enc_seq, cfg.d_model), cfg.pdt)
+    specs["enc_pos"] = (None, "fsdp")
+    params["dec_pos"] = L._dense_init(ks[2], (max(cfg.max_pos, 1), cfg.d_model), cfg.pdt)
+    specs["dec_pos"] = (None, "fsdp")
+    params["enc"], specs["enc"] = _stack_init(
+        lambda k: _init_enc_layer(k, cfg), ks[3], cfg.enc_layers)
+    params["dec"], specs["dec"] = _stack_init(
+        lambda k: _init_dec_layer(k, cfg), ks[4], cfg.n_layers)
+    params["enc_norm"], specs["enc_norm"] = L.init_rmsnorm(cfg.d_model, cfg.pdt)
+    params["final_norm"], specs["final_norm"] = L.init_rmsnorm(cfg.d_model, cfg.pdt)
+    # whisper ties the unembedding to the token embedding
+    return params, specs
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype
+                      ) -> Tuple[Params, Params]:
+    kv = lambda s_len: {
+        "k": jnp.zeros((batch, s_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, s_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+    kv_spec = {"k": ("batch", "kv_seq", None, None), "v": ("batch", "kv_seq", None, None)}
+    stack = lambda c: jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), c)
+    caches = {"self": stack(kv(max_seq)), "cross": stack(kv(cfg.enc_seq))}
+    cspecs = {
+        "self": jax.tree.map(lambda sp: (None,) + tuple(sp), kv_spec,
+                             is_leaf=lambda x: isinstance(x, tuple)),
+        "cross": jax.tree.map(lambda sp: (None,) + tuple(sp), kv_spec,
+                              is_leaf=lambda x: isinstance(x, tuple)),
+    }
+    return caches, cspecs
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig,
+           remat: bool = False) -> jax.Array:
+    """frames: (B, enc_seq, d) precomputed embeddings (stub frontend)."""
+    cdt = cfg.cdt
+    x = frames.astype(cdt) + params["enc_pos"].astype(cdt)[None]
+    x = shard(x, "batch", "seq", None)
+
+    def body(x, lp):
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        mix, _ = L.attention(lp["attn"], h, cfg, causal=False)
+        x = x + mix
+        h2 = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(lp["mlp"], h2, cfg)
+        return shard(x, "batch", "seq", None), None
+
+    b = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable
+                       ) if remat else body
+    x, _ = jax.lax.scan(b, x, params["enc"], unroll=cfg.unroll_groups)
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode(
+    params: Params,
+    tokens: jax.Array,                 # (B, S)
+    enc_out: Optional[jax.Array],      # (B, enc_seq, d); None if cross cached
+    cfg: ModelConfig,
+    caches: Optional[Params] = None,
+    cache_index: Optional[jax.Array] = None,
+    remat: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    cdt = cfg.cdt
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    start = jnp.zeros((), jnp.int32) if cache_index is None else cache_index
+    pe = jax.lax.dynamic_slice_in_dim(params["dec_pos"], start, s, 0)
+    x = x + pe.astype(cdt)[None]
+    x = shard(x, "batch", "seq", None)
+
+    use_cached_cross = caches is not None and enc_out is None
+
+    def body(x, xs):
+        lp, lc = xs if caches is not None else (xs, None)
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        mix, nself = L.attention(lp["attn"], h, cfg,
+                                 cache=None if lc is None else lc["self"],
+                                 cache_index=cache_index)
+        x = x + mix
+        hx = L.rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+        if use_cached_cross:
+            # cross K/V already cached at prefill: score against them
+            mixx, _ = _cross_from_cache(lp["xattn"], hx, lc["cross"], cfg)
+            ncross = lc["cross"]
+        else:
+            mixx, ncross_kv = L.attention(lp["xattn"], hx, cfg, kv_source=enc_out,
+                                          cache=None, causal=False)
+            # cache cross K/V for subsequent decode steps
+            if lc is not None:
+                k = jnp.einsum("bsd,dhk->bshk", enc_out.astype(cdt),
+                               lp["xattn"]["wk"].astype(cdt))
+                v = jnp.einsum("bsd,dhk->bshk", enc_out.astype(cdt),
+                               lp["xattn"]["wv"].astype(cdt))
+                ncross = {"k": k.astype(lc["cross"]["k"].dtype),
+                          "v": v.astype(lc["cross"]["v"].dtype)}
+            else:
+                ncross = None
+        x = x + mixx
+        h2 = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(lp["mlp"], h2, cfg)
+        x = shard(x, "batch", "seq", None)
+        if lc is None:
+            return x, None
+        return x, {"self": nself, "cross": ncross}
+
+    if caches is None:
+        bfn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable
+                             ) if remat else body
+        x, _ = jax.lax.scan(bfn, x, params["dec"], unroll=cfg.unroll_groups)
+        new_caches = None
+    else:
+        x, new_caches = jax.lax.scan(body, x, (params["dec"], caches),
+                                     unroll=cfg.unroll_groups)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cdt))
+    logits = shard(logits, "batch", None, "vocab")
+    logits = logits.astype(jnp.dtype(cfg.logit_dtype))
+    if cfg.padded_vocab != cfg.vocab:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+    return logits, new_caches
+
+
+def _cross_from_cache(pa: Params, hx: jax.Array, cross: Params, cfg: ModelConfig):
+    """Cross-attention against cached encoder K/V (decode steps)."""
+    import math
+    b, s, _ = hx.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kh
+    cdt = cfg.cdt
+    q = jnp.einsum("bsd,dhk->bshk", hx, pa["wq"].astype(cdt))
+    kf = jnp.repeat(cross["k"].astype(cdt), g, axis=2)
+    vf = jnp.repeat(cross["v"].astype(cdt), g, axis=2)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, kf,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    pr = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    out = jnp.einsum("bhqs,bshd->bqhd", pr, vf)
+    y = jnp.einsum("bshk,hkd->bsd", out, pa["wo"].astype(cdt))
+    return y, None

@@ -1,0 +1,392 @@
+"""Pure-JAX neural building blocks (no flax in this environment).
+
+Conventions
+-----------
+- Parameters are nested dicts of arrays; every ``init_*`` returns
+  ``(params, specs)`` where ``specs`` mirrors the tree with tuples of
+  *logical* axis names (see :mod:`repro.distributed.sharding`).
+- Param storage dims use the ``fsdp`` logical axis for ZeRO-3 sharding;
+  tensor-parallel dims use ``heads`` / ``mlp`` / ``vocab`` / ``experts``.
+- Compute runs in ``cfg.cdt`` (bf16) with fp32 accumulation where it
+  matters (attention softmax, reductions, logits).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+
+# ----------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------
+def _dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(fan, 1))
+    return jax.random.normal(key, shape, dtype) * jnp.asarray(scale, dtype)
+
+
+def init_rmsnorm(d: int, dtype) -> Tuple[Params, Params]:
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)}
+
+
+def use_param(param: jax.Array, cfg: ModelConfig, *logical) -> jax.Array:
+    """Bring a ZeRO-3-sharded parameter to compute dtype at point of use.
+
+    With ``cfg.bf16_gather`` the bf16 cast is pinned BEFORE the FSDP
+    all-gather (the constraint drops the fsdp axis on a bf16 value), so
+    the gather moves half the bytes; the gradient transposes to a bf16
+    reduce-scatter.  ``logical`` is the param's spec with fsdp removed.
+    """
+    w = param.astype(cfg.cdt)
+    if cfg.bf16_gather:
+        w = shard(w, *logical)
+    return w
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# rotary embeddings (RoPE + M-RoPE)
+# ----------------------------------------------------------------------
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): 3 position streams (t, h, w) rotate
+    disjoint sections of the frequency spectrum.
+
+    x: (B, S, H, hd); positions3: (3, B, S).  For text-only inputs the
+    three streams are identical and M-RoPE reduces to RoPE.
+    """
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)  # (hd/2,)
+    sec = jnp.cumsum(jnp.asarray((0,) + tuple(sections)))
+    idx = jnp.arange(hd // 2)
+    which = jnp.clip(jnp.searchsorted(sec[1:], idx, side="right"), 0, 2)  # 0/1/2
+    ang_all = positions3[..., None].astype(jnp.float32) * freqs  # (3, B, S, hd/2)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 0, -1), which[None, None, :, None], axis=-1
+    )[..., 0]
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# attention (GQA, chunked-causal / banded-local / decode)
+# ----------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": _dense_init(ks[0], (d, h, hd), cfg.pdt),
+        "wk": _dense_init(ks[1], (d, k, hd), cfg.pdt),
+        "wv": _dense_init(ks[2], (d, k, hd), cfg.pdt),
+        "wo": _dense_init(ks[3], (h, hd, d), cfg.pdt, fan_in=h * hd),
+    }
+    specs = {
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", "kv_heads", None),
+        "wv": ("fsdp", "kv_heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+    return params, specs
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: int, chunk_q: int,
+                  q_offset=0) -> jax.Array:
+    """Memory-efficient attention: scan over q chunks against full K/V.
+
+    Flat-head layout: q (B, S, H, hd); k/v (B, Skv, H, hd) — K/V already
+    repeated to full heads so everything shards over the "heads" axis
+    (kv_heads alone is rarely divisible by the TP degree).
+    O(S * chunk) live memory instead of O(S^2).  fp32 softmax.
+    """
+    b, s, h, hd = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    cq = min(chunk_q, s)
+    while s % cq:       # odd lengths (tests): shrink to a divisor
+        cq -= 1
+    nq = s // cq
+
+    kv_pos = jnp.arange(skv)
+
+    def one_chunk(i, qc):
+        # qc: (B, cq, H, hd)
+        scores = jnp.einsum("bqhd,bshd->bhqs", qc, k,
+                            preferred_element_type=jnp.float32) * scale
+        q_pos = q_offset + i * cq + jnp.arange(cq)
+        m = jnp.ones((cq, skv), bool)
+        if causal:
+            m &= kv_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            m &= kv_pos[None, :] > q_pos[:, None] - window
+        scores = jnp.where(m[None, None], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqs,bshd->bqhd", p, v)
+
+    if nq == 1:
+        return one_chunk(0, q)
+
+    qs = q.reshape(b, nq, cq, h, hd)
+
+    # checkpoint the chunk: without it the scan SAVES each chunk's softmax
+    # for backward — i.e. the full S x S attention matrix, defeating the
+    # chunking. Recompute-in-backward keeps live memory O(chunk).
+    ck = jax.checkpoint(one_chunk, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(_, xs):
+        i, qc = xs
+        return None, ck(i, qc)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(nq), jnp.moveaxis(qs, 1, 0)))
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
+
+
+def _sdpa_banded(q, k, v, *, window: int, chunk: int) -> jax.Array:
+    """Sliding-window attention with *static banded* kv access: each q
+    chunk gathers only the ``band`` kv chunks that intersect its window —
+    true sub-quadratic compute (used for "local" layers; starcoder2,
+    gemma3 local, recurrentgemma local)."""
+    b, s, h, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    c = min(chunk, s)
+    while s % c:        # odd lengths (tests): shrink to a divisor
+        c -= 1
+    n = s // c
+    band = min(n, window // c + 2)
+    qs = q.reshape(b, n, c, h, hd)
+    ks_ = k.reshape(b, n, c, h, hd)
+    vs = v.reshape(b, n, c, h, hd)
+
+    def one(i, qc):
+        # gather kv chunks [i-band+1 .. i] (clamped; masked below)
+        offs = i - jnp.arange(band - 1, -1, -1)  # ascending chunk ids
+        offs_c = jnp.clip(offs, 0, n - 1)
+        kg = jnp.take(ks_, offs_c, axis=1).reshape(b, band * c, h, hd)
+        vg = jnp.take(vs, offs_c, axis=1).reshape(b, band * c, h, hd)
+        scores = jnp.einsum("bqhd,bshd->bhqs", qc, kg,
+                            preferred_element_type=jnp.float32) * scale
+        q_pos = i * c + jnp.arange(c)
+        kv_pos = (offs_c[:, None] * c + jnp.arange(c)[None, :]).reshape(-1)
+        valid_chunk = jnp.repeat(offs >= 0, c)
+        m = (kv_pos[None, :] <= q_pos[:, None]) \
+            & (kv_pos[None, :] > q_pos[:, None] - window) \
+            & valid_chunk[None, :]
+        scores = jnp.where(m[None, None], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1).astype(vg.dtype)
+        return jnp.einsum("bhqs,bshd->bqhd", p, vg)
+
+    if n == 1:
+        return one(jnp.asarray(0), q)
+
+    # checkpoint: see _sdpa_chunked — avoid saving per-chunk softmax
+    ck = jax.checkpoint(one, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(_, xs):
+        i, qc = xs
+        return None, ck(i, qc)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(n), jnp.moveaxis(qs, 1, 0)))
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
+
+
+def attention(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    kind: str = "global",          # "global" | "local"
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    kv_source: Optional[jax.Array] = None,   # cross-attention (enc-dec)
+    causal: bool = True,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """GQA attention. Returns (output, updated_cache).
+
+    Modes:
+      - train/prefill: ``cache is None`` -> chunked causal / banded local.
+        (prefill-with-cache: pass a zeroed cache to also return K/V.)
+      - decode: ``cache`` + ``cache_index`` -> attend over the cache.
+        A cache with a ``pos`` entry is a *ring buffer* (sliding-window
+        layers keep only ``window`` slots -> O(window) decode memory).
+      - cross: ``kv_source`` given -> no causal mask, no cache update
+        (K/V computed from the encoder output).
+    """
+    b, s, d = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kh
+    cdt = cfg.cdt
+
+    decode_step = cache is not None and s == 1
+    q = jnp.einsum("bsd,dhk->bshk", x, use_param(p["wq"], cfg, None, "heads", None))
+    kv_in = x if kv_source is None else kv_source
+    k = jnp.einsum("bsd,dhk->bshk", kv_in, use_param(p["wk"], cfg, None, "kv_heads", None))
+    v = jnp.einsum("bsd,dhk->bshk", kv_in, use_param(p["wv"], cfg, None, "kv_heads", None))
+    if not decode_step:
+        # train/prefill: long-seq activations shard over batch + heads.
+        # decode must NOT pin shardings: the single-token q is tiny and
+        # the cache is sequence-sharded — forcing a head layout would
+        # reshard the whole cache every generated token.
+        q = shard(q, "batch", None, "heads", None)
+        k = shard(k, "batch", None, "kv_heads", None)
+        v = shard(v, "batch", None, "kv_heads", None)
+
+    def full_heads(t):
+        # GQA K/V repeated to all H query heads so attention shards over
+        # "heads" (kv_heads alone rarely divides the TP degree; replicated
+        # attention blows both memory and per-chip FLOPs).  The repeat is
+        # a broadcast XLA folds into the einsums.
+        rep = jnp.repeat(t, g, axis=2)
+        return rep if decode_step else shard(rep, "batch", None, "heads", None)
+
+    if kv_source is None and cfg.use_rope:
+        if positions is None:
+            pos = jnp.arange(s)[None] if cache_index is None else (
+                cache_index + jnp.arange(s)[None])
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+        elif cfg.mrope:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        ring = "pos" in cache
+        cdtc = cache["k"].dtype
+        if ring:
+            w = cache["k"].shape[1]
+            if s == 1:
+                slot = jnp.mod(cache_index, w)
+                ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cdtc), slot, 1)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cdtc), slot, 1)
+                cpos = jax.lax.dynamic_update_slice_in_dim(
+                    cache["pos"], cache_index[None].astype(cache["pos"].dtype), slot, 0)
+            else:
+                # prefill into the ring: keep the last `w` positions
+                if s >= w:
+                    shift = (s - w) % w
+                    ck = jnp.roll(k[:, -w:].astype(cdtc), shift, axis=1)
+                    cv = jnp.roll(v[:, -w:].astype(cdtc), shift, axis=1)
+                    cpos = jnp.roll(jnp.arange(s - w, s, dtype=cache["pos"].dtype), shift)
+                else:
+                    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cdtc), 0, 1)
+                    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cdtc), 0, 1)
+                    cpos = cache["pos"].at[:s].set(jnp.arange(s, dtype=cache["pos"].dtype))
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+            kv_pos = cpos[None, :]
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cdtc), cache_index, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cdtc), cache_index, 1)
+            new_cache = {"k": ck, "v": cv}
+            kv_pos = jnp.arange(ck.shape[1])[None, :]
+
+        if s == 1:
+            # decode: attend over the (seq-sharded) cache — the distributed
+            # softmax reductions lower to psums (flash-decode pattern).
+            # GROUPED einsums here: repeating K/V to full heads inserts a
+            # broadcast GSPMD cannot propagate seq-sharding through, which
+            # replicates the whole cache every generated token (§Perf D2).
+            valid = (kv_pos <= cache_index) & (kv_pos >= 0)
+            if kind == "local" and cfg.window > 0:
+                valid &= kv_pos > cache_index - cfg.window
+            qg = q.reshape(b, 1, kh, g, hd)
+            scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, ck.astype(cdt),
+                                preferred_element_type=jnp.float32)
+            scores = scores / math.sqrt(hd)
+            scores = jnp.where(valid[:, None, None, None], scores, -1e30)
+            pr = jax.nn.softmax(scores, axis=-1).astype(cdt)
+            out = jnp.einsum("bkgqs,bskh->bqkgh", pr, cv.astype(cdt))
+            out = out.reshape(b, 1, h, hd)
+            y = jnp.einsum("bshk,hkd->bsd", out, use_param(p["wo"], cfg, "heads", None, None))
+            return shard(y, "batch", "seq", None), new_cache
+
+    # train / prefill path (flat heads, sharded over "heads")
+    kf, vf = full_heads(k), full_heads(v)
+    if kv_source is not None or not causal:
+        out = _sdpa_chunked(q, kf, vf, causal=False, window=0,
+                            chunk_q=cfg.attn_chunk)
+    elif kind == "local" and cfg.window > 0:
+        out = _sdpa_banded(q, kf, vf, window=cfg.window, chunk=cfg.attn_chunk)
+    else:
+        out = _sdpa_chunked(q, kf, vf, causal=True, window=0,
+                            chunk_q=cfg.attn_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out, use_param(p["wo"], cfg, "heads", None, None))
+    return shard(y, "batch", "seq", None), new_cache
+
+
+# ----------------------------------------------------------------------
+# dense MLP
+# ----------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if "gated" in cfg.mlp_act:
+        params = {
+            "w_in": _dense_init(ks[0], (d, f), cfg.pdt),
+            "w_gate": _dense_init(ks[1], (d, f), cfg.pdt),
+            "w_out": _dense_init(ks[2], (f, d), cfg.pdt, fan_in=f),
+        }
+        specs = {"w_in": ("fsdp", "mlp"), "w_gate": ("fsdp", "mlp"),
+                 "w_out": ("mlp", "fsdp")}
+    else:
+        params = {
+            "w_in": _dense_init(ks[0], (d, f), cfg.pdt),
+            "w_out": _dense_init(ks[2], (f, d), cfg.pdt, fan_in=f),
+        }
+        specs = {"w_in": ("fsdp", "mlp"), "w_out": ("mlp", "fsdp")}
+    return params, specs
+
+
+def _act(name: str, h: jax.Array, g: Optional[jax.Array]) -> jax.Array:
+    if name == "silu_gated":
+        return jax.nn.silu(g) * h
+    if name == "gelu_gated":
+        return jax.nn.gelu(g) * h
+    return jax.nn.gelu(h)
+
+
+def mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cdt = cfg.cdt
+    h = jnp.einsum("bsd,df->bsf", x, use_param(p["w_in"], cfg, None, "mlp"))
+    h = shard(h, "batch", None, "mlp")
+    g = None
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, use_param(p["w_gate"], cfg, None, "mlp"))
+        g = shard(g, "batch", None, "mlp")
+    a = _act(cfg.mlp_act, h, g)
+    y = jnp.einsum("bsf,fd->bsd", a, use_param(p["w_out"], cfg, "mlp", None))
+    return shard(y, "batch", "seq", None)

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts layer with expert parallelism (EP) over the "model"
+mesh axis, aligned with tensor parallelism.
+
+Design (DESIGN.md §5): activations enter replicated across "model" (they
+are batch-sharded over ("pod","data")), so each model-rank can compute the
+contribution of *its own* expert shard to *its local* tokens with **zero
+token all-to-all**; partial outputs combine with the same psum the dense
+TP MLP needs.  Dispatch inside a rank is sort-based (no O(T*E*C) one-hot
+dispatch tensors): tokens are ordered by expert id, positioned within
+segment, and gathered into (E_local, capacity, d) blocks.  Over-capacity
+tokens are dropped (standard Switch/GShard semantics, ``capacity_factor``
+controls head-room).
+
+Weights are ZeRO-3 sharded: (E/model, d/data, f) at rest; the d-axis is
+all-gathered just-in-time inside the shard_map body (explicit FSDP; the
+gradient transposes to a reduce-scatter automatically).
+
+Load-balancing: the standard Switch aux loss, returned alongside the
+output.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import current_rules
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, _dense_init
+
+
+def init_moe(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    params = {
+        "router": _dense_init(ks[0], (d, e), jnp.float32),  # fp32 router
+        "w_in": _dense_init(ks[1], (e, d, f), cfg.pdt),
+        "w_out": _dense_init(ks[3], (e, f, d), cfg.pdt, fan_in=f),
+    }
+    specs = {
+        "router": (None, None),
+        "w_in": ("experts", "fsdp", None),
+        "w_out": ("experts", None, "fsdp"),
+    }
+    if "gated" in cfg.mlp_act:
+        params["w_gate"] = _dense_init(ks[2], (e, d, f), cfg.pdt)
+        specs["w_gate"] = ("experts", "fsdp", None)
+    return params, specs
+
+
+def _moe_local(x, router, w_in, w_gate, w_out, *, cfg: ModelConfig,
+               tp_axis: Optional[str], fsdp_axis: Optional[str],
+               batch_axes: Tuple[str, ...]):
+    """Per-device body (inside shard_map). x: (B_loc, S, d)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    tp = jax.lax.axis_size(tp_axis) if tp_axis else 1
+    e_loc = e // tp
+    rank = jax.lax.axis_index(tp_axis) if tp_axis else 0
+    cap = int(math.ceil(t * k / e * cfg.capacity_factor))
+
+    xt = x.reshape(t, d)
+
+    # -------- router (fp32, replicated across model ranks) --------
+    logits = (xt.astype(jnp.float32) @ router).astype(jnp.float32)  # (t, e)
+    top_w, top_e = jax.lax.top_k(logits, k)
+    top_w = jax.nn.softmax(top_w, axis=-1)
+
+    # Switch aux loss: e * sum_e( frac_tokens_e * mean_router_prob_e )
+    probs = jax.nn.softmax(logits, axis=-1)
+    counts = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    frac = counts / (t * k)
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+    # -------- sort-based dispatch --------
+    flat_e = top_e.reshape(-1)                       # (t*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e)                      # stable
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    pos = jnp.arange(t * k) - jnp.searchsorted(se, se, side="left")
+
+    slot = se - rank * e_loc
+    valid = (slot >= 0) & (slot < e_loc) & (pos < cap)
+    dest = jnp.where(valid, slot * cap + pos, e_loc * cap)  # overflow bucket
+    tok_table = jnp.full((e_loc * cap + 1,), t, jnp.int32).at[dest].set(st.astype(jnp.int32))
+    w_table = jnp.zeros((e_loc * cap + 1,), jnp.float32).at[dest].set(sw)
+    tok_table = tok_table[:-1].reshape(e_loc, cap)
+    w_table = w_table[:-1].reshape(e_loc, cap)
+
+    # -------- gather -> expert matmuls -> combine --------
+    cdt = cfg.cdt
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xg = xpad[tok_table].astype(cdt)                 # (e_loc, cap, d)
+
+    def gathered(w):  # JIT FSDP: cast to bf16 BEFORE the all-gather (2x less ICI)
+        if fsdp_axis is None:
+            return w.astype(cdt)
+        return jax.lax.all_gather(w.astype(cdt), fsdp_axis, axis=1, tiled=True)
+
+    h = jnp.einsum("ecd,edf->ecf", xg, gathered(w_in))
+    if w_gate is not None:
+        g = jnp.einsum("ecd,edf->ecf", xg, gathered(w_gate))
+        h = jax.nn.silu(g) * h if cfg.mlp_act == "silu_gated" else jax.nn.gelu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    wo = w_out if fsdp_axis is None else jax.lax.all_gather(w_out, fsdp_axis, axis=2, tiled=True)
+    y = jnp.einsum("ecf,efd->ecd", h, wo.astype(cdt))
+    y = y * w_table[..., None].astype(cdt)
+
+    out = jnp.zeros((t + 1, d), cdt).at[tok_table.reshape(-1)].add(y.reshape(-1, d))[:t]
+    if tp_axis:
+        out = jax.lax.psum(out, tp_axis)             # combine expert shards
+    axes = tuple(a for a in (batch_axes + ((tp_axis,) if tp_axis else ()))
+                 if a is not None)
+    aux = jax.lax.pmean(aux, axes)
+    return out.reshape(b, s, d), aux
+
+
+def moe(p: Params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """MoE block. x: (B, S, d) batch-sharded. Returns (y, aux_loss)."""
+    rules = current_rules()
+    mesh = rules.mesh
+    w_gate = p.get("w_gate")
+    if mesh is None:
+        # single-device path (smoke tests): same math, no collectives
+        out, aux = _moe_local(x, p["router"], p["w_in"], w_gate, p["w_out"],
+                              cfg=cfg, tp_axis=None, fsdp_axis=None, batch_axes=())
+        return out.astype(x.dtype), aux
+
+    tp_axis = rules.physical("experts")
+    fsdp_axis = rules.physical("fsdp")
+    batch_axes = rules.physical("batch")
+    batch_axes = batch_axes if isinstance(batch_axes, tuple) else (
+        (batch_axes,) if batch_axes else ())
+
+    body = partial(_moe_local, cfg=cfg, tp_axis=tp_axis, fsdp_axis=fsdp_axis,
+                   batch_axes=batch_axes)
+    x_spec = P(batch_axes if batch_axes else None, None, None)
+    gate_spec = rules.spec("experts", "fsdp", None) if w_gate is not None else None
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(x_spec, P(None, None), rules.spec("experts", "fsdp", None),
+                  gate_spec, rules.spec("experts", None, "fsdp")),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"], p["w_in"], w_gate, p["w_out"])
+    return out.astype(x.dtype), aux

@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_i x_t + b_i)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates the recurrence with ``associative_scan``
+(log-depth, TPU-friendly); decode carries ``h`` — again, a finite-term
+recurrence whose state is the exact minimal persisted set (DESIGN.md §4).
+
+The full Griffin recurrent *block* is: linear in -> causal conv(4) ->
+RG-LRU, gated by a parallel GeLU branch, then linear out.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, _dense_init
+from repro.models.ssm import _causal_conv
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    params = {
+        "w_gate": _dense_init(ks[0], (d, w), cfg.pdt),
+        "w_lin": _dense_init(ks[1], (d, w), cfg.pdt),
+        "conv": _dense_init(ks[2], (cfg.d_conv, w), cfg.pdt, fan_in=cfg.d_conv),
+        "w_a": _dense_init(ks[3], (w, w), cfg.pdt),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": _dense_init(ks[4], (w, w), cfg.pdt),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # init so a^c in ~(0.9, 0.999): Lambda = softplus^{-1}(-log(a)/c)
+        "lam": jnp.full((w,), -4.0, jnp.float32),
+        "w_out": _dense_init(ks[5], (w, d), cfg.pdt, fan_in=w),
+    }
+    specs = {
+        "w_gate": ("fsdp", "mlp"), "w_lin": ("fsdp", "mlp"),
+        "conv": (None, "mlp"), "w_a": ("fsdp", "mlp"), "b_a": (None,),
+        "w_i": ("fsdp", "mlp"), "b_i": (None,), "lam": (None,),
+        "w_out": ("mlp", "fsdp"),
+    }
+    return params, specs
+
+
+def _rg_lru(x: jax.Array, p: Params, h0: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, w). Returns (h_seq, h_final). fp32 recurrence."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r               # (B,S,w)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    if h0 is not None:
+        # fold the carried state in as a virtual step at t = -1
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0.astype(jnp.float32)[:, None], gated], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block(
+    p: Params,
+    u: jax.Array,
+    cfg: ModelConfig,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, s, d = u.shape
+    cdt = cfg.cdt
+    w = cfg.lru_width or d
+
+    gate = jax.nn.gelu(u @ p["w_gate"].astype(cdt))
+    x = u @ p["w_lin"].astype(cdt)
+    gate = shard(gate, "batch", None, "mlp")
+    x = shard(x, "batch", None, "mlp")
+
+    if cache is not None and s == 1:
+        # decode: conv tail + single recurrence step
+        cx = jnp.concatenate([cache["conv"], x], axis=1)
+        kw = cfg.d_conv
+        xc = jax.nn.silu(sum(cx[:, -kw + i] * p["conv"][i].astype(cdt)
+                             for i in range(kw)))            # (B, w)
+        xf = xc.astype(jnp.float32)
+        r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+        i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+        a = jnp.exp(-_C * jax.nn.softplus(p["lam"]) * r)
+        h = a * cache["h"].astype(jnp.float32) + \
+            jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+        h = h.astype(cdt)
+        y = (h * gate[:, 0])[:, None]                        # (B,1,w)
+        new_cache = {"h": h, "conv": cx[:, 1:]}
+    else:
+        tail = cache["conv"] if cache is not None else None
+        xc, ntail = _causal_conv(x, p["conv"].astype(cdt), tail)
+        h0 = cache["h"] if cache is not None else None
+        h, h_final = _rg_lru(xc, p, h0)
+        y = h * gate
+        new_cache = None
+        if cache is not None:
+            new_cache = {"h": h_final.astype(cdt), "conv": ntail}
+
+    out = y @ p["w_out"].astype(cdt)
+    return shard(out, "batch", "seq", None), new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), dtype),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, w), dtype),
+    }

@@ -1,0 +1,270 @@
+"""Architecture registry: config discovery + step-function builders.
+
+Every assigned architecture is a module in :mod:`repro.configs` exposing
+``CONFIG`` (the exact published shape) and ``SMOKE`` (a reduced same-family
+config for CPU tests).  This registry builds, per (arch, shape) cell, the
+jit-able step function plus ``ShapeDtypeStruct`` input stand-ins and
+shardings — everything the multi-pod dry-run and the roofline need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import AxisRules, current_rules
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_init_specs
+from repro.training.train_step import TrainConfig, make_train_step
+
+ARCH_IDS = [
+    "moonshot_v1_16b_a3b",
+    "dbrx_132b",
+    "granite_20b",
+    "starcoder2_3b",
+    "llama3_8b",
+    "gemma3_12b",
+    "whisper_small",
+    "mamba2_370m",
+    "recurrentgemma_9b",
+    "qwen2_vl_72b",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str      # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cells_for(cfg: ModelConfig) -> List[str]:
+    """The assigned shape cells applicable to this arch (DESIGN.md skips)."""
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.long_ok:
+        cells.append("long_500k")
+    return cells
+
+
+# ----------------------------------------------------------------------
+# init / forward dispatch
+# ----------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key) -> Tuple[Any, Any]:
+    if cfg.family == "encdec":
+        return E.init_encdec(key, cfg)
+    return T.init_decoder(key, cfg)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int) -> Tuple[Any, Any]:
+    if cfg.family == "encdec":
+        return E.init_encdec_cache(cfg, batch, max_seq, cfg.cdt)
+    return T.init_decoder_cache(cfg, batch, max_seq, cfg.cdt)
+
+
+def make_train_forward(cfg: ModelConfig) -> Callable:
+    """forward(params, batch) -> (logits, aux)."""
+    if cfg.family == "encdec":
+        def forward(params, batch):
+            enc_out = E.encode(params, batch["frames"], cfg, remat=True)
+            logits, _ = E.decode(params, batch["tokens"], enc_out, cfg, remat=True)
+            return logits, jnp.zeros((), jnp.float32)
+        return forward
+
+    def forward(params, batch):
+        logits, _, aux = T.decoder_forward(
+            params, batch["tokens"], cfg, positions=batch.get("positions"),
+            remat=True)
+        return logits, aux
+    return forward
+
+
+def make_prefill(cfg: ModelConfig) -> Callable:
+    """prefill(params, inputs, caches) -> (logits, caches)."""
+    if cfg.family == "encdec":
+        def prefill(params, inputs, caches):
+            enc_out = E.encode(params, inputs["frames"], cfg)
+            logits, caches = E.decode(params, inputs["tokens"], enc_out, cfg,
+                                      caches=caches,
+                                      cache_index=jnp.zeros((), jnp.int32))
+            return logits, caches
+        return prefill
+
+    def prefill(params, inputs, caches):
+        tokens = inputs["tokens"] if isinstance(inputs, dict) else inputs
+        pos = inputs.get("positions") if isinstance(inputs, dict) else None
+        logits, caches, _ = T.decoder_forward(
+            params, tokens, cfg, caches=caches,
+            cache_index=jnp.zeros((), jnp.int32), positions=pos)
+        return logits, caches
+    return prefill
+
+
+def make_decode(cfg: ModelConfig) -> Callable:
+    """decode(params, tok (B,1), caches, index) -> (logits, caches)."""
+    if cfg.family == "encdec":
+        def decode(params, tok, caches, index):
+            logits, caches = E.decode(params, tok, None, cfg, caches=caches,
+                                      cache_index=index)
+            return logits, caches
+        return decode
+
+    def decode(params, tok, caches, index):
+        logits, caches, _ = T.decoder_forward(params, tok, cfg, caches=caches,
+                                              cache_index=index)
+        return logits, caches
+    return decode
+
+
+# ----------------------------------------------------------------------
+# dry-run cell construction (ShapeDtypeStructs + shardings, no allocation)
+# ----------------------------------------------------------------------
+def _specs_to_shardings(spec_tree, rules: AxisRules, struct_tree=None):
+    """Logical specs -> NamedShardings; with ``struct_tree`` the mapping is
+    shape-aware (non-divisible axes degrade to replication per tensor)."""
+    from repro.distributed.sharding import spec_for_shape
+
+    is_leaf = lambda x: isinstance(x, tuple)
+    if struct_tree is None:
+        return jax.tree.map(
+            lambda sp: NamedSharding(rules.mesh, rules.spec(*sp)),
+            spec_tree, is_leaf=is_leaf)
+    return jax.tree.map(
+        lambda sp, st: NamedSharding(rules.mesh, spec_for_shape(rules, st.shape, sp)),
+        spec_tree, struct_tree, is_leaf=is_leaf)
+
+
+def batch_structs(cfg: ModelConfig, shape: Shape) -> Tuple[Dict, Dict]:
+    """(structs, logical spec tuples) for one training batch."""
+    b, s = shape.batch, shape.seq
+    structs: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        structs["tokens"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.cdt)
+        specs["tokens"] = ("batch", None, None)
+        structs["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        specs["positions"] = (None, "batch", None)
+    else:
+        structs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["tokens"] = ("batch", None)
+    if cfg.family == "encdec":
+        structs["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), cfg.cdt)
+        specs["frames"] = ("batch", None, None)
+    structs["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs["targets"] = ("batch", None)
+    return structs, specs
+
+
+@dataclasses.dataclass
+class Cell:
+    """One (arch x shape) dry-run cell: callable + abstract inputs."""
+
+    arch: str
+    shape: Shape
+    fn: Callable
+    in_structs: Tuple
+    in_shardings: Tuple
+    donate: Tuple[int, ...] = ()
+
+
+def abstract_params(cfg: ModelConfig) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct tree, logical spec tree) without any allocation.
+
+    ``eval_shape`` traces the init abstractly; the static spec tree (plain
+    Python tuples of logical names) is captured from the trace via closure.
+    """
+    captured = {}
+
+    def f(key):
+        params, specs = init_params(cfg, key)
+        captured["specs"] = specs
+        return params
+
+    structs = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return structs, captured["specs"]
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_seq: int) -> Tuple[Any, Any]:
+    captured = {}
+
+    def f():
+        caches, specs = init_caches(cfg, batch, max_seq)
+        captured["specs"] = specs
+        return caches
+
+    structs = jax.eval_shape(f)
+    return structs, captured["specs"]
+
+
+def build_cell(cfg: ModelConfig, arch: str, shape_name: str, rules: AxisRules,
+               opt_cfg: Optional[AdamWConfig] = None) -> Cell:
+    shape = SHAPES[shape_name]
+    if cfg.serve_resident and shape.kind != "train":
+        # serving keeps weights resident: drop the ZeRO (fsdp) axis so
+        # decode stops re-gathering every layer's weights per token
+        r = dict(rules.rules)
+        r["fsdp"] = None
+        rules = AxisRules(rules.mesh, r)
+    params_structs, param_specs = abstract_params(cfg)
+    params_sh = _specs_to_shardings(param_specs, rules, params_structs)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        fwd = make_train_forward(cfg)
+        step = make_train_step(fwd, opt_cfg,
+                               TrainConfig(microbatches=cfg.microbatches))
+        opt_structs = jax.eval_shape(adamw_init, params_structs)
+        opt_specs = adamw_init_specs(param_specs)
+        opt_sh = _specs_to_shardings(opt_specs, rules, opt_structs)
+        # the step scalar stays replicated
+        opt_sh["step"] = NamedSharding(rules.mesh, P())
+        bstructs, bspecs = batch_structs(cfg, shape)
+        b_sh = _specs_to_shardings(bspecs, rules, bstructs)
+        return Cell(arch, shape, step,
+                    (params_structs, opt_structs, bstructs),
+                    (params_sh, opt_sh, b_sh), donate=(0, 1))
+
+    cache_structs, cache_specs = abstract_caches(cfg, shape.batch, shape.seq)
+    cache_sh = _specs_to_shardings(cache_specs, rules, cache_structs)
+
+    if shape.kind == "prefill":
+        fn = make_prefill(cfg)
+        bstructs, bspecs = batch_structs(cfg, shape)
+        bstructs.pop("targets")
+        bspecs.pop("targets")
+        b_sh = _specs_to_shardings(bspecs, rules, bstructs)
+        return Cell(arch, shape, fn,
+                    (params_structs, bstructs, cache_structs),
+                    (params_sh, b_sh, cache_sh), donate=(2,))
+
+    # decode: one new token against a seq_len cache
+    from repro.distributed.sharding import spec_for_shape
+    fn = make_decode(cfg)
+    tok = jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32)
+    tok_sh = NamedSharding(rules.mesh,
+                           spec_for_shape(rules, tok.shape, ("batch", None)))
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    idx_sh = NamedSharding(rules.mesh, P())
+    return Cell(arch, shape, fn,
+                (params_structs, tok, cache_structs, idx),
+                (params_sh, tok_sh, cache_sh, idx_sh), donate=(2,))

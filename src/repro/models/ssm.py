@@ -1,0 +1,214 @@
+"""Mamba-2 block: state-space duality (SSD), chunked scan (arXiv:2405.21060).
+
+The SSD algorithm splits the sequence into chunks of ``Q`` tokens:
+intra-chunk terms are computed as a (Q x Q) decay-masked attention-like
+product (MXU-friendly), inter-chunk terms flow through a sequential scan
+over per-chunk states — O(S*Q) + O(S/Q) work instead of a length-S
+recurrence.  Decode carries the (nh, N, hp) state per layer: the SSM state
+*is* the minimal persisted decode state (DESIGN.md §4: the closest NN
+analogue of the paper's finite-term-recurrence minimal set).
+
+Decay exponentials run in fp32; matmuls in the compute dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, _dense_init, rmsnorm
+
+
+def init_ssm_block(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d = cfg.d_model
+    di = cfg.expand * d
+    n = cfg.ssm_state
+    hp = cfg.ssm_head_dim
+    nh = di // hp
+    w = cfg.d_conv
+    ks = jax.random.split(key, 10)
+    params = {
+        "w_z": _dense_init(ks[0], (d, di), cfg.pdt),
+        "w_x": _dense_init(ks[1], (d, di), cfg.pdt),
+        "w_b": _dense_init(ks[2], (d, n), cfg.pdt),
+        "w_c": _dense_init(ks[3], (d, n), cfg.pdt),
+        "w_dt": _dense_init(ks[4], (d, nh), cfg.pdt),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "conv_x": _dense_init(ks[5], (w, di), cfg.pdt, fan_in=w),
+        "conv_b": _dense_init(ks[6], (w, n), cfg.pdt, fan_in=w),
+        "conv_c": _dense_init(ks[7], (w, n), cfg.pdt, fan_in=w),
+        "norm": jnp.ones((di,), cfg.pdt),
+        "w_out": _dense_init(ks[8], (di, d), cfg.pdt, fan_in=di),
+    }
+    specs = {
+        "w_z": ("fsdp", "mlp"), "w_x": ("fsdp", "mlp"),
+        "w_b": ("fsdp", None), "w_c": ("fsdp", None),
+        "w_dt": ("fsdp", None), "dt_bias": (None,), "a_log": (None,),
+        "d_skip": (None,), "conv_x": (None, "mlp"), "conv_b": (None, None),
+        "conv_c": (None, None), "norm": ("mlp",), "w_out": ("mlp", "fsdp"),
+    }
+    return params, specs
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array,
+                 tail: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over seq. x: (B,S,C); kernel: (w,C).
+
+    Returns (y, new_tail) where tail carries the last w-1 inputs for
+    decode continuation.
+    """
+    w = kernel.shape[0]
+    pad = tail if tail is not None else jnp.zeros(
+        (x.shape[0], w - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * kernel[i][None, None] for i in range(w))
+    return jax.nn.silu(y), xp[:, -(w - 1):]
+
+
+def ssd_chunked(
+    x: jax.Array,       # (B, S, nh, hp)
+    dt: jax.Array,      # (B, S, nh)   post-softplus
+    a: jax.Array,       # (nh,)        negative
+    bm: jax.Array,      # (B, S, N)
+    cm: jax.Array,      # (B, S, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y, final_state (B, nh, N, hp))."""
+    b, s, nh, hp = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    while s % q:        # odd lengths (tests): shrink to a divisor
+        q -= 1
+    nc = s // q
+    cdt = x.dtype
+
+    xc = jnp.moveaxis(x.reshape(b, nc, q, nh, hp), 1, 0)        # (nc,b,q,nh,hp)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, q, nh), 1, 0).astype(jnp.float32)
+    bc = jnp.moveaxis(bm.reshape(b, nc, q, n), 1, 0)
+    cc = jnp.moveaxis(cm.reshape(b, nc, q, n), 1, 0)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_body(h, inp):
+        """One SSD chunk: intra-chunk (Q x Q decay-masked, MXU-friendly)
+        plus the contribution of the carried state.  The whole body is
+        checkpointed — the (b,Q,Q,nh) decay/score tensors are recomputed
+        in backward instead of being saved per chunk (which would
+        materialize O(S*Q) fp32 and dominate train memory)."""
+        xq, dtq, bq, cq_ = inp                                  # per-chunk slices
+        da = dtq * a                                            # (b,q,nh)
+        cum = jnp.cumsum(da, axis=1)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]           # (b,qi,qj,nh)
+        # mask BEFORE exp: exp(+large)=inf and inf*0 in the where-gradient
+        # poisons backward with NaNs
+        seg = jnp.where(causal[None, :, :, None], seg, -1e30)
+        decay = jnp.exp(seg)
+        cb = jnp.einsum("bqn,bkn->bqk", cq_, bq,
+                        preferred_element_type=jnp.float32)
+        scores = (cb[..., None] * decay * dtq[:, None, :, :]).astype(cdt)
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", scores, xq)
+        # carried-state contribution + state update
+        inner_decay = jnp.exp(cum).astype(cdt)                  # (b,q,nh)
+        y_off = jnp.einsum("bqn,bhnp,bqh->bqhp", cq_, h, inner_decay)
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)
+        wx = (dtq * decay_to_end).astype(cdt)
+        h_new = jnp.exp(cum[:, -1, :]).astype(cdt)[..., None, None] * h \
+            + jnp.einsum("bqn,bqh,bqhp->bhnp", bq, wx, xq)
+        return h_new, y_diag + y_off
+
+    h_init = jnp.zeros((b, nh, n, hp), cdt) if h0 is None else h0.astype(cdt)
+    body = jax.checkpoint(chunk_body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    h_final, y = jax.lax.scan(body, h_init, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(y, 0, 1).reshape(b, s, nh, hp)
+    return y, h_final
+
+
+def ssm_block(
+    p: Params,
+    u: jax.Array,
+    cfg: ModelConfig,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full Mamba-2 mixer. Train/prefill when cache is None or s>1;
+    single-token recurrent decode when s == 1 with a cache."""
+    b, s, d = u.shape
+    di = cfg.expand * d
+    hp = cfg.ssm_head_dim
+    nh = di // hp
+    n = cfg.ssm_state
+    cdt = cfg.cdt
+
+    z = u @ p["w_z"].astype(cdt)
+    x = u @ p["w_x"].astype(cdt)
+    bm = u @ p["w_b"].astype(cdt)
+    cm = u @ p["w_c"].astype(cdt)
+    x = shard(x, "batch", None, "mlp")
+    dt = jax.nn.softplus(
+        (u.astype(jnp.float32) @ p["w_dt"].astype(jnp.float32)) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])  # (nh,)
+
+    if cache is not None and s == 1:
+        # ---- decode: recurrent update ----
+        cx = jnp.concatenate([cache["conv_x"], x], axis=1)
+        xb = jnp.concatenate([cache["conv_b"], bm], axis=1)
+        xcn = jnp.concatenate([cache["conv_c"], cm], axis=1)
+        w = cfg.d_conv
+        xcv = jax.nn.silu(sum(cx[:, -w + i] * p["conv_x"][i].astype(cdt) for i in range(w)))
+        bcv = jax.nn.silu(sum(xb[:, -w + i] * p["conv_b"][i].astype(cdt) for i in range(w)))
+        ccv = jax.nn.silu(sum(xcn[:, -w + i] * p["conv_c"][i].astype(cdt) for i in range(w)))
+        xh = xcv.reshape(b, nh, hp)
+        dt1 = dt[:, 0]                                         # (b, nh)
+        decay = jnp.exp(dt1 * a).astype(cdt)                   # (b, nh)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", bcv, dt1.astype(cdt), xh)
+        h = decay[..., None, None] * cache["ssm"] + upd
+        y = jnp.einsum("bn,bhnp->bhp", ccv, h)
+        y = y + p["d_skip"].astype(cdt)[None, :, None] * xh
+        y = y.reshape(b, 1, di)
+        new_cache = {
+            "ssm": h,
+            "conv_x": cx[:, 1:], "conv_b": xb[:, 1:], "conv_c": xcn[:, 1:],
+        }
+    else:
+        # ---- train/prefill: chunked SSD ----
+        tail_x = cache["conv_x"] if cache is not None else None
+        tail_b = cache["conv_b"] if cache is not None else None
+        tail_c = cache["conv_c"] if cache is not None else None
+        xcv, ntx = _causal_conv(x, p["conv_x"].astype(cdt), tail_x)
+        bcv, ntb = _causal_conv(bm, p["conv_b"].astype(cdt), tail_b)
+        ccv, ntc = _causal_conv(cm, p["conv_c"].astype(cdt), tail_c)
+        xh = xcv.reshape(b, s, nh, hp)
+        h0 = cache["ssm"] if cache is not None else None
+        y, h_final = ssd_chunked(xh, dt, a, bcv, ccv, cfg.ssm_chunk, h0)
+        y = y + p["d_skip"].astype(cdt)[None, None, :, None] * xh
+        y = y.reshape(b, s, di)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"ssm": h_final, "conv_x": ntx, "conv_b": ntb, "conv_c": ntc}
+
+    # gated RMSNorm (mamba2) + output projection
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+         ).astype(cdt) * p["norm"].astype(cdt)
+    out = y @ p["w_out"].astype(cdt)
+    return shard(out, "batch", "seq", None), new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    di = cfg.expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    w = cfg.d_conv
+    return {
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_state, cfg.ssm_head_dim), dtype),
+        "conv_x": jnp.zeros((batch, w - 1, di), dtype),
+        "conv_b": jnp.zeros((batch, w - 1, cfg.ssm_state), dtype),
+        "conv_c": jnp.zeros((batch, w - 1, cfg.ssm_state), dtype),
+    }

@@ -1,0 +1,318 @@
+"""Decoder-stack assembly for the "lm", "ssm" and "hybrid" families.
+
+Layer stacking uses ``lax.scan`` over *pattern groups* so compile time is
+O(pattern period), not O(depth): the layer pattern (e.g. gemma3's
+5 local + 1 global, recurrentgemma's rec/rec/local) forms one group;
+``n_layers // period`` groups are scanned with stacked parameters, and any
+remainder layers run unrolled (recurrentgemma: 38 = 12*3 + 2).
+
+Activation-memory policy: the residual stream between blocks is
+sequence-sharded over "model" (Megatron SP) and each scanned group is
+``jax.checkpoint``-ed (full remat) during training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------------
+# per-layer init/apply, dispatched on the pattern kind
+# ----------------------------------------------------------------------
+def init_layer(key, cfg: ModelConfig, kind: str) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 4)
+    params: Params = {}
+    specs: Params = {}
+    params["ln1"], specs["ln1"] = L.init_rmsnorm(cfg.d_model, cfg.pdt)
+    if kind in ("global", "local"):
+        params["attn"], specs["attn"] = L.init_attention(ks[0], cfg)
+    elif kind == "rec":
+        params["rec"], specs["rec"] = R.init_rglru_block(ks[0], cfg)
+    elif kind == "ssm":
+        params["ssm"], specs["ssm"] = S.init_ssm_block(ks[0], cfg)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    if cfg.d_ff > 0:
+        params["ln2"], specs["ln2"] = L.init_rmsnorm(cfg.d_model, cfg.pdt)
+        if cfg.n_experts > 0:
+            params["moe"], specs["moe"] = M.init_moe(ks[1], cfg)
+        else:
+            params["mlp"], specs["mlp"] = L.init_mlp(ks[1], cfg)
+    return params, specs
+
+
+def apply_layer(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    cache: Optional[Params] = None,
+    cache_index: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.explicit_sp:
+        # pin the SP->TP transition: gather the bf16 norm output (not an
+        # fp32 intermediate); transpose = bf16 reduce-scatter of cotangent
+        h = shard(h, "batch", None, None)
+    if kind in ("global", "local"):
+        mix, new_cache = L.attention(
+            p["attn"], h, cfg, kind=kind, positions=positions,
+            cache=cache, cache_index=cache_index)
+    elif kind == "rec":
+        mix, new_cache = R.rglru_block(p["rec"], h, cfg, cache, cache_index)
+    else:  # ssm
+        mix, new_cache = S.ssm_block(p["ssm"], h, cfg, cache, cache_index)
+    x = x + mix
+    x = shard(x, "batch", "seq", None)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff > 0:
+        h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.explicit_sp:
+            h2 = shard(h2, "batch", None, None)
+        if cfg.n_experts > 0:
+            y, aux = M.moe(p["moe"], h2, cfg)
+        else:
+            y = L.mlp(p["mlp"], h2, cfg)
+        x = x + y
+        x = shard(x, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
+                     dtype) -> Tuple[Params, Params]:
+    """Decode-cache pytree + logical sharding specs for one layer."""
+    if kind == "global":
+        c = {
+            "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+        }
+        s = {"k": ("batch", "kv_seq", None, None), "v": ("batch", "kv_seq", None, None)}
+    elif kind == "local":
+        w = min(cfg.window, max_seq)
+        c = {
+            "k": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), dtype),
+            "pos": jnp.full((w,), -1, jnp.int32),
+        }
+        s = {"k": ("batch", "kv_seq", None, None), "v": ("batch", "kv_seq", None, None),
+             "pos": ("kv_seq",)}
+    elif kind == "rec":
+        c = R.init_rglru_cache(cfg, batch, dtype)
+        s = {"h": ("batch", "mlp"), "conv": ("batch", None, "mlp")}
+    elif kind == "ssm":
+        c = S.init_ssm_cache(cfg, batch, dtype)
+        s = {"ssm": ("batch", "mlp", None, None), "conv_x": ("batch", None, "mlp"),
+             "conv_b": ("batch", None, None), "conv_c": ("batch", None, None)}
+    else:
+        raise ValueError(kind)
+    return c, s
+
+
+# ----------------------------------------------------------------------
+# stack init
+# ----------------------------------------------------------------------
+def _stack_init(fn, key, n: int):
+    """vmap an init over ``n`` keys; specs get a leading (unsharded) layer axis."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: fn(k)[0])(keys)
+    _, specs = fn(key)  # structure only (cheap single-layer init)
+    specs = jax.tree.map(lambda sp: (None,) + tuple(sp), specs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return params, specs
+
+
+def init_decoder(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 8)
+    params: Params = {}
+    specs: Params = {}
+
+    params["embed"] = L._dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), cfg.pdt)
+    specs["embed"] = ("vocab", "fsdp")
+    if not cfg.use_rope and cfg.max_pos > 0:
+        params["pos_embed"] = L._dense_init(ks[5], (cfg.max_pos, cfg.d_model), cfg.pdt)
+        specs["pos_embed"] = (None, "fsdp")
+
+    pattern = cfg.attn_pattern
+    period = len(pattern)
+    n_groups = cfg.n_layers // period
+
+    def one_group(k):
+        gk = jax.random.split(k, period)
+        ps, ss = {}, {}
+        for j, kind in enumerate(pattern):
+            ps[str(j)], ss[str(j)] = init_layer(gk[j], cfg, kind)
+        return ps, ss
+
+    params["groups"], specs["groups"] = _stack_init(one_group, ks[1], n_groups)
+
+    tail_kinds = pattern[: cfg.n_tail]
+    params["tail"], specs["tail"] = {}, {}
+    tk = jax.random.split(ks[2], max(cfg.n_tail, 1))
+    for i, kind in enumerate(tail_kinds):
+        params["tail"][str(i)], specs["tail"][str(i)] = init_layer(tk[i], cfg, kind)
+
+    params["final_norm"], specs["final_norm"] = L.init_rmsnorm(cfg.d_model, cfg.pdt)
+    if not cfg.tie_embeddings:
+        params["unembed"] = L._dense_init(ks[3], (cfg.d_model, cfg.padded_vocab), cfg.pdt)
+        specs["unembed"] = ("fsdp", "vocab")
+    return params, specs
+
+
+def init_decoder_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype
+                       ) -> Tuple[Params, Params]:
+    pattern = cfg.attn_pattern
+    period = len(pattern)
+    n_groups = cfg.n_layers // period
+
+    caches: Params = {"groups": {}, "tail": {}}
+    cspecs: Params = {"groups": {}, "tail": {}}
+    for j, kind in enumerate(pattern):
+        c, s = init_layer_cache(cfg, kind, batch, max_seq, dtype)
+        caches["groups"][str(j)] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), c)
+        cspecs["groups"][str(j)] = jax.tree.map(
+            lambda sp: (None,) + tuple(sp), s, is_leaf=lambda x: isinstance(x, tuple))
+    for i, kind in enumerate(pattern[: cfg.n_tail]):
+        caches["tail"][str(i)], cspecs["tail"][str(i)] = init_layer_cache(
+            cfg, kind, batch, max_seq, dtype)
+    return caches, cspecs
+
+
+# ----------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------
+def decoder_forward(
+    params: Params,
+    tokens: jax.Array,                      # (B, S) int32, or (B, S, d) embeds
+    cfg: ModelConfig,
+    caches: Optional[Params] = None,
+    cache_index: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    remat: bool = False,
+) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Returns (logits, new_caches, aux_loss)."""
+    pattern = cfg.attn_pattern
+    cdt = cfg.cdt
+
+    if tokens.ndim == 3:
+        x = tokens.astype(cdt)              # stubbed modality embeddings
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if not cfg.use_rope and "pos_embed" in params:
+        s = x.shape[1]
+        start = jnp.zeros((), jnp.int32) if cache_index is None else cache_index
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], start, s, 0)
+        x = x + pe.astype(cdt)[None]
+    x = shard(x, "batch", "seq", None)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat_policy == "dots"
+              else jax.checkpoint_policies.nothing_saveable)
+
+    def group_step(x, group_params, group_caches):
+        new_caches = {} if group_caches is not None else None
+        aux_sum = jnp.zeros((), jnp.float32)
+        for j, kind in enumerate(pattern):
+            c = None if group_caches is None else group_caches[str(j)]
+            if remat and c is None:
+                # nested per-LAYER remat: the backward live set is one
+                # layer's activations, not the whole pattern group's
+                # (a 6-layer gemma3 group would otherwise hold ~6x)
+                def one_layer(xx, lp, kind=kind):
+                    out, _, aux = apply_layer(lp, xx, cfg, kind,
+                                              positions=positions)
+                    return out, aux
+                x, aux = jax.checkpoint(one_layer, policy=policy)(
+                    x, group_params[str(j)])
+                nc = None
+            else:
+                x, nc, aux = apply_layer(group_params[str(j)], x, cfg, kind,
+                                         cache=c, cache_index=cache_index,
+                                         positions=positions)
+            aux_sum = aux_sum + aux
+            if new_caches is not None:
+                new_caches[str(j)] = nc
+        return x, new_caches, aux_sum
+
+    uniform_attn = (set(pattern) <= {"local", "global"} and len(pattern) > 1
+                    and cfg.n_tail == 0 and caches is None)
+    if uniform_attn:
+        # Mixed local/global ATTENTION patterns (gemma3 5:1): all positions
+        # share parameter shapes, so flatten the (n_groups, period) stacks
+        # into one per-LAYER scan with the mask kind as a traced lax.cond.
+        # A period-P group body would otherwise keep P layers' gathered
+        # params + activations live through its backward (~P x memory).
+        period = len(pattern)
+        n_groups = cfg.n_layers // period
+        flat = jax.tree.map(
+            lambda *ls: jnp.stack(ls, axis=1).reshape((cfg.n_layers,) + ls[0].shape[1:]),
+            *[params["groups"][str(j)] for j in range(period)])
+        is_global = jnp.asarray([k == "global" for k in pattern] * n_groups)
+
+        def layer_body(carry, xs):
+            x, aux = carry
+            lp, is_g = xs
+            out, _, a = jax.lax.cond(
+                is_g,
+                lambda xx, pp: apply_layer(pp, xx, cfg, "global", positions=positions),
+                lambda xx, pp: apply_layer(pp, xx, cfg, "local", positions=positions),
+                x, lp)
+            return (out, aux + a), None
+
+        body = jax.checkpoint(layer_body, policy=policy) if remat else layer_body
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), (flat, is_global),
+                                         unroll=cfg.unroll_groups)
+        new_caches = None
+    elif caches is None:
+        def scan_body(carry, gp):
+            x, aux = carry
+            x, _, a = group_step(x, gp, None)
+            return (x, aux + a), None
+        body = jax.checkpoint(scan_body, policy=policy) if remat else scan_body
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["groups"],
+                                          unroll=cfg.unroll_groups)
+        new_caches = None
+    else:
+        def scan_body(carry, xs):
+            x, aux = carry
+            gp, gc = xs
+            x, nc, a = group_step(x, gp, gc)
+            return (x, aux + a), nc
+        (x, aux_total), new_group_caches = jax.lax.scan(
+            scan_body, (x, aux_total), (params["groups"], caches["groups"]),
+            unroll=cfg.unroll_groups)
+        new_caches = {"groups": new_group_caches, "tail": {}}
+
+    for i, kind in enumerate(pattern[: cfg.n_tail]):
+        c = None if caches is None else caches["tail"][str(i)]
+        x, nc, aux = apply_layer(params["tail"][str(i)], x, cfg, kind,
+                                 cache=c, cache_index=cache_index,
+                                 positions=positions)
+        aux_total = aux_total + aux
+        if new_caches is not None:
+            new_caches["tail"][str(i)] = nc
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed.astype(cdt))
+    logits = shard(logits, "batch", None, "vocab")
+    logits = logits.astype(jnp.dtype(cfg.logit_dtype))
+    if cfg.padded_vocab != cfg.vocab:
+        # mask padding columns (elementwise; fuses into the loss)
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+    return logits, new_caches, aux_total

@@ -1,0 +1,28 @@
+"""Simulated NVRAM substrate.
+
+The execution environment has no Intel Optane DCPMM, so this package
+simulates the *semantics* of byte-addressable persistent memory (explicit
+flush boundaries, data survival across process crashes, torn writes on
+crash-during-write) with real file-backed storage, and the *performance*
+with calibrated tier cost models (DRAM / Optane-NVM / SATA-SSD / remote
+RDMA) taken from the paper's experimental cluster (Fig. 6).
+
+Layers
+------
+- :mod:`repro.nvm.store`   — tiered byte-addressable stores + cost models
+- :mod:`repro.nvm.pmdk`    — ``libpmemobj``-like persistent object pools
+- :mod:`repro.nvm.windows` — MPI one-sided-communication windows (PSCW /
+  fence / passive-target epochs) with ``*_persist`` variants
+- :mod:`repro.nvm.prd`     — persistent-recovery-data (PRD) sub-cluster node
+"""
+from repro.nvm.store import (  # noqa: F401
+    Tier,
+    TierSpec,
+    TIER_SPECS,
+    NETWORK_SPECS,
+    Store,
+    CostModel,
+)
+from repro.nvm.pmdk import PmemPool  # noqa: F401
+from repro.nvm.windows import Window, EpochError  # noqa: F401
+from repro.nvm.prd import PRDNode  # noqa: F401

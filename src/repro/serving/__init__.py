@@ -1,0 +1,2 @@
+"""Serving substrate: batched prefill/decode engine with sharded KV caches."""
+from repro.serving.engine import ServeEngine  # noqa: F401

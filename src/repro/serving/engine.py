@@ -1,0 +1,45 @@
+"""Batched serving engine: prefill + decode over sharded KV caches.
+
+``prefill`` consumes the prompt and fills the caches (global layers:
+full-length seq-sharded caches; local layers: O(window) ring buffers;
+SSM/RG-LRU layers: constant-size recurrent state — which is why those
+families run the 500k-context cell).  ``decode_step`` appends one token.
+Greedy sampling; batch-synchronous (all requests share a position),
+matching the assigned decode shapes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ServeEngine:
+    def __init__(self, prefill_fn: Callable, decode_fn: Callable,
+                 cache_init: Callable):
+        """All three callables come from the arch registry:
+        - prefill_fn(params, tokens_or_embeds, caches) -> (logits, caches)
+        - decode_fn(params, last_tokens (B,1), caches, index) -> (logits, caches)
+        - cache_init(batch, max_seq) -> caches pytree
+        """
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+        self._cache_init = cache_init
+
+    def generate(self, params, prompt: jax.Array, steps: int,
+                 max_seq: Optional[int] = None) -> jax.Array:
+        b, s = prompt.shape[0], prompt.shape[1]
+        max_seq = max_seq if max_seq is not None else s + steps
+        caches = self._cache_init(b, max_seq)
+        logits, caches = self._prefill(params, prompt, caches)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(prompt.dtype)
+        out = [tok]
+        idx = jnp.asarray(s, jnp.int32)
+        for _ in range(steps - 1):
+            logits, caches = self._decode(params, tok, caches, idx)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(prompt.dtype)
+            out.append(tok)
+            idx = idx + 1
+        return jnp.concatenate(out, axis=1)

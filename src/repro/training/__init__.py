@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, train step, data pipeline."""
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.training.train_step import TrainConfig, make_train_step  # noqa: F401
+from repro.training.data import SyntheticCorpus, MemmapCorpus  # noqa: F401

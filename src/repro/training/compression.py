@@ -1,0 +1,74 @@
+"""Gradient compression with error feedback (cross-pod sync trick).
+
+On the multi-pod mesh the gradient all-reduce crosses the inter-pod DCI —
+the slowest link in the system.  Per-tensor symmetric int8 quantization
+cuts that traffic 4x vs fp32 (2x vs bf16); **error feedback** (Seide et
+al. '14 / Karimireddy et al. '19) accumulates the quantization residual
+locally and re-injects it the next step, preserving convergence
+(the compressed-SGD regret bound needs exactly this).
+
+Usage::
+
+    comp = GradCompression.init(params)
+    grads_q, comp = comp.compress(grads)     # int8 + scales (+ residual)
+    # ... all-reduce the int8 payload across pods ...
+    grads = decompress(grads_q)
+
+With pjit-auto the reduce placement belongs to XLA, so ``compressed_update``
+wires compression around the optimizer update directly: the quantized
+tensors are what a pod-boundary reducer would move (the 4x factor is
+recorded in EXPERIMENTS §Perf as a multi-pod lever); numerics are fully
+exercised on any backend.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    q: Any       # int8 pytree
+    scale: Any   # fp32 per-tensor scales
+
+
+class GradCompression(NamedTuple):
+    """Error-feedback state: the local quantization residual per tensor."""
+
+    residual: Any
+
+    @classmethod
+    def init(cls, params) -> "GradCompression":
+        return cls(residual=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def compress(self, grads) -> Tuple[Compressed, "GradCompression"]:
+        def one(g, r):
+            corrected = g.astype(jnp.float32) + r
+            scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+            new_r = corrected - q.astype(jnp.float32) * scale
+            return q, scale, new_r
+
+        out = jax.tree.map(one, grads, self.residual)
+        q = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        s = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        r = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return Compressed(q, s), GradCompression(residual=r)
+
+
+def decompress(c: Compressed):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, c.q, c.scale)
+
+
+def compressed_bytes(c: Compressed) -> int:
+    return sum(q.size for q in jax.tree.leaves(c.q)) \
+        + 4 * len(jax.tree.leaves(c.scale))
+
+
+def apply(grads, ef_state: GradCompression):
+    """Quantize -> (conceptual pod-boundary reduce) -> dequantize, with
+    error feedback.  Returns (approx_grads, new_ef_state)."""
+    c, new_state = ef_state.compress(grads)
+    return decompress(c), new_state

@@ -1,0 +1,105 @@
+"""Train step: loss, gradients, optimizer update, microbatching, remat.
+
+The step is family-agnostic: it consumes a ``forward(params, batch) ->
+(logits, aux)`` closure from the registry.  Cross-entropy runs in fp32
+against vocab-sharded logits using the fused select-reduce formulation
+(no (B,S,V) one-hot buffer materializes after XLA fusion).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import AdamWConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    aux_weight: float = 1e-2   # MoE load-balance loss weight
+    z_weight: float = 1e-4     # z-loss (logit drift regularizer)
+    # int8 + error-feedback gradient compression (cross-pod DCI lever:
+    # 4x less gradient traffic vs fp32; see training/compression.py)
+    compress_grads: bool = False
+
+
+def token_xent(logits: jax.Array, targets: jax.Array, z_weight: float
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Mean CE over tokens (+z-loss). logits fp32 (B,S,V); targets (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    onehot = jax.nn.one_hot(targets, v, dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    ce = jnp.mean(logz - gold)
+    zloss = jnp.mean(jnp.square(logz))
+    return ce + z_weight * zloss, ce
+
+
+def make_loss_fn(forward: Callable, tcfg: TrainConfig):
+    def loss_fn(params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, aux = forward(params, batch)
+        loss, ce = token_xent(logits, batch["targets"], tcfg.z_weight)
+        total = loss + tcfg.aux_weight * aux
+        return total, {"loss": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(
+    forward: Callable,
+    opt_cfg: AdamWConfig,
+    tcfg: TrainConfig = TrainConfig(),
+) -> Callable:
+    """Returns ``step(params, opt_state, batch) -> (params, opt, metrics)``."""
+    loss_fn = make_loss_fn(forward, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            n = tcfg.microbatches
+
+            def split(key, x):
+                # batch dim is axis 0 except M-RoPE positions (3, B, S)
+                ax = 1 if key == "positions" else 0
+                b = x.shape[ax]
+                parts = x.reshape(*x.shape[:ax], n, b // n, *x.shape[ax + 1:])
+                return jnp.moveaxis(parts, ax, 0)
+
+            micro = {k: split(k, v) for k, v in batch.items()}
+
+            def accum(carry, mb):
+                gacc, lacc = carry
+                (l, m), g = grad_fn(params, mb)
+                gacc = jax.tree.map(jnp.add, gacc, g)
+                return (gacc, lacc + m["loss"]), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(accum, (zero_g, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / n, gsum)
+            metrics = {"loss": lsum / n, "aux": jnp.zeros(())}
+        else:
+            (l, metrics), grads = grad_fn(params, batch)
+
+        if tcfg.compress_grads:
+            from repro.training.compression import GradCompression, apply as _ef
+            ef = opt_state.get("ef")
+            if ef is None:
+                ef = GradCompression.init(params)
+            grads, ef = _ef(grads, ef)
+            opt_state = dict(opt_state)
+            opt_state["ef"] = ef
+
+        ef_keep = opt_state.get("ef") if tcfg.compress_grads else None
+        base_opt = {k: v for k, v in opt_state.items() if k != "ef"}
+        params, base_opt, opt_metrics = adamw_update(grads, base_opt, params, opt_cfg)
+        opt_state = dict(base_opt)
+        if ef_keep is not None:
+            opt_state["ef"] = ef_keep
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return step

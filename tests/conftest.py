@@ -1,0 +1,12 @@
+"""Test configuration.
+
+x64 is enabled so exact-state-reconstruction tests run in float64 (the
+paper's exactness claim is a double-precision one).  Model code declares
+its dtypes explicitly (bf16/f32) and is unaffected.
+
+NOTE: no ``xla_force_host_platform_device_count`` here — smoke tests and
+benches must see 1 device (the 512-device flag belongs to dryrun.py ONLY).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward
+and one train step on CPU, asserting output shapes and no NaNs; plus a
+short prefill+decode round-trip for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry as R
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_step import make_train_step
+
+ARCHS = R.ARCH_IDS
+
+
+def _batch_for(cfg, b=2, s=32):
+    key = jax.random.PRNGKey(7)
+    batch = {}
+    if cfg.frontend == "vision":
+        batch["tokens"] = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(s)[None, None], (3, b, s)).astype(jnp.int32)
+    else:
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (b, cfg.enc_seq, cfg.d_model))
+    batch["targets"] = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = R.get_config(arch, smoke=True)
+    params, specs = R.init_params(cfg, jax.random.PRNGKey(0))
+    # spec tree mirrors the param tree
+    assert jax.tree.structure(params) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, tuple))
+    batch = _batch_for(cfg)
+    logits, aux = jax.jit(R.make_train_forward(cfg))(params, batch)
+    b, s = batch["targets"].shape
+    assert logits.shape == (b, s, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+    assert not bool(jnp.isnan(aux)), f"{arch}: NaN aux loss"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = R.get_config(arch, smoke=True)
+    params, _ = R.init_params(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(R.make_train_forward(cfg), AdamWConfig(lr=1e-3)))
+    opt = adamw_init(params)
+    batch = _batch_for(cfg)
+    p1, o1, m1 = step(params, opt, batch)
+    p2, o2, m2 = step(p1, o1, batch)
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+    assert float(m2["loss"]) < float(m1["loss"]) + 1.0  # sane progression
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p1)))
+    assert moved, f"{arch}: train step did not update params"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode(arch):
+    cfg = R.get_config(arch, smoke=True)
+    if cfg.frontend == "vision":
+        pytest.skip("decode smoke uses token prompts; vlm covered in forward")
+    params, _ = R.init_params(cfg, jax.random.PRNGKey(0))
+    b, s, extra = 2, 16, 4
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    caches, _ = R.init_caches(cfg, b, s + extra)
+    inputs = {"tokens": toks}
+    if cfg.family == "encdec":
+        inputs["frames"] = jax.random.normal(key, (b, cfg.enc_seq, cfg.d_model))
+    logits, caches = jax.jit(R.make_prefill(cfg))(params, inputs, caches)
+    assert logits.shape == (b, s, cfg.vocab)
+    decode = jax.jit(R.make_decode(cfg))
+    idx = jnp.asarray(s, jnp.int32)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    for _ in range(extra):
+        logits1, caches = decode(params, tok, caches, idx)
+        assert logits1.shape == (b, 1, cfg.vocab)
+        assert not bool(jnp.isnan(logits1).any())
+        tok = jnp.argmax(logits1[:, -1:], -1).astype(jnp.int32)
+        idx = idx + 1
+
+
+def test_full_configs_param_counts():
+    """Full configs instantiate abstractly (no allocation) with plausible
+    parameter counts vs the published sizes."""
+    expected = {
+        # NOTE: the assigned 48L x 64e x d_ff=1408 (gated) config totals
+        # ~28B with 3-matrix GLU experts; the "16B" in the marketing name
+        # counts a different layer/expert split.  We build the ASSIGNED
+        # shape exactly, so the window reflects it.
+        "moonshot_v1_16b_a3b": (22e9, 32e9),
+        "dbrx_132b": (110e9, 150e9),
+        "granite_20b": (15e9, 25e9),
+        "starcoder2_3b": (2.5e9, 4e9),
+        "llama3_8b": (6e9, 10e9),
+        "gemma3_12b": (9e9, 15e9),
+        "whisper_small": (0.15e9, 0.45e9),
+        "mamba2_370m": (0.25e9, 0.55e9),
+        "recurrentgemma_9b": (7e9, 12e9),
+        "qwen2_vl_72b": (60e9, 85e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        cfg = R.get_config(arch)
+        structs, specs = R.abstract_params(cfg)
+        n = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(structs))
+        assert lo < n < hi, f"{arch}: param count {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]B"

@@ -1,0 +1,145 @@
+"""NVM training-checkpoint manager: double buffering, async drain,
+crash consistency, elastic restore, Young/Daly period."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ft.checkpoint import CheckpointConfig, NVMCheckpointManager
+from repro.ft.period import PersistencePeriodTuner, optimal_period
+from repro.ft.recovery import TrainingRecovery, inject_host_failure
+from repro.nvm.store import Tier
+
+
+def _tree(seed=0, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w": jax.random.normal(k, (32, 16)) * scale,
+        "nested": {"b": jnp.arange(8, dtype=jnp.float32) * scale},
+        "step_arr": jnp.asarray([seed], jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = NVMCheckpointManager(CheckpointConfig(str(tmp_path)))
+    t = _tree(1)
+    mgr.save(t, step=7, extra={"cursor": 7})
+    got, step, extra = mgr.restore(t)
+    assert step == 7 and extra["cursor"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_double_buffer_two_slots_alternate(tmp_path):
+    mgr = NVMCheckpointManager(CheckpointConfig(str(tmp_path)))
+    mgr.save(_tree(1), step=1)
+    mgr.save(_tree(2), step=2)
+    got, step, _ = mgr.restore(_tree(0))
+    assert step == 2
+    # corrupt the newest slot -> restore falls back to the previous
+    _, slot = mgr._latest_valid()
+    for f in os.listdir(slot):
+        if f.endswith(".npy"):
+            with open(os.path.join(slot, f), "r+b") as fh:
+                fh.seek(60)
+                fh.write(b"\xde\xad\xbe\xef")
+            break
+    got, step, _ = mgr.restore(_tree(0))
+    assert step == 1  # CRC catches the torn payload; previous slot wins
+
+
+def test_crash_mid_persist_keeps_previous(tmp_path):
+    mgr = NVMCheckpointManager(CheckpointConfig(str(tmp_path)))
+    mgr.save(_tree(1), step=1)
+    # simulate crash mid-write of slot for step 2: payload without manifest
+    seq = mgr._seq + 1
+    slot = mgr._slot_dir(seq)
+    os.makedirs(slot, exist_ok=True)
+    with open(os.path.join(slot, "w.npy"), "wb") as f:
+        np.save(f, np.zeros((32, 16)))
+    # no MANIFEST -> invalid
+    mgr2 = NVMCheckpointManager(CheckpointConfig(str(tmp_path)))
+    got, step, _ = mgr2.restore(_tree(0))
+    assert step == 1
+
+
+def test_async_drain_overlaps_and_joins(tmp_path):
+    mgr = NVMCheckpointManager(CheckpointConfig(str(tmp_path), async_drain=True))
+    t = _tree(3)
+    mgr.save_async(t, step=3)
+    mgr.join()
+    got, step, _ = mgr.restore(t)
+    assert step == 3
+
+
+def test_elastic_restore_with_shardings(tmp_path):
+    """Restore re-places arrays with jax.device_put under the current
+    device topology (elastic scaling path; 1 device here)."""
+    mgr = NVMCheckpointManager(CheckpointConfig(str(tmp_path)))
+    t = _tree(4)
+    mgr.save(t, step=4)
+    sh = jax.tree.map(lambda a: jax.devices()[0], t)
+    got, step, _ = mgr.restore(t, shardings=sh)
+    assert step == 4
+    assert all(d.devices() == {jax.devices()[0]}
+               for d in jax.tree.leaves(got))
+
+
+def test_training_recovery_cycle(tmp_path):
+    mgr = NVMCheckpointManager(CheckpointConfig(str(tmp_path)))
+    tuner = PersistencePeriodTuner(mtbf_s=10.0, min_period=1)
+    rec = TrainingRecovery(mgr, tuner)
+    state = _tree(5)
+    rec.maybe_persist(state, step=0)
+    mgr.join()
+    dead = inject_host_failure(state)
+    assert bool(jnp.isnan(dead["w"]).all())
+    restored, step, _ = rec.recover(state, failed_step=3)
+    assert step == 0 and rec.failures_recovered == 1 and rec.steps_wasted == 3
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))
+
+
+def test_young_daly_period():
+    # delta=1s, MTBF=1h, step=1s -> T_opt = sqrt(2*1*3600) = 84.8 steps
+    assert optimal_period(1.0, 3600.0, 1.0) == 85
+    # more frequent failures -> shorter period
+    assert optimal_period(1.0, 36.0, 1.0) < optimal_period(1.0, 3600.0, 1.0)
+    t = PersistencePeriodTuner(mtbf_s=3600.0)
+    for _ in range(5):
+        t.observe(persist_cost_s=1.0, step_time_s=1.0)
+    assert 60 <= t.period <= 110
+    assert 0 < t.expected_overhead_fraction() < 0.1
+
+
+def test_modeled_tier_costs(tmp_path):
+    costs = {}
+    for tier in (Tier.DRAM, Tier.NVM, Tier.SSD):
+        d = tmp_path / tier.value
+        mgr = NVMCheckpointManager(CheckpointConfig(str(d), tier=tier))
+        costs[tier] = mgr.save(_tree(1), step=1)
+    assert costs[Tier.DRAM] < costs[Tier.NVM] < costs[Tier.SSD]
+
+
+def test_straggler_monitor_classifies_and_advises():
+    from repro.ft.straggler import StragglerMonitor
+
+    mon = StragglerMonitor(window=20, spike_mad=5.0, persist_k=3, warmup=5)
+    for _ in range(10):
+        a = mon.observe(0.100)
+    assert a.classification == "normal" and not a.defer_persistence
+    # one transient spike: defer persistence but no eviction
+    a = mon.observe(1.0)
+    assert a.classification == "transient"
+    assert a.defer_persistence and not a.suggest_eviction
+    # recovery resets the streak
+    a = mon.observe(0.101)
+    assert a.classification == "normal"
+    # persistent straggle: eviction advised after persist_k spikes
+    for _ in range(3):
+        a = mon.observe(1.0)
+    assert a.classification == "persistent" and a.suggest_eviction
+    # the baseline median was never poisoned by the spikes
+    assert abs(mon.median_step_s - 0.100) < 0.01

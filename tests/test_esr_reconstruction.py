@@ -1,0 +1,183 @@
+"""Exact state reconstruction: the paper's central correctness claim.
+
+After k iterations, fail a set of blocks, reconstruct via Algorithm 3/5,
+and compare against the fault-free state at the same iteration —
+element-wise, at double-precision tolerance.  Hypothesis drives the
+property over operators, failed subsets, and failure times.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BlockJacobiPreconditioner,
+    DenseOperator,
+    FailurePlan,
+    InMemoryESR,
+    IdentityPreconditioner,
+    JacobiPreconditioner,
+    NVMESRHomogeneous,
+    NVMESRPRD,
+    PCGConfig,
+    UnrecoverableFailure,
+    make_poisson_problem,
+    random_spd,
+    solve,
+)
+from repro.nvm.store import Tier
+
+BACKENDS = {
+    "inmemory": lambda op: InMemoryESR(op.nblocks, op.partition.block_size, np.float64),
+    "nvm-homogeneous": lambda op: NVMESRHomogeneous(op.nblocks, op.partition.block_size, np.float64),
+    "nvm-prd": lambda op: NVMESRPRD(op.nblocks, op.partition.block_size, np.float64),
+    "nvm-prd-sync": lambda op: NVMESRPRD(op.nblocks, op.partition.block_size,
+                                         np.float64, async_drain=False),
+    "nvm-homogeneous-ssd": lambda op: NVMESRHomogeneous(
+        op.nblocks, op.partition.block_size, np.float64, tier=Tier.SSD),
+}
+
+
+def _exactness(op, b, pre, backend, fail_at, blocks, period=1):
+    ref_state, ref_rep, ref_cap = solve(op, b, pre, PCGConfig(tol=1e-11),
+                                        capture_states_at=[fail_at])
+    st_, rep, cap = solve(
+        op, b, pre, PCGConfig(tol=1e-11, persistence_period=period),
+        backend=backend, failures=[FailurePlan(fail_at, tuple(blocks))],
+        capture_states_at=[fail_at])
+    assert rep.failures_recovered == 1
+    assert rep.converged
+    # exact reconstruction: state at the recovery point matches fault-free
+    k_rec = fail_at - rep.wasted_iterations
+    ref2 = ref_cap.get(fail_at) if period == 1 else None
+    if period == 1 and ref2 is not None and fail_at in cap:
+        for field in ("x", "r", "z", "p"):
+            a = np.asarray(getattr(cap[fail_at], field))
+            c = np.asarray(getattr(ref2, field))
+            np.testing.assert_allclose(a, c, rtol=1e-9, atol=1e-9, err_msg=field)
+    # and the final solution is right regardless
+    res = float(jnp.linalg.norm(b - op.apply(st_.x)) / jnp.linalg.norm(b))
+    assert res < 1e-9
+    return rep
+
+
+@pytest.mark.parametrize("backend_name", list(BACKENDS))
+def test_exact_reconstruction_poisson(backend_name):
+    op, b = make_poisson_problem(16, 8, 6, nblocks=8)
+    pre = JacobiPreconditioner(op)
+    _exactness(op, b, pre, BACKENDS[backend_name](op), fail_at=20, blocks=[2, 5])
+
+
+@pytest.mark.parametrize("precond_cls", [IdentityPreconditioner,
+                                         JacobiPreconditioner,
+                                         BlockJacobiPreconditioner])
+def test_exact_reconstruction_preconditioners(precond_cls):
+    op, b = make_poisson_problem(16, 6, 5, nblocks=8)
+    pre = precond_cls(op)
+    fail_at = 5 if precond_cls is BlockJacobiPreconditioner else 15
+    _exactness(op, b, pre, BACKENDS["nvm-prd"](op), fail_at=fail_at, blocks=[0, 7])
+
+
+def test_adjacent_multiblock_failure():
+    """Adjacent failed slabs couple through the stencil: the union solve
+    A[F,F] must include the cross-block coupling."""
+    op, b = make_poisson_problem(16, 6, 5, nblocks=8)
+    pre = JacobiPreconditioner(op)
+    _exactness(op, b, pre, BACKENDS["nvm-homogeneous"](op), fail_at=12,
+               blocks=[3, 4, 5])
+
+
+def test_esrp_periodic_persistence_wastes_iterations():
+    op, b = make_poisson_problem(16, 6, 5, nblocks=8)
+    pre = JacobiPreconditioner(op)
+    be = BACKENDS["nvm-prd"](op)
+    st_, rep, _ = solve(op, b, pre, PCGConfig(tol=1e-11, persistence_period=7),
+                        backend=be, failures=[FailurePlan(25, (1,))])
+    assert rep.converged
+    assert 0 < rep.wasted_iterations < 7  # ESRP discard cost bounded by T
+    assert rep.persist_events < rep.iterations  # fewer persists than iters
+
+
+def test_repeated_failures():
+    op, b = make_poisson_problem(16, 6, 5, nblocks=8)
+    pre = JacobiPreconditioner(op)
+    be = BACKENDS["nvm-prd"](op)
+    st_, rep, _ = solve(op, b, pre, PCGConfig(tol=1e-11), backend=be,
+                        failures=[FailurePlan(8, (0,)), FailurePlan(16, (3, 4)),
+                                  FailurePlan(24, (7,))])
+    assert rep.failures_recovered == 3
+    assert rep.converged
+
+
+def test_inmemory_esr_insufficient_copies_raises():
+    """c+1 copies tolerate c failures; c+1 simultaneous failures of
+    adjacent ranks can destroy every copy -> UnrecoverableFailure."""
+    op, b = make_poisson_problem(16, 6, 5, nblocks=8)
+    pre = JacobiPreconditioner(op)
+    be = InMemoryESR(op.nblocks, op.partition.block_size, np.float64, copies=1)
+    with pytest.raises(UnrecoverableFailure):
+        solve(op, b, pre, PCGConfig(tol=1e-11), backend=be,
+              failures=[FailurePlan(10, (2, 3))])  # block 2's only copy is on 3
+
+
+def test_nvm_esr_survives_what_inmemory_cannot():
+    """The paper's point: NVM-ESR recovers ANY number of simultaneous
+    compute failures with a single persisted copy."""
+    op, b = make_poisson_problem(16, 6, 5, nblocks=8)
+    pre = JacobiPreconditioner(op)
+    be = BACKENDS["nvm-prd"](op)
+    st_, rep, _ = solve(op, b, pre, PCGConfig(tol=1e-11), backend=be,
+                        failures=[FailurePlan(10, (0, 1, 2, 3, 4, 5, 6))])
+    assert rep.failures_recovered == 1
+    assert rep.converged
+
+
+def test_memory_accounting_matches_paper_model():
+    """§3.1: in-memory ESR ~ 2*copies*n values of RAM; NVM-ESR: 0 RAM,
+    O(n) NVM."""
+    op, b = make_poisson_problem(16, 6, 5, nblocks=8)
+    pre = JacobiPreconditioner(op)
+    esr = InMemoryESR(op.nblocks, op.partition.block_size, np.float64)
+    solve(op, b, pre, PCGConfig(tol=1e-11, maxiter=30), backend=esr)
+    n = op.n
+    ram = esr.memory_overhead_values()
+    # paper model: 2*copies*n live + 1 staging slot (mid-burst safety)
+    assert 3 * (op.nblocks - 1) * n <= ram <= 3.3 * (op.nblocks - 1) * n
+    nvm = BACKENDS["nvm-prd"](op)
+    solve(op, b, pre, PCGConfig(tol=1e-11, maxiter=30), backend=nvm)
+    assert nvm.memory_overhead_values() == 0
+    assert nvm.nvm_values() == 4 * n  # 4-slot ring of shards
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nblocks=st.sampled_from([4, 8]),
+    seed=st.integers(0, 10_000),
+    fail_at=st.integers(3, 12),
+    data=st.data(),
+)
+def test_property_exact_reconstruction_dense(nblocks, seed, fail_at, data):
+    """Property: for random SPD systems, any proper subset of failed
+    blocks reconstructs exactly (dense local solves)."""
+    n = 64
+    op = DenseOperator(random_spd(n, seed=seed, cond=30.0), nblocks=nblocks)
+    rng = np.random.default_rng(seed + 1)
+    b = jnp.asarray(rng.standard_normal(n))
+    blocks = data.draw(st.lists(st.integers(0, nblocks - 1), min_size=1,
+                                max_size=nblocks - 1, unique=True))
+    pre = JacobiPreconditioner(op)
+    ref, _, ref_cap = solve(op, b, pre, PCGConfig(tol=1e-11, local_solve="dense"),
+                            capture_states_at=[fail_at])
+    be = NVMESRPRD(op.nblocks, op.partition.block_size, np.float64)
+    st2, rep, cap = solve(op, b, pre, PCGConfig(tol=1e-11, local_solve="dense"),
+                          backend=be, failures=[FailurePlan(fail_at, tuple(blocks))],
+                          capture_states_at=[fail_at])
+    if fail_at in ref_cap and fail_at in cap:
+        np.testing.assert_allclose(np.asarray(cap[fail_at].x),
+                                   np.asarray(ref_cap[fail_at].x),
+                                   rtol=1e-8, atol=1e-8)
+        np.testing.assert_allclose(np.asarray(cap[fail_at].r),
+                                   np.asarray(ref_cap[fail_at].r),
+                                   rtol=1e-8, atol=1e-8)
+    assert rep.converged or rep.iterations < fail_at  # converged pre-failure

@@ -1,0 +1,95 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("shape,bz", [
+    ((16, 8, 128), 8), ((32, 16, 256), 4), ((8, 8, 128), 8),
+    ((24, 10, 130), 4), ((8, 16, 64), 2), ((64, 8, 128), 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stencil7_kernel_matches_ref(shape, bz, dtype):
+    u = jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+    got = ops.stencil7(u, mode="pallas", bz=bz).astype(jnp.float32)
+    want = ref.stencil7_ref(u).astype(jnp.float32)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_stencil7_kernel_matches_core_operator():
+    """The kernel computes the same operator the solver uses."""
+    from repro.core.poisson import StencilOperator
+    op = StencilOperator(16, 8, 128, nblocks=4, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (op.n,), jnp.float32)
+    got = ops.stencil7(x.reshape(op.grid), mode="pallas").reshape(-1)
+    want = op.apply(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,bm", [(128 * 8, 8), (128 * 64, 16), (128 * 256, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_cg_kernel_matches_ref(n, bm, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x, r, p, ap, inv = [jax.random.normal(k, (n,), dtype) for k in ks]
+    alpha = jnp.asarray(0.37, dtype)
+    got = ops.fused_cg_update(x, r, p, ap, alpha, inv, mode="pallas", bm=bm)
+    want = ref.fused_cg_update_ref(x, r, p, ap, alpha, inv)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-1
+    for g, w, name in zip(got[:3], want[:3], ("x", "r", "z")):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=tol, atol=tol, err_msg=name)
+    rz_rel = abs(float(got[3]) - float(want[3])) / (abs(float(want[3])) + 1e-9)
+    # both sides accumulate in fp32; bf16 slack covers the final downcast
+    # (bf16 eps = 2^-7 ~ 0.8%, plus cancellation-ordering noise)
+    assert rz_rel < (1e-4 if dtype == jnp.float32 else 3e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nz=st.sampled_from([8, 16, 24]),
+    ny=st.sampled_from([8, 12]),
+    nx=st.sampled_from([128, 130]),
+    seed=st.integers(0, 1000),
+)
+def test_property_stencil_linearity(nz, ny, nx, seed):
+    """A(au + bv) == a*Au + b*Av through the Pallas kernel."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    u = jax.random.normal(k1, (nz, ny, nx), jnp.float32)
+    v = jax.random.normal(k2, (nz, ny, nx), jnp.float32)
+    a, b = 1.7, -0.3
+    lhs = ops.stencil7(a * u + b * v, mode="pallas", bz=8 if nz % 8 == 0 else 4)
+    rhs = a * ops.stencil7(u, mode="pallas", bz=8 if nz % 8 == 0 else 4) \
+        + b * ops.stencil7(v, mode="pallas", bz=8 if nz % 8 == 0 else 4)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_cg_inside_solver_iteration():
+    """One CG iteration computed with the fused kernel equals the plain
+    jnp iteration (the kernel is a drop-in for Algorithm 1 lines 4-7a)."""
+    n = 128 * 16
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (n,), jnp.float32)
+    p = jax.random.normal(ks[1], (n,), jnp.float32)
+    r = jax.random.normal(ks[2], (n,), jnp.float32)
+    inv = jnp.full((n,), 1.0 / 6.0, jnp.float32)
+    ap = p * 2.0 + jnp.roll(p, 1) * -0.5
+    alpha = jnp.asarray(0.11, jnp.float32)
+    xk, rk, zk, rzk = ops.fused_cg_update(x, r, p, ap, alpha, inv, mode="pallas")
+    x2 = x + alpha * p
+    r2 = r - alpha * ap
+    z2 = r2 * inv
+    rz2 = jnp.sum(r2 * z2)
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(x2), rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(r2), rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(zk), np.asarray(z2), rtol=1e-4, atol=1e-6)
+    assert abs(float(rzk) - float(rz2)) / abs(float(rz2)) < 1e-4

@@ -1,0 +1,168 @@
+"""NVM substrate semantics: durability, crash consistency, epoch discipline."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nvm.pmdk import HEADER_SIZE, PmemPool
+from repro.nvm.prd import PRDNode
+from repro.nvm.store import Store, Tier, TIER_SPECS
+from repro.nvm.windows import EpochError, Window
+
+
+# ---------------------------------------------------------------- store
+def test_store_flush_durability():
+    s = Store(1024, Tier.NVM)
+    s.write(0, b"hello")
+    s.crash()  # unflushed -> lost
+    assert s.read(0, 5)[0] == b"\x00" * 5
+    s.write(0, b"hello")
+    s.flush()
+    s.crash()
+    assert s.read(0, 5)[0] == b"hello"
+
+
+def test_volatile_tier_loses_everything():
+    s = Store(64, Tier.DRAM)
+    s.write(0, b"x" * 64)
+    s.flush()
+    s.crash()
+    assert s.read(0, 64)[0] == b"\x00" * 64
+
+
+def test_cost_model_ordering():
+    """Modeled write costs: DRAM < NVM < SSD (paper Fig. 9 ordering)."""
+    payload = b"y" * (1 << 20)
+    costs = {}
+    for tier in (Tier.DRAM, Tier.NVM, Tier.SSD):
+        s = Store(1 << 21, tier)
+        costs[tier] = s.write(0, payload) + s.flush()
+    assert costs[Tier.DRAM] < costs[Tier.NVM] < costs[Tier.SSD]
+
+
+# ---------------------------------------------------------------- pmdk
+def test_pool_persist_read_roundtrip():
+    pool = PmemPool(Store(4096, Tier.NVM))
+    pool.create("obj", 256)
+    arr = np.arange(16, dtype=np.float64)
+    pool.persist_array("obj", arr)
+    got = pool.read_array("obj", np.float64, (16,))
+    np.testing.assert_array_equal(got, arr)
+
+
+def test_pool_double_buffer_keeps_previous_on_crash():
+    pool = PmemPool(Store(4096, Tier.NVM))
+    pool.create("obj", 64)
+    pool.persist("obj", b"A" * 64)
+    # write payload of v2 but crash BEFORE the header commit
+    store = pool.store
+    pool._seq["obj"] += 1  # simulate being mid-persist of seq 2
+    off0, off1, cap = pool._slot_offsets("obj")
+    target = off0 if pool._seq["obj"] % 2 == 0 else off1
+    store.write(target + HEADER_SIZE, b"B" * 64)  # payload, no flush, no header
+    store.crash()
+    pool.recover()
+    assert pool.read("obj") == b"A" * 64  # previous slot intact
+
+
+@settings(max_examples=25, deadline=None)
+@given(torn_at=st.integers(0, 80), frag=st.binary(min_size=1, max_size=40))
+def test_pool_torn_write_never_corrupts(torn_at, frag):
+    """Property: a torn write landing anywhere in the in-flight slot can
+    never make read() return something other than a fully-committed
+    payload."""
+    pool = PmemPool(Store(4096, Tier.NVM))
+    pool.create("obj", 64)
+    pool.persist("obj", b"A" * 64)
+    committed = {b"A" * 64}
+    # begin v2, crash with a torn fragment somewhere in slot space
+    off0, off1, cap = pool._slot_offsets("obj")
+    next_slot = off0 if (pool._seq["obj"] + 1) % 2 == 0 else off1
+    span = HEADER_SIZE + cap
+    pool.store.crash(torn_write=(next_slot + (torn_at % span),
+                                 frag[: span - (torn_at % span)]))
+    pool.recover()
+    got = pool.read("obj")
+    assert got in committed
+
+
+# ---------------------------------------------------------------- windows
+def test_pscw_epoch_discipline():
+    w = Window(Store(1024, Tier.NVM))
+    with pytest.raises(EpochError):
+        w.put(0, 0, b"x")  # RMA outside any epoch
+    w.post([0, 1])
+    w.start(0)
+    w.put(0, 0, b"abc")
+    with pytest.raises(EpochError):
+        w.wait()  # origins not complete
+    w.complete(0)
+    with pytest.raises(EpochError):
+        w.wait()  # origin 1 still missing
+    w.start(1)
+    w.complete(1)
+    w.wait(persist=True)
+    assert w.store.read(0, 3)[0] == b"abc"
+
+
+def test_pscw_wait_persists_before_epoch_close():
+    store = Store(1024, Tier.NVM)
+    w = Window(store)
+    w.post([0])
+    w.start(0)
+    w.put(0, 0, b"zzz")
+    w.complete(0)
+    # crash BEFORE wait: data must be gone (window dies with the node)
+    store.crash()
+    assert store.read(0, 3)[0] == b"\x00\x00\x00"
+    # rebooted node, new window; with wait_persist the data survives
+    w2 = Window(store)
+    w2.post([0])
+    w2.start(0)
+    w2.put(0, 0, b"zzz")
+    w2.complete(0)
+    w2.wait(persist=True)
+    store.crash()
+    assert store.read(0, 3)[0] == b"zzz"
+
+
+def test_passive_target_lock_unlock():
+    w = Window(Store(256, Tier.NVM))
+    w.lock(3)
+    w.put(3, 0, b"q")
+    with pytest.raises(EpochError):
+        w.lock(4)
+    w.unlock(3)
+    w.lock(4)
+    w.unlock(4)
+
+
+# ---------------------------------------------------------------- PRD
+def test_prd_pscw_roundtrip_and_async_drain():
+    prd = PRDNode(nranks=4, capacity_per_rank=64, async_drain=True)
+    costs = prd.persist_all([bytes([i]) * 32 for i in range(4)], seq=1)
+    assert costs["origin"] > 0
+    prd.join()
+    for r in range(4):
+        seq, payload = prd.read_latest(r)
+        assert seq == 1 and payload == bytes([r]) * 32
+
+
+def test_prd_survives_compute_failures_not_own_crash():
+    prd = PRDNode(nranks=2, capacity_per_rank=32, async_drain=False)
+    prd.persist_all([b"a" * 16, b"b" * 16], seq=1)
+    # compute-node failures don't touch PRD data
+    assert prd.read_latest(0)[1] == b"a" * 16
+    # a PRD-node crash after persist retains flushed epochs
+    prd.crash()
+    assert prd.read_latest(1)[1] == b"b" * 16
+
+
+def test_prd_crash_mid_epoch_loses_only_inflight():
+    prd = PRDNode(nranks=1, capacity_per_rank=32, async_drain=False)
+    prd.persist_all([b"v1" + b"." * 14], seq=1)
+    # begin epoch 2 but crash before wait_persist
+    prd.begin_epoch([0])
+    prd.put_rank(0, b"v2" + b"." * 14, seq=2)
+    prd.crash()
+    got = prd.read_latest(0)
+    assert got is not None and got[1].startswith(b"v1")
