@@ -17,7 +17,8 @@ import time
 import numpy as np
 
 from repro.core import InMemoryESR, JacobiPreconditioner, PCGConfig, make_poisson_problem, solve
-from repro.core.nvm_esr import NVMESRPRD, SLOTS
+from repro.core.nvm_esr import NVMESRPRD, ring_slots
+from repro.core.state import PCG_SCHEMA
 
 
 def measured_overheads(nblocks=8, grid=(16, 8, 8)):
@@ -36,7 +37,8 @@ def rows():
     out.append(("fig2_measured_esr_ram_values", esr_ram,
                 f"n={n} proc=8; paper-model 2(p-1)n={2*7*n} + staging slot"))
     out.append(("fig2_measured_nvmesr_ram_values", nvm_ram, "zero RAM redundancy"))
-    out.append(("fig8_measured_nvm_values", nvm_nv, f"{SLOTS}-slot ring = {SLOTS}*n"))
+    slots = ring_slots(PCG_SCHEMA)
+    out.append(("fig8_measured_nvm_values", nvm_nv, f"{slots}-slot ring = {slots}*n"))
 
     # analytic model at paper-cluster scale (8 values/entry, fp64):
     # per-process RAM fixed at 4 GB; problem sized to fill it.

@@ -5,21 +5,35 @@ time-like rows (modeled with paper-cluster calibration constants where
 the real hardware is simulated — see repro/nvm/store.py), bytes/ratios
 otherwise (stated per row).
 
+Usage: ``python benchmarks/run.py [module] [--smoke]``.  ``--smoke``
+shrinks problem sizes (exported as ``REPRO_BENCH_SMOKE=1`` for modules
+that honor it) — the CI dry-run path.
+
 Modules:
   memory_overhead     — paper Fig. 2 + Fig. 8 (RAM/NVRAM utilization)
   persist_homogeneous — paper Fig. 9 (homogeneous persistence tiers)
   persist_prd         — paper Fig. 10 (PRD sub-cluster over RDMA)
   iteration_overhead  — wall-clock per-iteration overhead + recovery
   solver_roofline     — ESR vs NVM-ESR collective bytes on the mesh
+  solver_zoo          — per-solver persist overhead across backends
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
 
 
 def main() -> None:
+    args = [a for a in sys.argv[1:]]
+    while "--smoke" in args:
+        args.remove("--smoke")
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    if len(args) > 1:
+        raise SystemExit(f"at most one module may be selected, got {args}")
+    only = args[0] if args else None
+
     import jax
     jax.config.update("jax_enable_x64", True)
 
@@ -29,6 +43,7 @@ def main() -> None:
         persist_homogeneous,
         persist_prd,
         solver_roofline,
+        solver_zoo,
     )
 
     modules = [
@@ -37,8 +52,11 @@ def main() -> None:
         ("persist_prd", persist_prd),
         ("iteration_overhead", iteration_overhead),
         ("solver_roofline", solver_roofline),
+        ("solver_zoo", solver_zoo),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    if only is not None and only not in {name for name, _ in modules}:
+        raise SystemExit(f"unknown module {only!r}; have "
+                         f"{sorted(name for name, _ in modules)}")
     print("name,value,derived")
     failed = []
     for name, mod in modules:

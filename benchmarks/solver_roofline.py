@@ -18,9 +18,9 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, jax
 from repro.core.spmv import lower_pcg_step
+from repro.launch.mesh import compat_make_mesh
 from repro.launch.roofline import analyze
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = compat_make_mesh((2,2,2), ("pod","data","model"))
 out = {}
 for mode in ("nvm", "inmemory"):
     compiled = lower_pcg_step(mesh, 64, 64, 64, esr_mode=mode).compile()

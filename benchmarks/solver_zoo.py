@@ -1,0 +1,78 @@
+"""Solver zoo sweep: per-solver persistence overhead across backends.
+
+Extends the paper's PCG-only Figs. 9/10 view to every registered solver:
+for each (solver, backend) cell the modeled persist cost per persistence
+event, the slot payload size implied by the solver's recovery schema, and
+a recovery run demonstrating mid-solve multi-block failure tolerance.
+
+Smoke mode (``REPRO_BENCH_SMOKE=1`` or ``run.py --smoke``) shrinks the
+grid and loosens the tolerance so the sweep doubles as a CI dry run.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import JacobiPreconditioner, make_poisson_problem
+from repro.solvers import (
+    BACKENDS,
+    SOLVERS,
+    FailurePlan,
+    SolveConfig,
+    make_backend,
+    make_solver,
+    solve,
+)
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def rows():
+    out = []
+    if _smoke():
+        grid, nblocks, tol, fail_at = (8, 8, 8), 4, 1e-8, 3
+    else:
+        grid, nblocks, tol, fail_at = (32, 16, 16), 8, 1e-10, 10
+    op, b = make_poisson_problem(*grid, nblocks=nblocks)
+    pre = JacobiPreconditioner(op)
+    bs = op.partition.block_size
+
+    for sname in sorted(SOLVERS):
+        opts = {"m": 4} if sname == "gmres" else {}
+        solver = make_solver(sname, op, pre, **opts)
+        schema = solver.schema
+        out.append((f"zoo_{sname}_slot_bytes",
+                    schema.slot_nbytes(bs, np.float64),
+                    f"{len(schema.vectors)}v+{len(schema.scalars)}s "
+                    f"history={schema.history}"))
+
+        # unprotected baseline
+        _, rep0, _ = solve(solver, op, b, pre,
+                           SolveConfig(tol=tol, maxiter=20000))
+        out.append((f"zoo_{sname}_iterations", rep0.iterations,
+                    f"to {tol:g}, converged={rep0.converged}"))
+
+        for bname in sorted(BACKENDS):
+            solver = make_solver(sname, op, pre, **opts)
+            be = make_backend(bname, op, solver=solver)
+            _, rep, _ = solve(solver, op, b, pre,
+                              SolveConfig(tol=tol, maxiter=20000), backend=be)
+            per_event = rep.persist_cost_s / max(rep.persist_events, 1)
+            out.append((f"zoo_{sname}_{bname}_persist_us_per_event",
+                        per_event * 1e6,
+                        f"{rep.persist_events} events, modeled"))
+
+        # recovery demonstration on the PRD architecture
+        solver = make_solver(sname, op, pre, **opts)
+        be = make_backend("nvm-prd", op, solver=solver)
+        f_at = min(fail_at, 3) if sname == "gmres" else fail_at
+        _, rep, _ = solve(solver, op, b, pre,
+                          SolveConfig(tol=tol, maxiter=20000), backend=be,
+                          failures=[FailurePlan(f_at, (1, 2))])
+        out.append((f"zoo_{sname}_recovered_iterations", rep.iterations,
+                    f"recovered={rep.failures_recovered} "
+                    f"wasted={rep.wasted_iterations} converged={rep.converged}"))
+    return out

@@ -1,0 +1,59 @@
+"""The recoverable solver zoo, end to end.
+
+Runs every registered solver (PCG, weighted Jacobi, Chebyshev, BiCGStab,
+restarted GMRES) on the same 3-D Poisson problem, injects the same
+3-block simultaneous failure mid-solve, and recovers through NVM-ESR/PRD
+— each solver persisting its own schema-declared minimal recovery set
+through the same backend machinery.
+
+    PYTHONPATH=src python examples/solver_zoo.py
+"""
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from repro.core import JacobiPreconditioner, make_poisson_problem
+from repro.solvers import (
+    SOLVERS,
+    FailurePlan,
+    SolveConfig,
+    make_backend,
+    make_solver,
+    solve,
+)
+
+
+def main() -> None:
+    op, b = make_poisson_problem(32, 16, 16, nblocks=8)
+    pre = JacobiPreconditioner(op)
+    bs = op.partition.block_size
+    bnorm = float(jnp.linalg.norm(b))
+
+    print(f"{'solver':10s} {'set':22s} {'iters':>5s} {'relres':>9s} "
+          f"{'persist(ms)':>11s} {'NVM KiB':>8s} {'wall(s)':>8s}")
+    for name in sorted(SOLVERS):
+        opts = {"m": 8} if name == "gmres" else {}
+        solver = make_solver(name, op, pre, **opts)
+        backend = make_backend("nvm-prd", op, solver=solver)
+        fail_at = 4 if name == "gmres" else 30
+        schema = solver.schema
+        set_desc = "{" + ",".join(schema.vectors + schema.scalars) + "}" \
+            + f" h={schema.history}"
+        t0 = time.perf_counter()
+        state, rep, _ = solve(
+            solver, op, b, pre, SolveConfig(tol=1e-10, maxiter=20000),
+            backend=backend, failures=[FailurePlan(fail_at, (1, 2, 6))])
+        wall = time.perf_counter() - t0
+        res = float(jnp.linalg.norm(b - op.apply(state.x))) / bnorm
+        nvm_kib = backend.nvm_values() * 8 / 1024
+        print(f"{name:10s} {set_desc:22s} {rep.iterations:5d} {res:9.1e} "
+              f"{rep.persist_cost_s*1e3:11.2f} {nvm_kib:8.0f} {wall:8.2f}")
+        assert rep.failures_recovered == 1 and rep.converged, name
+
+
+if __name__ == "__main__":
+    main()

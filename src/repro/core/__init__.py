@@ -34,4 +34,10 @@ from repro.core.poisson import (  # noqa: F401
 from repro.core.esr import InMemoryESR, UnrecoverableFailure  # noqa: F401
 from repro.core.nvm_esr import NVMESRHomogeneous, NVMESRPRD  # noqa: F401
 from repro.core.reconstruction import reconstruct  # noqa: F401
-from repro.core.state import PCGState, minimal_recovery_state  # noqa: F401
+from repro.core.state import (  # noqa: F401
+    PCG_SCHEMA,
+    PCGState,
+    RecoverySchema,
+    RecoverySet,
+    minimal_recovery_state,
+)

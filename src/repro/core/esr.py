@@ -1,11 +1,16 @@
 """In-memory ESR (the paper's baseline; Chen '11 / Pachajoa et al.).
 
-Redundancy of the search direction ``p`` is piggybacked on the SpMV
-transition (ASpMV, Algorithm 2) and replicated into the **volatile RAM of
-peer processes**.  To tolerate ``c`` simultaneous failures, ``c+1`` copies
-are placed; full fault tolerance places a copy at every process —
+Redundancy of the recovery set is piggybacked on the SpMV transition
+(ASpMV, Algorithm 2) and replicated into the **volatile RAM of peer
+processes**.  To tolerate ``c`` simultaneous failures, ``c+1`` copies are
+placed; full fault tolerance places a copy at every process —
 ``O(n * proc)`` values of RAM and an all-to-all every persistence
 iteration (paper §2 and §3.1).
+
+Since the solver-zoo generalization the payload is schema-driven
+(:class:`repro.core.state.RecoverySchema`): any solver's named
+multi-vector/multi-scalar recovery set replicates through the same copy
+placement; slot sizes and the wire format derive from the schema.
 
 Copy placement: copy ``i`` of block ``b`` lives in the RAM of rank
 ``(b + i + 1) mod nblocks``.  A failure of block set ``F`` wipes every
@@ -15,11 +20,22 @@ still has a surviving copy — which the placement guarantees whenever
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.state import RecoveryPayload, decode_payload, encode_payload
+from repro.core.state import (  # noqa: F401  (payload helpers re-exported)
+    PCG_SCHEMA,
+    RecoveryPayload,
+    RecoverySchema,
+    RecoverySet,
+    concat_sets,
+    legacy_pair,
+    peek_k,
+    require_pcg_schema,
+    shard_vectors,
+    typed_vectors,
+)
 from repro.nvm.store import TIER_SPECS, NETWORK_SPECS, CostModel, Tier
 
 
@@ -32,19 +48,26 @@ class InMemoryESR:
 
     name = "esr-inmemory"
 
-    def __init__(self, nblocks: int, block_size: int, dtype, copies: Optional[int] = None,
-                 slots: int = 3):
-        # 3 slots: the paper's logical minimum is 2 (two successive p's),
-        # plus one staging slot so a failure BETWEEN the two writes of an
-        # ESRP burst still leaves the previous pair intact.
+    def __init__(self, nblocks: int, block_size: int, dtype,
+                 copies: Optional[int] = None, slots: Optional[int] = None,
+                 schema: RecoverySchema = PCG_SCHEMA):
         self.nblocks = nblocks
         self.block_size = block_size
         self.dtype = np.dtype(dtype)
+        self.schema = schema
         # full fault tolerance by default: a copy at every other process
         self.copies = nblocks - 1 if copies is None else copies
         if not (1 <= self.copies <= nblocks - 1):
             raise ValueError(f"copies must be in [1, nblocks-1], got {self.copies}")
-        self.slots = slots
+        # Ring size 2h-1 (h = history) is the provable minimum that keeps
+        # the previous recovery run intact through an in-flight ESRP
+        # burst: with event-addressed slots mod (2h-1), burst writes
+        # 1..h-1 can never land on the old run's h slots (j - i + h is in
+        # [1, 2h-2], never 0 mod 2h-1); only the h-th write may, and at
+        # that moment the NEW run is complete.  Floor of 2 keeps a
+        # staging slot for single-state schemas (peer-RAM stores are not
+        # atomic in reality).  h=2 gives the paper's 3-slot layout.
+        self.slots = max(2, 2 * schema.history - 1) if slots is None else slots
         # ram[host_rank][(owner_block, slot)] -> payload bytes
         self.ram: List[Dict[Tuple[int, int], bytes]] = [dict() for _ in range(nblocks)]
         self._event = 0  # event-addressed slots (ESRP persists with gaps)
@@ -56,16 +79,17 @@ class InMemoryESR:
     def _hosts(self, block: int) -> List[int]:
         return [(block + i + 1) % self.nblocks for i in range(self.copies)]
 
-    def persist(self, k: int, beta: float, p_full: np.ndarray) -> float:
-        """One redundancy iteration: every block's shard is sent to its
-        ``copies`` peer hosts (modeled as the ASpMV all-to-all surplus)."""
-        p_full = np.asarray(p_full, self.dtype)
+    def persist_set(self, k: int, scalars: Mapping[str, float],
+                    vectors: Mapping[str, np.ndarray]) -> float:
+        """One redundancy iteration: every block's slot payload is sent to
+        its ``copies`` peer hosts (modeled as the ASpMV all-to-all surplus)."""
         slot = self._event % self.slots
         self._event += 1
+        typed = typed_vectors(self.schema, vectors, self.dtype)
         cost = 0.0
         for b in range(self.nblocks):
-            shard = p_full[b * self.block_size : (b + 1) * self.block_size]
-            payload = encode_payload(k, beta, shard)
+            shards = shard_vectors(self.schema, typed, b, self.block_size)
+            payload = self.schema.encode(k, scalars, shards)
             for host in self._hosts(b):
                 self.ram[host][(b, slot)] = payload
                 # network transfer + peer DRAM write (per copy)
@@ -74,52 +98,58 @@ class InMemoryESR:
         self.cost.add("persist", cost)
         return cost
 
+    def persist(self, k: int, beta: float, p_full: np.ndarray) -> float:
+        """Legacy PCG-shaped persist (pre-zoo API)."""
+        require_pcg_schema(self.schema, "persist")
+        return self.persist_set(k, {"beta": beta}, {"p": p_full})
+
     # ------------------------------------------------------------------
     def fail(self, failed_blocks: Sequence[int]) -> None:
         """Process crash: the peer-RAM copies hosted on failed ranks die too."""
         for b in failed_blocks:
             self.ram[b] = {}
 
-    def recover(self, failed_blocks: Sequence[int], k: int) -> Tuple[RecoveryPayload, RecoveryPayload]:
-        """Fetch (p^(k-1), p^(k), beta^(k-1)) for the failed union from
-        surviving peer RAM. Returns concatenated payloads (prev, cur)."""
-        prev_parts, cur_parts = [], []
-        beta = None
-        for b in failed_blocks:
-            got = {}
-            for kk in (k - 1, k):
-                payload = None
-                for host in self._hosts(b):
-                    if host in failed_blocks:
-                        continue
-                    # content-matched scan over the host's slots
-                    for sl in range(self.slots):
-                        cand = self.ram[host].get((b, sl))
-                        if cand is not None and decode_payload(cand, self.dtype).k == kk:
-                            payload = cand
-                            break
-                    if payload is not None:
-                        self.cost.add("recover", self._net.transfer_cost(len(payload)))
-                        break
-                if payload is None:
-                    raise UnrecoverableFailure(
-                        f"block {b}: no surviving copy of p^({kk}) — "
-                        f"{len(failed_blocks)} failures exceed tolerance c={self.copies - 1}"
-                    )
-                got[kk] = decode_payload(payload, self.dtype)
-            prev_parts.append(got[k - 1].p)
-            cur_parts.append(got[k].p)
-            beta = got[k].beta
-        return (
-            RecoveryPayload(k - 1, 0.0, np.concatenate(prev_parts)),
-            RecoveryPayload(k, beta, np.concatenate(cur_parts)),
+    def _find_block_set(self, block: int, kk: int,
+                        failed_blocks: Sequence[int]) -> RecoverySet:
+        for host in self._hosts(block):
+            if host in failed_blocks:
+                continue
+            # content-matched scan over the host's slots (header peek
+            # first: only the matching slot's vectors are decoded)
+            for sl in range(self.slots):
+                cand = self.ram[host].get((block, sl))
+                if cand is None or peek_k(cand) != kk:
+                    continue
+                self.cost.add("recover", self._net.transfer_cost(len(cand)))
+                return self.schema.decode(cand, self.dtype)
+        raise UnrecoverableFailure(
+            f"block {block}: no surviving copy of iteration {kk} — "
+            f"{len(failed_blocks)} failures exceed tolerance c={self.copies - 1}"
         )
+
+    def recover_set(self, failed_blocks: Sequence[int],
+                    ks: Sequence[int]) -> List[RecoverySet]:
+        """Fetch the recovery sets for iterations ``ks`` over the failed
+        union from surviving peer RAM (vectors concatenated in
+        ``failed_blocks`` order)."""
+        out = []
+        for kk in ks:
+            per_block = [self._find_block_set(b, kk, failed_blocks)
+                         for b in failed_blocks]
+            out.append(concat_sets(self.schema, per_block))
+        return out
+
+    def recover(self, failed_blocks: Sequence[int], k: int) -> Tuple[RecoveryPayload, RecoveryPayload]:
+        """Legacy PCG-shaped recover (pre-zoo API): the (k-1, k) pair."""
+        require_pcg_schema(self.schema, "recover")
+        return legacy_pair(self.recover_set(failed_blocks, (k - 1, k)))
 
     # ------------------------------------------------------------------
     def memory_overhead_values(self) -> int:
         """Redundancy values resident in system RAM.  Paper §3.1 models
-        ~2*copies*n (the two live p's); steady state here is slots(=3)*
-        copies*n — the extra n*copies is the ESRP mid-burst staging slot."""
+        ~history*copies*n (the live slots); steady state here is
+        slots*copies*n — the extra n*copies is the ESRP mid-burst staging
+        slot."""
         return sum(len(v) for host in self.ram for v in host.values()) // self.dtype.itemsize
 
     def nvm_values(self) -> int:

@@ -14,11 +14,15 @@ Two architectures:
   Recovery data stays reachable by every surviving rank even while failed
   nodes are down; reconstruction can start immediately on spare ranks.
 
-Both keep a 4-slot ring per block (pair-level double buffering): slot
-``k % 4`` holds ``(k, beta^(k-1), p^(k))``.  The newest *consecutive valid
-pair* ``(k-1, k)`` is the recovery point; a crash tearing the in-flight
-slot write leaves the previous pair intact (crash-consistency property
-tests exercise this).
+Both are **schema-driven** (solver-zoo generalization): slot payloads are
+encoded from any solver's :class:`~repro.core.state.RecoverySchema`
+(named vectors + scalars), and the slot ring is sized to the schema's
+recovery ``history`` — ``2 * history`` slots give burst-level double
+buffering: the newest *consecutive valid run* of ``history`` iterations
+is the recovery point, and a crash tearing the in-flight slot write
+leaves the previous run intact (crash-consistency property tests
+exercise this).  For PCG (history=2) this is exactly the 4-slot
+``(k-1, k)`` pair ring of the original implementation.
 
 RAM overhead: **zero** — this is the paper's headline claim; NVM holds
 ``O(n)`` values total versus ``O(n * proc)`` RAM for in-memory ESR.
@@ -26,17 +30,30 @@ RAM overhead: **zero** — this is the paper's headline claim; NVM holds
 from __future__ import annotations
 
 import os
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.esr import UnrecoverableFailure
-from repro.core.state import RecoveryPayload, decode_payload, encode_payload, payload_nbytes
+from repro.core.esr import InMemoryESR, UnrecoverableFailure
+from repro.core.state import (
+    PCG_SCHEMA,
+    RecoveryPayload,
+    RecoverySchema,
+    RecoverySet,
+    concat_sets,
+    legacy_pair,
+    peek_k,
+    require_pcg_schema,
+    shard_vectors,
+    typed_vectors,
+)
 from repro.nvm.pmdk import PmemPool
 from repro.nvm.prd import PRDNode
 from repro.nvm.store import CostModel, Store, Tier
 
-SLOTS = 4  # pair-level double buffering of (p^(k-1), p^(k))
+def ring_slots(schema: RecoverySchema) -> int:
+    """Slot-ring size: double-buffer the ``history``-long recovery run."""
+    return max(2, 2 * schema.history)
 
 
 class NVMESRHomogeneous:
@@ -52,44 +69,54 @@ class NVMESRHomogeneous:
         tier: Tier = Tier.NVM,
         pool_dir: Optional[str] = None,
         cost_model: Optional[CostModel] = None,
+        schema: RecoverySchema = PCG_SCHEMA,
     ):
         self.nblocks = nblocks
         self.block_size = block_size
         self.dtype = np.dtype(dtype)
+        self.schema = schema
+        self.slots = ring_slots(schema)
         self.cost = cost_model if cost_model is not None else CostModel()
-        slot_bytes = payload_nbytes(block_size, self.dtype)
+        slot_bytes = schema.slot_nbytes(block_size, self.dtype)
         self.pools: List[PmemPool] = []
         for b in range(nblocks):
             path = None if pool_dir is None else os.path.join(pool_dir, f"pool_{b}.pmem")
-            # x2 inside PmemPool (its own double buffer) x SLOTS/2 ring entries
-            store = Store((slot_bytes + 64) * SLOTS * 2, tier=tier, path=path,
-                          cost_model=self.cost)
+            # x2 inside PmemPool (its own double buffer) x ring entries
+            store = Store((slot_bytes + 64) * self.slots * 2, tier=tier,
+                          path=path, cost_model=self.cost)
             pool = PmemPool(store, layout="nvm-esr")
-            for s in range(SLOTS):
+            for s in range(self.slots):
                 pool.create(f"slot{s}", slot_bytes)
             self.pools.append(pool)
         self._down: set = set()
         self._event = 0  # persistence-event counter (NOT k: ESRP persists
-        #                  with gaps, and k % SLOTS would overwrite a slot
-        #                  that is still part of the last complete pair)
+        #                  with gaps, and k % slots would overwrite a slot
+        #                  that is still part of the last complete run)
 
     # ------------------------------------------------------------------
-    def persist(self, k: int, beta: float, p_full: np.ndarray) -> float:
+    def persist_set(self, k: int, scalars: Mapping[str, float],
+                    vectors: Mapping[str, np.ndarray]) -> float:
         """Persistence iteration: each block persists its own shard locally.
 
         Embarrassingly parallel across nodes (paper §5), so the modeled
         wall cost is the **max** over blocks, not the sum.
         """
-        p_full = np.asarray(p_full, self.dtype)
-        slot = self._event % SLOTS
+        slot = self._event % self.slots
         self._event += 1
+        typed = typed_vectors(self.schema, vectors, self.dtype)
         per_block = []
         for b, pool in enumerate(self.pools):
-            shard = p_full[b * self.block_size : (b + 1) * self.block_size]
-            per_block.append(pool.persist(f"slot{slot}", encode_payload(k, beta, shard)))
+            shards = shard_vectors(self.schema, typed, b, self.block_size)
+            payload = self.schema.encode(k, scalars, shards)
+            per_block.append(pool.persist(f"slot{slot}", payload))
         cost = max(per_block)
         self.cost.add("persist_wall", cost)
         return cost
+
+    def persist(self, k: int, beta: float, p_full: np.ndarray) -> float:
+        """Legacy PCG-shaped persist (pre-zoo API)."""
+        require_pcg_schema(self.schema, "persist")
+        return self.persist_set(k, {"beta": beta}, {"p": p_full})
 
     # ------------------------------------------------------------------
     def fail(self, failed_blocks: Sequence[int]) -> None:
@@ -105,56 +132,57 @@ class NVMESRHomogeneous:
             self.pools[b].recover()
             self._down.discard(b)
 
-    def recover(self, failed_blocks: Sequence[int], k: int) -> Tuple[RecoveryPayload, RecoveryPayload]:
+    def recover_set(self, failed_blocks: Sequence[int],
+                    ks: Sequence[int]) -> List[RecoverySet]:
         # Homogeneous recovery requires the failed nodes to be up again.
         self.node_recovered(failed_blocks)
-        prev_parts, cur_parts, beta = [], [], None
+        per_k = {kk: [] for kk in ks}
         for b in failed_blocks:
             pool = self.pools[b]
             # content-matched scan: slots are event-addressed, so find the
-            # wanted iterations by the k stored in each valid slot
+            # wanted iterations by the k stored in each valid slot (header
+            # peek first; only matching slots decode their vectors)
             found = {}
-            for sl in range(SLOTS):
+            for sl in range(self.slots):
                 raw = pool.read(f"slot{sl}")
                 if raw is not None:
-                    payload = decode_payload(raw, self.dtype)
-                    found[payload.k] = payload
-            got = {}
-            for kk in (k - 1, k):
+                    found[peek_k(raw)] = raw
+            for kk in ks:
                 if kk not in found:
                     raise UnrecoverableFailure(
-                        f"block {b}: no valid slot holds p^({kk}) "
+                        f"block {b}: no valid slot holds iteration {kk} "
                         f"(have {sorted(found)})")
-                got[kk] = found[kk]
-            prev_parts.append(got[k - 1].p)
-            cur_parts.append(got[k].p)
-            beta = got[k].beta
-        return (
-            RecoveryPayload(k - 1, 0.0, np.concatenate(prev_parts)),
-            RecoveryPayload(k, beta, np.concatenate(cur_parts)),
-        )
+                per_k[kk].append(self.schema.decode(found[kk], self.dtype))
+        return [concat_sets(self.schema, per_k[kk]) for kk in ks]
 
-    def latest_pair(self, block: int = 0) -> Optional[int]:
-        """Newest k with a valid consecutive (k-1, k) pair on ``block``."""
+    def recover(self, failed_blocks: Sequence[int], k: int) -> Tuple[RecoveryPayload, RecoveryPayload]:
+        """Legacy PCG-shaped recover (pre-zoo API): the (k-1, k) pair."""
+        require_pcg_schema(self.schema, "recover")
+        return legacy_pair(self.recover_set(failed_blocks, (k - 1, k)))
+
+    def latest_run(self, block: int = 0) -> Optional[int]:
+        """Newest k ending a valid consecutive ``history``-run on ``block``."""
         pool = self.pools[block]
-        ks = []
-        for s in range(SLOTS):
+        ks = set()
+        for s in range(self.slots):
             raw = pool.read(f"slot{s}")
             if raw is not None:
-                ks.append(decode_payload(raw, self.dtype).k)
-        ks = sorted(set(ks))
+                ks.add(peek_k(raw))
         best = None
-        for k in ks:
-            if k - 1 in ks:
+        for k in sorted(ks):
+            if all(k - i in ks for i in range(self.schema.history)):
                 best = k
         return best
+
+    # legacy alias (PCG pair semantics)
+    latest_pair = latest_run
 
     # ------------------------------------------------------------------
     def memory_overhead_values(self) -> int:
         return 0  # the headline claim: zero RAM redundancy
 
     def nvm_values(self) -> int:
-        return SLOTS * self.nblocks * self.block_size
+        return self.slots * len(self.schema.vectors) * self.nblocks * self.block_size
 
 
 class NVMESRPRD:
@@ -172,15 +200,19 @@ class NVMESRPRD:
         path: Optional[str] = None,
         cost_model: Optional[CostModel] = None,
         async_drain: bool = True,
+        schema: RecoverySchema = PCG_SCHEMA,
     ):
         self.nblocks = nblocks
         self.block_size = block_size
         self.dtype = np.dtype(dtype)
-        slot_bytes = payload_nbytes(block_size, self.dtype)
-        # PRDNode double-buffers by seq parity (2 slots/rank); a 4-slot ring
-        # per block is obtained with two *virtual* ranks per block.
+        self.schema = schema
+        slot_bytes = schema.slot_nbytes(block_size, self.dtype)
+        # PRDNode double-buffers by seq parity (2 slots/rank); a
+        # ``ring_slots``-deep ring per block is obtained with
+        # ``ring_slots/2`` *virtual* ranks per block.
+        self.vranks = ring_slots(schema) // 2
         self.prd = PRDNode(
-            nranks=nblocks * 2,
+            nranks=nblocks * self.vranks,
             capacity_per_rank=slot_bytes,
             tier=tier,
             network=network,
@@ -192,26 +224,32 @@ class NVMESRPRD:
         self._event = 0  # persistence-event counter (see NVMESRHomogeneous)
 
     # ------------------------------------------------------------------
-    def persist(self, k: int, beta: float, p_full: np.ndarray) -> float:
+    def persist_set(self, k: int, scalars: Mapping[str, float],
+                    vectors: Mapping[str, np.ndarray]) -> float:
         """One PSCW persistence epoch (paper Fig. 4): all blocks put their
         shard + header, complete, and proceed; the PRD target drains and
         flushes asynchronously.  Returns the origin-visible modeled cost."""
-        p_full = np.asarray(p_full, self.dtype)
         e = self._event
         self._event += 1
-        vr = (e >> 1) & 1        # 4-ring: (vrank offset, parity) by event
-        group = [b * 2 + vr for b in range(self.nblocks)]
+        vr = (e >> 1) % self.vranks  # ring: (vrank offset, parity) by event
+        group = [b * self.vranks + vr for b in range(self.nblocks)]
         self.prd.begin_epoch(group)
+        typed = typed_vectors(self.schema, vectors, self.dtype)
         origin = 0.0
         for b in range(self.nblocks):
-            shard = p_full[b * self.block_size : (b + 1) * self.block_size]
-            payload = encode_payload(k, beta, shard)
+            shards = shard_vectors(self.schema, typed, b, self.block_size)
+            payload = self.schema.encode(k, scalars, shards)
             # header seq carries k+1 (content id); the slot is event-chosen
-            origin += self.prd.put_rank(b * 2 + vr, payload, seq=k + 1,
-                                        slot=e & 1)
+            origin += self.prd.put_rank(b * self.vranks + vr, payload,
+                                        seq=k + 1, slot=e & 1)
         self.prd.end_epoch()
         self.cost.add("persist_origin", origin)
         return origin
+
+    def persist(self, k: int, beta: float, p_full: np.ndarray) -> float:
+        """Legacy PCG-shaped persist (pre-zoo API)."""
+        require_pcg_schema(self.schema, "persist")
+        return self.persist_set(k, {"beta": beta}, {"p": p_full})
 
     def drain(self) -> float:
         """Join the PRD exposure epoch (target-side persist)."""
@@ -223,39 +261,44 @@ class NVMESRPRD:
         stays reachable (the PRD architecture's defining property)."""
         self.drain()  # epochs in flight still complete on the PRD side
 
-    def recover(self, failed_blocks: Sequence[int], k: int) -> Tuple[RecoveryPayload, RecoveryPayload]:
-        prev_parts, cur_parts, beta = [], [], None
+    def recover_set(self, failed_blocks: Sequence[int],
+                    ks: Sequence[int]) -> List[RecoverySet]:
+        per_k = {kk: [] for kk in ks}
         for b in failed_blocks:
-            got = {}
-            for kk in (k - 1, k):
-                payload = None
-                for vr in (0, 1):  # content-matched scan over the 4-ring
-                    found = self.prd.read_latest(b * 2 + vr, want_seq=kk + 1)
+            for kk in ks:
+                rset = None
+                for vr in range(self.vranks):  # content-matched ring scan
+                    found = self.prd.read_latest(b * self.vranks + vr,
+                                                 want_seq=kk + 1)
                     if found is not None:
-                        payload = decode_payload(found[1], self.dtype)
+                        rset = self.schema.decode(found[1], self.dtype)
                         break
-                if payload is None or payload.k != kk:
+                if rset is None or rset.k != kk:
                     raise UnrecoverableFailure(
-                        f"block {b}: no valid PRD slot holds p^({kk})")
-                got[kk] = payload
-            prev_parts.append(got[k - 1].p)
-            cur_parts.append(got[k].p)
-            beta = got[k].beta
-        return (
-            RecoveryPayload(k - 1, 0.0, np.concatenate(prev_parts)),
-            RecoveryPayload(k, beta, np.concatenate(cur_parts)),
-        )
+                        f"block {b}: no valid PRD slot holds iteration {kk}")
+                per_k[kk].append(rset)
+        return [concat_sets(self.schema, per_k[kk]) for kk in ks]
+
+    def recover(self, failed_blocks: Sequence[int], k: int) -> Tuple[RecoveryPayload, RecoveryPayload]:
+        """Legacy PCG-shaped recover (pre-zoo API): the (k-1, k) pair."""
+        require_pcg_schema(self.schema, "recover")
+        return legacy_pair(self.recover_set(failed_blocks, (k - 1, k)))
 
     # ------------------------------------------------------------------
     def memory_overhead_values(self) -> int:
         return 0
 
     def nvm_values(self) -> int:
-        return SLOTS * self.nblocks * self.block_size
+        return (2 * self.vranks * len(self.schema.vectors)
+                * self.nblocks * self.block_size)
 
 
+# Backend registry: every entry resolves to a constructor callable
+# ``(nblocks, block_size, dtype, **opts) -> backend``.  The richer
+# solver-zoo view (backends x solvers by name) lives in
+# :mod:`repro.solvers.registry`, which re-exports this table.
 BACKENDS = {
-    "esr": "repro.core.esr.InMemoryESR",
+    "esr": InMemoryESR,
     "nvm-homogeneous": NVMESRHomogeneous,
     "nvm-prd": NVMESRPRD,
 }

@@ -1,16 +1,19 @@
 """Distributed Preconditioned Conjugate Gradient with ESR recovery.
 
-Implements paper Algorithm 1 (PCG), Algorithm 2/4 (redundancy /
-persistence iterations) and drives Algorithm 3/5 (reconstruction) through
-pluggable recovery backends (:mod:`repro.core.esr`,
-:mod:`repro.core.nvm_esr`).
+Implements paper Algorithm 1 (PCG) and drives Algorithm 2/4 (redundancy /
+persistence iterations) and Algorithm 3/5 (reconstruction) through the
+generic solver driver (:mod:`repro.solvers.driver`) and pluggable
+recovery backends (:mod:`repro.core.esr`, :mod:`repro.core.nvm_esr`).
 
 Two execution paths:
 
 - :func:`solve` — Python driver around a jitted iteration.  Supports the
   persistence schedule (classic ESR: every iteration; ESRP: period ``T``),
   failure injection, recovery, and convergence monitoring.  This is the
-  paper-faithful path used by tests/benchmarks.
+  paper-faithful path used by tests/benchmarks.  Since the solver-zoo
+  generalization it is a thin shim over ``repro.solvers.driver.solve``
+  with the PCG solver adapter — kept because PCG is the paper's subject
+  and the most convenient entry point.
 - :func:`solve_jit` — fully fused ``lax.while_loop`` solver (no recovery
   hooks) used for performance baselines and the dry-run lowering.
 
@@ -21,44 +24,21 @@ numerically conventional choice.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import reconstruction
-from repro.core.state import PCGState, wipe_blocks
+from repro.core.state import PCGState
+from repro.solvers.driver import (  # noqa: F401  (re-exported public API)
+    FailurePlan,
+    SolveConfig,
+    SolveReport,
+)
+from repro.solvers import driver as _driver
 
-
-@dataclasses.dataclass(frozen=True)
-class PCGConfig:
-    tol: float = 1e-10            # relative residual tolerance ||r|| / ||b||
-    maxiter: int = 10_000
-    persistence_period: int = 1   # T=1: classic ESR; T>1: ESRP bursts
-    local_solve: str = "auto"     # reconstruction local solver
-
-
-@dataclasses.dataclass(frozen=True)
-class FailurePlan:
-    """Inject a failure of ``blocks`` right after iteration ``at_iteration``."""
-
-    at_iteration: int
-    blocks: Tuple[int, ...]
-
-
-@dataclasses.dataclass
-class SolveReport:
-    iterations: int = 0
-    wasted_iterations: int = 0
-    failures_recovered: int = 0
-    converged: bool = False
-    final_relres: float = float("nan")
-    persist_cost_s: float = 0.0
-    persist_events: int = 0
-    residual_history: List[float] = dataclasses.field(default_factory=list)
+# The historical name: PCG predates the zoo; its config IS the generic one.
+PCGConfig = SolveConfig
 
 
 def init_state(op, precond, b: jax.Array, x0: Optional[jax.Array] = None) -> PCGState:
@@ -89,11 +69,9 @@ def make_step(op_apply: Callable, precond_apply: Callable) -> Callable[[PCGState
 
 
 def should_persist(k: int, period: int) -> bool:
-    """Persistence schedule: classic ESR persists every iteration; ESRP
-    persists bursts of two successive iterations every ``period``."""
-    if period <= 1:
-        return True
-    return k % period in (0, 1)
+    """PCG persistence schedule (pair bursts); see the generic
+    :func:`repro.solvers.driver.should_persist`."""
+    return _driver.should_persist(k, period, history=2)
 
 
 def solve(
@@ -112,82 +90,12 @@ def solve(
     for plain PCG).  ``failures`` injects block crashes.  Returns the
     final state, a report, and any states captured for verification.
     """
-    step = jax.jit(make_step(op.apply, precond.apply))
-    state = init_state(op, precond, b, x0)
-    bnorm = float(jnp.linalg.norm(b))
-    report = SolveReport()
-    captured: Dict[int, PCGState] = {}
-    pending = sorted(failures, key=lambda f: f.at_iteration)
-    pending_idx = 0
+    from repro.solvers.pcg import PCGSolver  # local: solvers.pcg imports us
 
-    # Survivor-side snapshot at the last completed persistence pair: the
-    # surviving processes' own state copy kept in their local RAM (cheap,
-    # one shard each).  Needed to roll back to the recovery point when
-    # persistence is periodic (ESRP trade-off, paper §2).
-    snapshot: Optional[PCGState] = None
-    last_persisted_k = -10
-
-    def persist_now(st: PCGState) -> None:
-        nonlocal snapshot, last_persisted_k
-        if backend is None:
-            return
-        k = int(st.k)
-        cost = backend.persist(k, float(st.beta_prev), np.asarray(st.p))
-        report.persist_cost_s += cost
-        report.persist_events += 1
-        if last_persisted_k == k - 1 or k == 0:
-            # pair (k-1, k) now durable (or initial state) -> new recovery point
-            snapshot = st
-        last_persisted_k = k
-
-    # Iteration 0 state counts as persisted so the first pair completes at k=1.
-    persist_now(state)
-
-    while int(state.k) < config.maxiter:
-        k = int(state.k)
-        if k in capture_states_at:
-            captured[k] = state
-
-        relres = float(jnp.linalg.norm(state.r)) / bnorm
-        report.residual_history.append(relres)
-        if relres < config.tol:
-            report.converged = True
-            break
-
-        # ---- failure injection + recovery ----
-        if pending_idx < len(pending) and k == pending[pending_idx].at_iteration and k > 0:
-            plan = pending[pending_idx]
-            pending_idx += 1
-            if backend is None:
-                raise RuntimeError("failure injected but no recovery backend configured")
-            state = wipe_blocks(state, op.partition, plan.blocks)  # VM lost
-            backend.fail(plan.blocks)
-            assert snapshot is not None, "no completed persistence pair before failure"
-            k_rec = int(snapshot.k)
-            report.wasted_iterations += k - k_rec  # ESRP discard cost
-            prev, cur = backend.recover(plan.blocks, k_rec)
-            state = reconstruction.reconstruct(
-                op, precond, b,
-                state_surviving=snapshot,
-                failed_blocks=list(plan.blocks),
-                p_prev_f=jnp.asarray(prev.p, b.dtype),
-                p_cur_f=jnp.asarray(cur.p, b.dtype),
-                beta=cur.beta,
-                local_method=config.local_solve,
-            )
-            report.failures_recovered += 1
-            if int(state.k) in capture_states_at:
-                captured[int(state.k)] = state
-            continue
-
-        state = step(state)
-        if backend is not None and should_persist(int(state.k), config.persistence_period):
-            persist_now(state)
-
-    report.iterations = int(state.k)
-    report.final_relres = float(jnp.linalg.norm(state.r)) / bnorm
-    report.converged = report.converged or report.final_relres < config.tol
-    return state, report, captured
+    return _driver.solve(
+        PCGSolver(), op, b, precond, config=config, backend=backend,
+        failures=failures, x0=x0, capture_states_at=capture_states_at,
+    )
 
 
 def solve_jit(

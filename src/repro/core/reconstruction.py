@@ -16,7 +16,7 @@ blocks or matrix-free local CG for large ones.
 from __future__ import annotations
 
 from functools import partial
-from typing import Sequence
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,23 +69,53 @@ def solve_local(apply_fn, rhs: jax.Array, method: str = "auto") -> jax.Array:
     raise ValueError(f"unknown local solve method {method!r}")
 
 
-def reconstruct(
+def solve_x_from_residual(
+    op,
+    b: jax.Array,
+    x_surviving: jax.Array,
+    r_f: jax.Array,
+    failed: Sequence[int],
+    local_method: str = "auto",
+) -> jax.Array:
+    """Algorithm 3 lines 7-8: solve ``A[F,F] x_F = b_F - r_F - A[F,~F] x_{~F}``
+    and return the full ``x`` with the failed union restored."""
+    part = op.partition
+    x_clean = part.scatter(x_surviving, jnp.zeros_like(r_f), failed)
+    w = part.restrict(b, failed) - r_f - op.offblock_apply(x_clean, failed)
+    x_f = solve_local(lambda u: op.inblock_apply(u, failed), w, local_method)
+    return part.scatter(x_surviving, x_f, failed)
+
+
+def residual_on_failed(op, b: jax.Array, x: jax.Array,
+                       failed: Sequence[int]) -> jax.Array:
+    """``r_F = b_F - A[F,F] x_F - A[F,~F] x_{~F}`` — the direct residual
+    restriction, used by solvers whose recovery set contains ``x`` itself
+    (weighted Jacobi, restarted GMRES)."""
+    part = op.partition
+    return (part.restrict(b, failed)
+            - op.inblock_apply(part.restrict(x, failed), failed)
+            - op.offblock_apply(x, failed))
+
+
+def reconstruct_direction_form(
     op,
     precond,
     b: jax.Array,
-    state_surviving: PCGState,
+    state_surviving,
     failed_blocks: Sequence[int],
     p_prev_f: jax.Array,
     p_cur_f: jax.Array,
     beta: float,
     local_method: str = "auto",
-) -> PCGState:
-    """Run Algorithm 3 and return the fully reconstructed state at ``k``.
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Algorithm 3 core for any solver with the three-term direction
+    structure ``p^(k) = z^(k) + beta^(k) p^(k-1)`` (PCG, Chebyshev).
 
-    ``state_surviving`` carries valid data on surviving blocks (failed
-    shards may be garbage — they are overwritten).  ``p_prev_f``/``p_cur_f``
-    are the persisted shards for the failed union, concatenated in
-    ``failed_blocks`` order.
+    ``state_surviving`` carries valid ``x, r, z, p`` on surviving blocks
+    (failed shards may be garbage — they are overwritten).
+    ``p_prev_f``/``p_cur_f`` are the persisted shards for the failed
+    union, concatenated in ``failed_blocks`` order.  Returns the fully
+    restored ``(x, r, z, p)``.
     """
     part = op.partition
     failed = list(failed_blocks)
@@ -99,15 +129,30 @@ def reconstruct(
     r_f = precond.block_solve(v, failed)
 
     # Lines 7-8: solve A[F,F] x_F = b_F - r_F - A[F,~F] x_{~F}
-    x_clean = part.scatter(state_surviving.x, jnp.zeros_like(z_f), failed)
-    w = part.restrict(b, failed) - r_f - op.offblock_apply(x_clean, failed)
-    x_f = solve_local(lambda u: op.inblock_apply(u, failed), w, local_method)
+    x = solve_x_from_residual(op, b, state_surviving.x, r_f, failed, local_method)
 
-    # Reassemble the global state; p_F comes straight from the redundancy.
-    x = part.scatter(state_surviving.x, x_f, failed)
+    # Reassemble; p_F comes straight from the redundancy.
     r = part.scatter(state_surviving.r, r_f, failed)
     z = part.scatter(state_surviving.z, z_f, failed)
     p = part.scatter(state_surviving.p, p_cur_f, failed)
+    return x, r, z, p
+
+
+def reconstruct(
+    op,
+    precond,
+    b: jax.Array,
+    state_surviving: PCGState,
+    failed_blocks: Sequence[int],
+    p_prev_f: jax.Array,
+    p_cur_f: jax.Array,
+    beta: float,
+    local_method: str = "auto",
+) -> PCGState:
+    """Run Algorithm 3 and return the fully reconstructed PCG state at ``k``."""
+    x, r, z, p = reconstruct_direction_form(
+        op, precond, b, state_surviving, failed_blocks,
+        p_prev_f, p_cur_f, beta, local_method)
     rz = jnp.vdot(r, z)  # global reduction (replaces the replicated scalar)
     return PCGState(
         x=x, r=r, z=z, p=p, rz=rz,

@@ -26,6 +26,8 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import compat
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.poisson import stencil7
@@ -160,8 +162,8 @@ def make_shardmap_pcg_step(
         out_specs["esr_red_prev"] = P()
         out_specs["esr_red_cur"] = P()
 
-    step = jax.shard_map(step_local, mesh=mesh, in_specs=(in_specs,),
-                         out_specs=out_specs, check_vma=False)
+    step = compat.shard_map(step_local, mesh=mesh, in_specs=(in_specs,),
+                            out_specs=out_specs)
 
     def spec(nz: int, ny: int, nx: int):
         grid = jax.ShapeDtypeStruct((nz, ny, nx), dtype)

@@ -1,19 +1,121 @@
-"""Solver state pytrees and minimal-state identification.
+"""Solver state pytrees and minimal-recovery-set schemas.
 
-Following the generic strategy of Pachajoa et al. [14], the *minimal*
-persistent set for PCG is ``{p^(k), p^(k-1), beta^(k-1), k}`` — every other
-state variable (x, r, z, and the scalars) is reconstructible from it plus
-surviving shards and static data.  This module defines the state pytree
-and the extraction of the minimal set.
+Following the generic strategy of Pachajoa et al. [14], an ESR-recoverable
+iterative solver persists a *minimal* set of named vectors and scalars per
+iteration from which every lost shard is exactly reconstructible.  For PCG
+that set is ``{p^(k), p^(k-1), beta^(k-1), k}``; other solvers persist
+different payloads (weighted Jacobi: ``{x^(k)}``; BiCGStab:
+``{r^(k), p^(k), rho, alpha, omega}``; restarted GMRES: ``{x^(k)}`` at
+restart boundaries).
+
+:class:`RecoverySchema` declares a solver's recovery set — which vectors
+are block-sharded and persisted, which replicated scalars ride along, and
+how many *consecutive* persisted iterations recovery needs (``history``;
+2 for the PCG pair, 1 for single-state solvers).  The ESR backends size
+their slots and encode/decode payloads purely from the schema, so any
+:class:`~repro.solvers.base.RecoverableSolver` persists through any
+backend unchanged.
+
+Slot wire format (one block's shard of one iteration)::
+
+    k:int64 | scalars (f64 each, schema order) | vector shards (schema order)
 """
 from __future__ import annotations
 
+import dataclasses
 import struct
-from typing import NamedTuple, Tuple
+from typing import Dict, Mapping, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_K_HEADER = struct.Struct("<q")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoverySchema:
+    """Declares the minimal recovery set persisted by one solver.
+
+    ``vectors``: names of block-sharded vectors, persisted shard-wise.
+    ``scalars``: names of replicated scalars persisted alongside each slot.
+    ``history``: number of *consecutive* persisted iterations a recovery
+    needs (PCG reconstructs from the pair ``(k-1, k)`` -> 2; solvers whose
+    full state is derivable from one persisted iteration -> 1).
+    """
+
+    solver: str
+    vectors: Tuple[str, ...]
+    scalars: Tuple[str, ...] = ()
+    history: int = 2
+
+    def __post_init__(self):
+        if not self.vectors:
+            raise ValueError("a recovery schema needs at least one vector")
+        if self.history < 1:
+            raise ValueError(f"history must be >= 1, got {self.history}")
+
+    # ------------------------------------------------------------------
+    def slot_nbytes(self, block_size: int, dtype) -> int:
+        """Payload bytes of one block's slot (excludes backend headers)."""
+        return (
+            _K_HEADER.size
+            + 8 * len(self.scalars)
+            + len(self.vectors) * block_size * np.dtype(dtype).itemsize
+        )
+
+    def encode(
+        self,
+        k: int,
+        scalars: Mapping[str, float],
+        vector_shards: Mapping[str, np.ndarray],
+    ) -> bytes:
+        """Serialize one block's slot payload (dtype fixed by caller)."""
+        parts = [_K_HEADER.pack(int(k))]
+        parts.append(struct.pack(f"<{len(self.scalars)}d",
+                                 *(float(scalars[s]) for s in self.scalars)))
+        for name in self.vectors:
+            parts.append(np.ascontiguousarray(vector_shards[name]).tobytes())
+        return b"".join(parts)
+
+    def decode(self, raw: bytes, dtype) -> "RecoverySet":
+        (k,) = _K_HEADER.unpack(raw[: _K_HEADER.size])
+        off = _K_HEADER.size
+        ns = len(self.scalars)
+        vals = struct.unpack(f"<{ns}d", raw[off : off + 8 * ns])
+        off += 8 * ns
+        flat = np.frombuffer(raw[off:], dtype=dtype)
+        if len(flat) % len(self.vectors):
+            raise ValueError(
+                f"payload holds {len(flat)} values, not divisible by "
+                f"{len(self.vectors)} schema vectors")
+        per = len(flat) // len(self.vectors)
+        vectors = {
+            name: flat[i * per : (i + 1) * per].copy()
+            for i, name in enumerate(self.vectors)
+        }
+        return RecoverySet(k=k, scalars=dict(zip(self.scalars, vals)),
+                           vectors=vectors)
+
+
+def peek_k(raw: bytes) -> int:
+    """Read a slot payload's iteration header without decoding the
+    vectors — content-matched slot scans probe many slots per recovery
+    and only decode the one whose ``k`` matches."""
+    return _K_HEADER.unpack(raw[: _K_HEADER.size])[0]
+
+
+class RecoverySet(NamedTuple):
+    """One iteration's decoded recovery payload.
+
+    ``vectors`` maps names to either a single block shard or the
+    concatenated union of failed-block shards (backend ``recover_set``
+    returns the latter, in ``failed_blocks`` order).
+    """
+
+    k: int
+    scalars: Dict[str, float]
+    vectors: Dict[str, np.ndarray]
 
 
 class PCGState(NamedTuple):
@@ -35,30 +137,34 @@ class PCGState(NamedTuple):
     k: jax.Array
 
 
+# The paper's PCG recovery set: {p^(k), p^(k-1), beta^(k-1), k}.  The two
+# p's come from two consecutive slots (history=2); beta rides in the
+# newer slot.
+PCG_SCHEMA = RecoverySchema("pcg", vectors=("p",), scalars=("beta",), history=2)
+
+
 class RecoveryPayload(NamedTuple):
-    """Minimal recovery data persisted at iteration ``k`` (one slot)."""
+    """Legacy PCG-shaped recovery slot (kept for the Fig. 9/10 benchmark
+    paths and any external caller of the pre-zoo backend API)."""
 
     k: int
     beta: float  # beta^(k-1): the scalar linking p^(k-1) -> p^(k)
     p: np.ndarray  # p^(k), the block shard (or full vector)
 
 
-_SCALARS = struct.Struct("<qd")  # k, beta
-
-
 def encode_payload(k: int, beta: float, p_block: np.ndarray) -> bytes:
-    """Serialize one slot's recovery payload (dtype fixed by caller)."""
-    return _SCALARS.pack(int(k), float(beta)) + np.ascontiguousarray(p_block).tobytes()
+    """Serialize one PCG slot (wire-compatible with the generic codec)."""
+    return PCG_SCHEMA.encode(k, {"beta": beta}, {"p": p_block})
 
 
 def decode_payload(raw: bytes, dtype) -> RecoveryPayload:
-    k, beta = _SCALARS.unpack(raw[: _SCALARS.size])
-    p = np.frombuffer(raw[_SCALARS.size :], dtype=dtype).copy()
-    return RecoveryPayload(k=k, beta=beta, p=p)
+    rset = PCG_SCHEMA.decode(raw, dtype)
+    return RecoveryPayload(k=rset.k, beta=rset.scalars["beta"],
+                           p=rset.vectors["p"])
 
 
 def payload_nbytes(block_size: int, dtype) -> int:
-    return _SCALARS.size + block_size * np.dtype(dtype).itemsize
+    return PCG_SCHEMA.slot_nbytes(block_size, dtype)
 
 
 def minimal_recovery_state(state: PCGState) -> Tuple[int, float, jax.Array]:
@@ -66,16 +172,81 @@ def minimal_recovery_state(state: PCGState) -> Tuple[int, float, jax.Array]:
     return int(state.k), float(state.beta_prev), state.p
 
 
-def wipe_blocks(state: PCGState, partition, blocks) -> PCGState:
-    """Simulate failure of ``blocks``: their shards of every volatile
-    vector become garbage (NaN), as their VM is lost (paper §3 model)."""
+# ----------------------------------------------------------------------
+# Schema payload plumbing shared by every persistence backend.
+# ----------------------------------------------------------------------
+def typed_vectors(
+    schema: RecoverySchema,
+    vectors: Mapping[str, np.ndarray],
+    dtype,
+) -> Dict[str, np.ndarray]:
+    """Convert every schema vector to the backend dtype ONCE per persist
+    event (callers then shard by slicing — converting inside the
+    per-block loop would copy each full vector nblocks times)."""
+    return {name: np.asarray(vectors[name], dtype) for name in schema.vectors}
+
+
+def shard_vectors(
+    schema: RecoverySchema,
+    vectors: Mapping[str, np.ndarray],
+    block: int,
+    block_size: int,
+) -> Dict[str, np.ndarray]:
+    """One block's shard of every (already-typed) schema vector."""
+    lo, hi = block * block_size, (block + 1) * block_size
+    return {name: vectors[name][lo:hi] for name in schema.vectors}
+
+
+def concat_sets(schema: RecoverySchema, per_block) -> RecoverySet:
+    """Merge per-block recovery sets into one union set (block order kept)."""
+    first = per_block[0]
+    return RecoverySet(
+        k=first.k,
+        scalars=dict(first.scalars),
+        vectors={name: np.concatenate([s.vectors[name] for s in per_block])
+                 for name in schema.vectors},
+    )
+
+
+def legacy_pair(sets) -> Tuple["RecoveryPayload", "RecoveryPayload"]:
+    """Map a PCG-schema (prev, cur) recovery to the legacy payload pair."""
+    prev, cur = sets[-2], sets[-1]
+    return (
+        RecoveryPayload(prev.k, 0.0, prev.vectors["p"]),
+        RecoveryPayload(cur.k, cur.scalars["beta"], cur.vectors["p"]),
+    )
+
+
+def require_pcg_schema(schema: RecoverySchema, api: str) -> None:
+    """Guard for the legacy ``persist``/``recover`` backend shims, which
+    speak PCG payloads only — fail with a pointer instead of a KeyError
+    deep in the codec."""
+    if (schema.vectors, schema.scalars, schema.history) != (("p",), ("beta",), 2):
+        raise TypeError(
+            f"the legacy {api}() API carries PCG payloads only, but this "
+            f"backend persists schema {schema.solver!r}; use "
+            f"persist_set()/recover_set()")
+
+
+def wipe_vectors(state, partition, blocks, vector_fields, nan_scalars=()):
+    """Simulate failure of ``blocks`` on any NamedTuple solver state: the
+    failed shards of every volatile vector become garbage (NaN), as their
+    VM is lost (paper §3 model); non-replicated reduction scalars are
+    NaN'd too (they are recomputed during reconstruction)."""
     nan = float("nan")
+    idx = jnp.asarray(list(blocks))
 
     def wipe(v):
         vb = v.reshape(partition.nblocks, partition.block_size)
-        return vb.at[jnp.asarray(list(blocks))].set(nan).reshape(-1)
+        return vb.at[idx].set(nan).reshape(-1)
 
-    return state._replace(
-        x=wipe(state.x), r=wipe(state.r), z=wipe(state.z), p=wipe(state.p),
-        rz=jnp.asarray(nan, state.rz.dtype),
-    )
+    repl = {f: wipe(getattr(state, f)) for f in vector_fields}
+    for f in nan_scalars:
+        repl[f] = jnp.asarray(nan, getattr(state, f).dtype)
+    return state._replace(**repl)
+
+
+def wipe_blocks(state: PCGState, partition, blocks) -> PCGState:
+    """PCG-shaped :func:`wipe_vectors` (legacy entry point)."""
+    return wipe_vectors(state, partition, blocks, ("x", "r", "z", "p"),
+                        nan_scalars=("rz",))

@@ -10,13 +10,21 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the installed jax
+    supports them (>= 0.5); older jax has no ``axis_types`` kwarg and
+    every mesh axis is implicitly auto-sharded already."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return compat_make_mesh(shape, axes)
 
 
 def make_mesh_for(devices: int, model_parallel: int = None) -> jax.sharding.Mesh:
@@ -25,10 +33,7 @@ def make_mesh_for(devices: int, model_parallel: int = None) -> jax.sharding.Mesh
     while devices % model:
         model -= 1
     data = devices // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 # Hardware constants for the roofline (TPU v5e per chip).

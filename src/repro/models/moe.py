@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.distributed.sharding import current_rules
 from repro.models.config import ModelConfig
 from repro.models.layers import Params, _dense_init
@@ -143,12 +144,11 @@ def moe(p: Params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array
                    batch_axes=batch_axes)
     x_spec = P(batch_axes if batch_axes else None, None, None)
     gate_spec = rules.spec("experts", "fsdp", None) if w_gate is not None else None
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(x_spec, P(None, None), rules.spec("experts", "fsdp", None),
                   gate_spec, rules.spec("experts", None, "fsdp")),
         out_specs=(x_spec, P()),
-        check_vma=False,
     )(x, p["router"], p["w_in"], w_gate, p["w_out"])
     return out.astype(x.dtype), aux

@@ -1,0 +1,42 @@
+"""The recoverable solver zoo: generic ESR for distributed iterative solvers.
+
+The paper formulates exact state reconstruction (ESR) for PCG; the
+mechanism — persist a minimal recovery set, rebuild lost shards exactly
+from it plus surviving shards and static data — applies to any iteration
+whose state is derivable from a few persisted vectors.  This package
+generalizes the machinery:
+
+- :mod:`repro.solvers.base` — the :class:`RecoverableSolver` interface
+  and :class:`~repro.core.state.RecoverySchema`-driven payloads.
+- :mod:`repro.solvers.driver` — the generic solve loop (persistence
+  schedule, failure injection, survivor snapshot, recovery, reporting).
+- solver adapters: :mod:`~repro.solvers.pcg` (history-2 pair, the paper),
+  :mod:`~repro.solvers.chebyshev` (reduction-free scalars),
+  :mod:`~repro.solvers.jacobi` and :mod:`~repro.solvers.gmres`
+  (single-vector ``{x}`` sets), :mod:`~repro.solvers.bicgstab`
+  (multi-vector ``{r, p}`` set).
+- :mod:`repro.solvers.registry` — sweep solvers x backends by name.
+"""
+from repro.solvers.base import RecoverableSolver  # noqa: F401
+from repro.solvers.bicgstab import BICGSTAB_SCHEMA, BiCGStabSolver  # noqa: F401
+from repro.solvers.chebyshev import (  # noqa: F401
+    CHEBYSHEV_SCHEMA,
+    ChebyshevSolver,
+    spectral_bounds,
+)
+from repro.solvers.driver import (  # noqa: F401
+    FailurePlan,
+    SolveConfig,
+    SolveReport,
+    should_persist,
+    solve,
+)
+from repro.solvers.gmres import GMRES_SCHEMA, RestartedGMRESSolver  # noqa: F401
+from repro.solvers.jacobi import JACOBI_SCHEMA, WeightedJacobiSolver  # noqa: F401
+from repro.solvers.pcg import PCGSolver  # noqa: F401
+from repro.solvers.registry import (  # noqa: F401
+    BACKENDS,
+    SOLVERS,
+    make_backend,
+    make_solver,
+)

@@ -1,0 +1,121 @@
+"""BiCGStab as a :class:`RecoverableSolver`.
+
+Preconditioned BiCGStab (van der Vorst '92), right-preconditioned form:
+the state carries the *true* residual ``r = b - A x``, so convergence
+monitoring and recovery share PCG's invariants.
+
+Minimal recovery set: ``{r^(k), p^(k), rho_k, alpha_k, omega_k}`` —
+**two** vectors and **three** scalars, history 1 (no consecutive pair):
+the first zoo member exercising genuinely multi-vector schema slots.
+Reconstruction at the recovery point:
+
+    r_F, p_F              <- persisted
+    A[F,F] x_F = b_F - r_F - A[F,~F] x_{~F}     (local solve, Alg. 3 l.7-8)
+    v_F = (A P p)[F] = A[F,F](P p)_F + A[F,~F](P p)_{~F}   (recompute)
+
+The shadow residual ``rhat0 = r^(0)`` is *derived static data* (``b - A
+x0``): regenerable on a replacement node without persistence, like ``A``
+and ``b`` themselves (paper §3 static-data model), so it is deliberately
+not part of the persisted set.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reconstruction import solve_x_from_residual
+from repro.core.state import RecoverySchema, RecoverySet
+from repro.solvers.base import RecoverableSolver
+
+BICGSTAB_SCHEMA = RecoverySchema(
+    "bicgstab", vectors=("r", "p"), scalars=("rho", "alpha", "omega"),
+    history=1)
+
+
+class BiCGStabState(NamedTuple):
+    x: jax.Array
+    r: jax.Array      # true residual b - A x
+    p: jax.Array
+    v: jax.Array      # A P p
+    rho: jax.Array
+    alpha: jax.Array
+    omega: jax.Array
+    k: jax.Array
+
+
+class BiCGStabSolver(RecoverableSolver):
+    name = "bicgstab"
+    schema = BICGSTAB_SCHEMA
+    state_vector_fields = ("x", "r", "p", "v")
+    state_nan_scalars = ()
+
+    def __init__(self):
+        self._rhat0 = None
+
+    def init_state(self, op, precond, b, x0=None) -> BiCGStabState:
+        x0 = jnp.zeros_like(b) if x0 is None else x0
+        r0 = b - op.apply(x0)
+        self._rhat0 = r0  # derived static data (see module docstring)
+        one = jnp.ones((), b.dtype)
+        zero = jnp.zeros_like(b)
+        return BiCGStabState(x=x0, r=r0, p=zero, v=zero, rho=one, alpha=one,
+                             omega=one, k=jnp.zeros((), jnp.int32))
+
+    def make_step(self, op, precond):
+        if self._rhat0 is None:
+            raise RuntimeError("init_state must run before make_step")
+        rhat0 = self._rhat0
+        op_apply, precond_apply = op.apply, precond.apply
+
+        def step(state: BiCGStabState) -> BiCGStabState:
+            rho_new = jnp.vdot(rhat0, state.r)
+            beta = (rho_new / state.rho) * (state.alpha / state.omega)
+            p = state.r + beta * (state.p - state.omega * state.v)
+            phat = precond_apply(p)
+            v = op_apply(phat)
+            alpha = rho_new / jnp.vdot(rhat0, v)
+            s = state.r - alpha * v
+            shat = precond_apply(s)
+            t = op_apply(shat)
+            omega = jnp.vdot(t, s) / jnp.vdot(t, t)
+            x = state.x + alpha * phat + omega * shat
+            r = s - omega * t
+            return BiCGStabState(x=x, r=r, p=p, v=v, rho=rho_new, alpha=alpha,
+                                 omega=omega, k=state.k + 1)
+
+        return jax.jit(step)
+
+    def recovery_set(self, state) -> RecoverySet:
+        return RecoverySet(
+            k=int(state.k),
+            scalars={"rho": float(state.rho), "alpha": float(state.alpha),
+                     "omega": float(state.omega)},
+            vectors={"r": self.host_shard(state.r),
+                     "p": self.host_shard(state.p)},
+        )
+
+    def reconstruct(self, op, precond, b, snapshot, failed_blocks,
+                    sets: Sequence[RecoverySet], local_method: str = "auto"):
+        part = op.partition
+        failed = list(failed_blocks)
+        cur = sets[-1]
+        dt = b.dtype
+        r_f = jnp.asarray(cur.vectors["r"], dt)
+        p_f = jnp.asarray(cur.vectors["p"], dt)
+        r = part.scatter(snapshot.r, r_f, failed)
+        p = part.scatter(snapshot.p, p_f, failed)
+        x = solve_x_from_residual(op, b, snapshot.x, r_f, failed, local_method)
+        # v = A P p is derivable once p is whole again (one restricted SpMV)
+        phat = precond.apply(p)
+        v_f = (op.inblock_apply(part.restrict(phat, failed), failed)
+               + op.offblock_apply(phat, failed))
+        v = part.scatter(snapshot.v, v_f, failed)
+        return BiCGStabState(
+            x=x, r=r, p=p, v=v,
+            rho=jnp.asarray(cur.scalars["rho"], dt),
+            alpha=jnp.asarray(cur.scalars["alpha"], dt),
+            omega=jnp.asarray(cur.scalars["omega"], dt),
+            k=snapshot.k,
+        )

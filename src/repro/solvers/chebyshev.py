@@ -1,0 +1,187 @@
+"""Chebyshev iteration as a :class:`RecoverableSolver`.
+
+Preconditioned Chebyshev semi-iteration (Saad, Alg. 12.1) in three-term
+direction form, driven by spectral bounds ``[lmin, lmax]`` of ``P A``:
+
+    sigma = d / c,  d = (lmax + lmin)/2,  c = (lmax - lmin)/2
+    rho_0 = 1/sigma,   alpha_0 = 1/d,   p_0 = z_0
+    rho_{k+1}  = 1 / (2 sigma - rho_k)
+    beta_{k+1} = rho_k * c * alpha_k / 2
+    alpha_{k+1}= 2 rho_{k+1} / c
+    p_{k+1} = z_{k+1} + beta_{k+1} p_k,   x_{k+1} = x_k + alpha_k p_k
+
+Unlike PCG the scalars come from a *deterministic recurrence* — no inner
+products — which makes Chebyshev the communication-minimal member of the
+zoo (one SpMV, zero reductions per iteration) and its recovery trivial
+for scalars.  The direction structure ``p = z + beta p_prev`` is the same
+as PCG's, so exact reconstruction reuses Algorithm 3 verbatim
+(:func:`repro.core.reconstruction.reconstruct_direction_form`) with the
+persisted pair ``(p^(k-1), p^(k))`` — recovery set
+``{p, beta, alpha, rho, k}``, history 2.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reconstruction import reconstruct_direction_form
+from repro.core.state import RecoverySchema, RecoverySet
+from repro.solvers.base import RecoverableSolver
+
+CHEBYSHEV_SCHEMA = RecoverySchema(
+    "chebyshev", vectors=("p",), scalars=("beta", "alpha", "rho"), history=2)
+
+
+class ChebyshevState(NamedTuple):
+    x: jax.Array
+    r: jax.Array
+    z: jax.Array
+    p: jax.Array
+    alpha: jax.Array      # alpha_k: the step applied by the NEXT iteration
+    rho: jax.Array        # rho_k of the Chebyshev recurrence
+    beta_prev: jax.Array  # beta_k linking p_k = z_k + beta_k p_{k-1}
+    k: jax.Array
+
+
+def spectral_bounds(op, precond, power_iters: int = 100,
+                    seed: int = 0) -> Tuple[float, float]:
+    """Bounds ``[lmin, lmax]`` on the spectrum of ``P A``.
+
+    Three routes, most exact first:
+
+    - closed form for the 7-point stencil with identity/Jacobi
+      preconditioning (the paper's workload: eigenvalues of the 3-D
+      Dirichlet Laplacian are known analytically),
+    - dense eigenvalues for small problems (any operator/preconditioner),
+    - shifted power iteration otherwise (with safety margins: Chebyshev
+      tolerates slightly-wide bounds, diverges on too-narrow ones).
+    """
+    from repro.core.poisson import (
+        IdentityPreconditioner,
+        JacobiPreconditioner,
+        StencilOperator,
+    )
+
+    if isinstance(op, StencilOperator) and isinstance(
+            precond, (IdentityPreconditioner, JacobiPreconditioner)):
+        spread = sum(np.cos(np.pi / (dim + 1)) for dim in op.grid)
+        lo, hi = 6.0 - 2.0 * spread, 6.0 + 2.0 * spread
+        if isinstance(precond, JacobiPreconditioner):
+            lo, hi = lo / 6.0, hi / 6.0  # P = D^{-1} = I/6 for the stencil
+        return lo, hi
+
+    def m_apply(v):
+        return precond.apply(op.apply(v))
+
+    if op.n <= 2048:
+        cols = jax.vmap(m_apply)(jnp.eye(op.n, dtype=op.dtype)).T
+        eigs = np.linalg.eigvals(np.asarray(cols)).real  # P A ~ P^1/2 A P^1/2: real
+        return float(eigs.min()), float(eigs.max())
+
+    # power iteration for lmax; shifted power iteration for lmin
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.standard_normal(op.n), op.dtype)
+
+    def power(apply_fn, v):
+        lam = 0.0
+        for _ in range(power_iters):
+            w = apply_fn(v)
+            lam = float(jnp.vdot(v, w) / jnp.vdot(v, v))
+            v = w / jnp.linalg.norm(w)
+        return lam
+
+    hi = power(m_apply, v)
+    lo = hi - power(lambda u: hi * u - m_apply(u), v)
+    return 0.9 * max(lo, 1e-12 * hi), 1.05 * hi
+
+
+class ChebyshevSolver(RecoverableSolver):
+    name = "chebyshev"
+    schema = CHEBYSHEV_SCHEMA
+    state_vector_fields = ("x", "r", "z", "p")
+    state_nan_scalars = ()
+
+    def __init__(self, lam_min: float, lam_max: float):
+        if not (0.0 < lam_min < lam_max):
+            raise ValueError(f"need 0 < lam_min < lam_max, got [{lam_min}, {lam_max}]")
+        self.lam_min = float(lam_min)
+        self.lam_max = float(lam_max)
+        self.d = (lam_max + lam_min) / 2.0
+        self.c = (lam_max - lam_min) / 2.0
+
+    def init_state(self, op, precond, b, x0=None) -> ChebyshevState:
+        x0 = jnp.zeros_like(b) if x0 is None else x0
+        r0 = b - op.apply(x0)
+        z0 = precond.apply(r0)
+        dt = b.dtype
+        return ChebyshevState(
+            x=x0, r=r0, z=z0, p=z0,
+            alpha=jnp.asarray(1.0 / self.d, dt),
+            rho=jnp.asarray(self.c / self.d, dt),
+            beta_prev=jnp.zeros((), dt),
+            k=jnp.zeros((), jnp.int32),
+        )
+
+    def make_step(self, op, precond):
+        op_apply, precond_apply = op.apply, precond.apply
+        c, sigma = self.c, self.d / self.c
+
+        def step(state: ChebyshevState) -> ChebyshevState:
+            ap = op_apply(state.p)                    # the only SpMV
+            x = state.x + state.alpha * state.p
+            r = state.r - state.alpha * ap
+            z = precond_apply(r)
+            rho_new = 1.0 / (2.0 * sigma - state.rho)   # scalar recurrence:
+            beta = state.rho * c * state.alpha / 2.0    # no reductions
+            alpha_new = 2.0 * rho_new / c
+            p = z + beta * state.p
+            return ChebyshevState(x=x, r=r, z=z, p=p, alpha=alpha_new,
+                                  rho=rho_new, beta_prev=beta, k=state.k + 1)
+
+        return jax.jit(step)
+
+    def recovery_set(self, state) -> RecoverySet:
+        return RecoverySet(
+            k=int(state.k),
+            scalars={"beta": float(state.beta_prev),
+                     "alpha": float(state.alpha),
+                     "rho": float(state.rho)},
+            vectors={"p": self.host_shard(state.p)},
+        )
+
+    def reconstruct(self, op, precond, b, snapshot, failed_blocks,
+                    sets: Sequence[RecoverySet], local_method: str = "auto"):
+        prev, cur = sets[-2], sets[-1]
+        x, r, z, p = reconstruct_direction_form(
+            op, precond, b, snapshot, list(failed_blocks),
+            p_prev_f=jnp.asarray(prev.vectors["p"], b.dtype),
+            p_cur_f=jnp.asarray(cur.vectors["p"], b.dtype),
+            beta=cur.scalars["beta"],
+            local_method=local_method,
+        )
+        dt = b.dtype
+        return ChebyshevState(
+            x=x, r=r, z=z, p=p,
+            alpha=jnp.asarray(cur.scalars["alpha"], dt),
+            rho=jnp.asarray(cur.scalars["rho"], dt),
+            beta_prev=jnp.asarray(cur.scalars["beta"], dt),
+            k=snapshot.k,
+        )
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_problem(cls, op=None, precond=None,
+                     lam_min: Optional[float] = None,
+                     lam_max: Optional[float] = None) -> "ChebyshevSolver":
+        if lam_min is None or lam_max is None:
+            if op is None or precond is None:
+                raise ValueError(
+                    "chebyshev needs spectral bounds: pass lam_min/lam_max "
+                    "or (op, precond) to estimate them")
+            lo, hi = spectral_bounds(op, precond)
+            lam_min = lo if lam_min is None else lam_min
+            lam_max = hi if lam_max is None else lam_max
+        return cls(lam_min=lam_min, lam_max=lam_max)

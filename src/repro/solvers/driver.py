@@ -1,0 +1,219 @@
+"""Generic ESR solve loop for any :class:`RecoverableSolver`.
+
+Extracted from the original ``core/pcg.solve`` so every solver in the zoo
+shares one implementation of the paper's runtime machinery:
+
+- the persistence schedule (classic ESR: every iteration; ESRP: bursts of
+  ``schema.history`` successive iterations every period ``T``),
+- failure injection (block crashes wiping volatile shards),
+- the survivor-side snapshot at the last completed persistence run,
+- recovery (backend fetch + solver-specific exact reconstruction),
+- convergence monitoring and reporting.
+
+The solver contributes only algorithm-specific pieces through the
+:class:`~repro.solvers.base.RecoverableSolver` interface: the jitted
+iteration, the minimal recovery set, and the Algorithm-3/5-style exact
+reconstruction.  The backend contributes schema-driven persistence
+(:mod:`repro.core.esr`, :mod:`repro.core.nvm_esr`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveConfig:
+    tol: float = 1e-10            # relative residual tolerance ||r|| / ||b||
+    maxiter: int = 10_000
+    persistence_period: int = 1   # T=1: classic ESR; T>1: ESRP bursts
+    local_solve: str = "auto"     # reconstruction local solver
+
+
+@dataclasses.dataclass(frozen=True)
+class FailurePlan:
+    """Inject a failure of ``blocks`` right after iteration ``at_iteration``."""
+
+    at_iteration: int
+    blocks: Tuple[int, ...]
+
+
+@dataclasses.dataclass
+class SolveReport:
+    iterations: int = 0
+    wasted_iterations: int = 0
+    failures_recovered: int = 0
+    converged: bool = False
+    final_relres: float = float("nan")
+    persist_cost_s: float = 0.0
+    persist_events: int = 0
+    residual_history: List[float] = dataclasses.field(default_factory=list)
+    solver: str = ""
+
+
+def should_persist(k: int, period: int, history: int = 2) -> bool:
+    """Persistence schedule: classic ESR persists every iteration; ESRP
+    persists bursts of ``history`` successive iterations every ``period``
+    (the burst must complete a full recovery run, so its length is the
+    schema's history)."""
+    if period <= 1:
+        return True
+    return k % period < history
+
+
+class _LegacyBackendAdapter:
+    """Wrap a pre-zoo backend (``persist(k, beta, p)`` / ``recover(blocks,
+    k)``, PCG payloads only) so external backend implementations written
+    against the original ``core.pcg.solve`` contract keep working."""
+
+    def __init__(self, backend, schema):
+        from repro.core.state import require_pcg_schema
+
+        try:
+            require_pcg_schema(schema, "persist/recover")
+        except TypeError as e:
+            raise ValueError(
+                f"backend {type(backend).__name__} implements only the "
+                f"legacy API: {e}") from None
+        self._backend = backend
+
+    def __getattr__(self, name):
+        return getattr(self._backend, name)
+
+    def persist_set(self, k, scalars, vectors):
+        return self._backend.persist(k, scalars["beta"], vectors["p"])
+
+    def recover_set(self, failed_blocks, ks):
+        from repro.core.state import RecoverySet
+
+        prev, cur = self._backend.recover(failed_blocks, ks[-1])
+        if (prev.k, cur.k) != (ks[0], ks[-1]):
+            # external, untrusted contract: refuse loudly rather than
+            # reconstruct from a stale pair
+            raise RuntimeError(
+                f"legacy backend {type(self._backend).__name__}.recover "
+                f"returned iterations {(prev.k, cur.k)}, wanted {tuple(ks)}")
+        return [RecoverySet(prev.k, {"beta": prev.beta}, {"p": prev.p}),
+                RecoverySet(cur.k, {"beta": cur.beta}, {"p": cur.p})]
+
+
+def solve(
+    solver,
+    op,
+    b,
+    precond,
+    config: SolveConfig = SolveConfig(),
+    backend=None,
+    failures: Sequence[FailurePlan] = (),
+    x0=None,
+    capture_states_at: Sequence[int] = (),
+):
+    """Run ``solver`` with optional ESR/NVM-ESR fault tolerance.
+
+    ``backend`` is an in-memory-ESR or NVM-ESR recovery backend (or None
+    for an unprotected run).  ``failures`` injects block crashes.  Returns
+    the final state, a report, and any states captured for verification.
+    """
+    schema = solver.schema
+    if backend is not None:
+        if getattr(backend, "schema", None) is not None and backend.schema != schema:
+            raise ValueError(
+                f"backend persists schema {backend.schema.solver!r} but solver "
+                f"{solver.name!r} needs {schema.solver!r}; construct the backend "
+                f"with the solver's schema (see repro.solvers.registry.make_backend)")
+        if not hasattr(backend, "persist_set"):
+            backend = _LegacyBackendAdapter(backend, schema)
+    history = schema.history
+
+    state = solver.init_state(op, precond, b, x0)
+    step = solver.make_step(op, precond)
+    bnorm = float(jnp.linalg.norm(b))
+    report = SolveReport(solver=solver.name)
+    captured: Dict[int, object] = {}
+    pending = sorted(failures, key=lambda f: f.at_iteration)
+    if pending and pending[0].at_iteration < 1:
+        # a plan that can never fire would also block every later plan
+        # (injection matches the sorted list head) — fail loudly instead
+        raise ValueError(
+            f"FailurePlan.at_iteration must be >= 1 (iteration 0 precedes "
+            f"the first persisted recovery point), got "
+            f"{pending[0].at_iteration}")
+    pending_idx = 0
+
+    # Survivor-side snapshot at the last completed persistence run: the
+    # surviving processes' own state copy kept in their local RAM (cheap,
+    # one shard each).  Needed to roll back to the recovery point when
+    # persistence is periodic (ESRP trade-off, paper §2).
+    snapshot = None
+    last_persisted_k: Optional[int] = None
+    consecutive = 0
+
+    def persist_now(st) -> None:
+        nonlocal snapshot, last_persisted_k, consecutive
+        if backend is None:
+            return
+        rset = solver.recovery_set(st)
+        cost = backend.persist_set(rset.k, rset.scalars, rset.vectors)
+        report.persist_cost_s += cost
+        report.persist_events += 1
+        consecutive = consecutive + 1 if last_persisted_k == rset.k - 1 else 1
+        last_persisted_k = rset.k
+        if consecutive >= history:
+            # a full history-run is now durable -> new recovery point.
+            # (The k=0 persist alone is NOT one for history >= 2; the
+            # schedule persists iterations 0..history-1 consecutively, so
+            # the first recovery point completes at k = history-1.  A
+            # failure injected before that trips the snapshot assert
+            # below with a clear message.)
+            snapshot = st
+
+    # Iteration 0 counts as persisted so the first run completes early.
+    persist_now(state)
+
+    while int(state.k) < config.maxiter:
+        k = int(state.k)
+        if k in capture_states_at:
+            captured[k] = state
+
+        relres = solver.residual_norm(state) / bnorm
+        report.residual_history.append(relres)
+        if relres < config.tol:
+            report.converged = True
+            break
+
+        # ---- failure injection + recovery ----
+        if pending_idx < len(pending) and k == pending[pending_idx].at_iteration:
+            plan = pending[pending_idx]
+            pending_idx += 1
+            if backend is None:
+                raise RuntimeError("failure injected but no recovery backend configured")
+            state = solver.wipe(state, op.partition, plan.blocks)  # VM lost
+            backend.fail(plan.blocks)
+            assert snapshot is not None, "no completed persistence run before failure"
+            k_rec = int(snapshot.k)
+            report.wasted_iterations += k - k_rec  # ESRP discard cost
+            ks = tuple(range(k_rec - history + 1, k_rec + 1))
+            sets = backend.recover_set(plan.blocks, ks)
+            state = solver.reconstruct(
+                op, precond, b,
+                snapshot=snapshot,
+                failed_blocks=list(plan.blocks),
+                sets=sets,
+                local_method=config.local_solve,
+            )
+            report.failures_recovered += 1
+            if int(state.k) in capture_states_at:
+                captured[int(state.k)] = state
+            continue
+
+        state = step(state)
+        if backend is not None and should_persist(
+                int(state.k), config.persistence_period, history):
+            persist_now(state)
+
+    report.iterations = int(state.k)
+    report.final_relres = solver.residual_norm(state) / bnorm
+    report.converged = report.converged or report.final_relres < config.tol
+    return state, report, captured

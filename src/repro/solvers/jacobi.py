@@ -1,0 +1,74 @@
+"""Weighted (damped) Jacobi as a :class:`RecoverableSolver`.
+
+The stationary iteration ``x^(k+1) = x^(k) + omega * P r^(k)`` with
+``P = preconditioner`` (classically ``D^{-1}``) and ``r = b - A x``.
+
+Minimal recovery set: ``{x^(k)}`` alone — the entire lost state is
+derivable from the persisted ``x`` shard plus static data:
+
+    r_F = b_F - A[F,F] x_F - A[F,~F] x_{~F}
+
+so ``history = 1`` (no consecutive-iteration pair needed) and recovery
+requires **no local solve at all**: the cheapest reconstruction in the
+zoo (shared with restarted GMRES via
+:class:`~repro.solvers.base.IterateOnlyRecovery`).  This is the
+degenerate case of Pachajoa et al.'s generic strategy where the
+persisted vector is the iterate itself.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import RecoverySchema
+from repro.solvers.base import IterateOnlyRecovery, RecoverableSolver
+
+JACOBI_SCHEMA = RecoverySchema("jacobi", vectors=("x",), scalars=(), history=1)
+
+
+class JacobiState(NamedTuple):
+    x: jax.Array
+    r: jax.Array
+    k: jax.Array
+
+
+class WeightedJacobiSolver(IterateOnlyRecovery, RecoverableSolver):
+    name = "jacobi"
+    schema = JACOBI_SCHEMA
+    state_cls = JacobiState
+
+    def __init__(self, omega: float = 2.0 / 3.0):
+        self.omega = float(omega)
+
+    def make_step(self, op, precond):
+        omega = self.omega
+        op_apply, precond_apply = op.apply, precond.apply
+
+        def step(state: JacobiState) -> JacobiState:
+            z = precond_apply(state.r)
+            x = state.x + omega * z
+            r = state.r - omega * op_apply(z)   # r = b - A x, incrementally
+            return JacobiState(x=x, r=r, k=state.k + 1)
+
+        return jax.jit(step)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_problem(cls, op=None, precond=None,
+                     omega: Optional[float] = None) -> "WeightedJacobiSolver":
+        """Pick the damping weight.  With spectral bounds of ``P A``
+        available the optimal stationary weight is ``2/(mu_min+mu_max)``;
+        otherwise the classic smoother default 2/3."""
+        if omega is not None:
+            return cls(omega=omega)
+        if op is not None and precond is not None:
+            from repro.solvers.chebyshev import spectral_bounds
+
+            try:
+                lo, hi = spectral_bounds(op, precond)
+                return cls(omega=2.0 / (lo + hi))
+            except (ValueError, NotImplementedError):
+                pass
+        return cls()

@@ -1,0 +1,56 @@
+"""PCG as a :class:`RecoverableSolver` (the zoo's first citizen).
+
+The algorithm itself (paper Algorithm 1) and its exact reconstruction
+(Algorithm 3/5) live in :mod:`repro.core.pcg` and
+:mod:`repro.core.reconstruction`; this module adapts them to the generic
+driver interface.  Recovery set: ``{p^(k), p^(k-1), beta^(k-1), k}``
+(Pachajoa et al. [14]) — one vector, one scalar, history 2.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reconstruction
+
+# Module (not name) import: core.pcg re-exports the generic driver API and
+# is mid-initialization when this module loads through it — binding the
+# module object defers attribute lookup to call time.
+from repro.core import pcg as _core_pcg
+from repro.core.state import PCG_SCHEMA, RecoverySet
+from repro.solvers.base import RecoverableSolver
+
+
+class PCGSolver(RecoverableSolver):
+    name = "pcg"
+    schema = PCG_SCHEMA
+    state_vector_fields = ("x", "r", "z", "p")
+    state_nan_scalars = ("rz",)
+
+    def init_state(self, op, precond, b, x0=None):
+        return _core_pcg.init_state(op, precond, b, x0)
+
+    def make_step(self, op, precond):
+        return jax.jit(_core_pcg.make_step(op.apply, precond.apply))
+
+    def recovery_set(self, state) -> RecoverySet:
+        return RecoverySet(
+            k=int(state.k),
+            scalars={"beta": float(state.beta_prev)},
+            vectors={"p": self.host_shard(state.p)},
+        )
+
+    def reconstruct(self, op, precond, b, snapshot, failed_blocks,
+                    sets: Sequence[RecoverySet], local_method: str = "auto"):
+        prev, cur = sets[-2], sets[-1]
+        return reconstruction.reconstruct(
+            op, precond, b,
+            state_surviving=snapshot,
+            failed_blocks=list(failed_blocks),
+            p_prev_f=jnp.asarray(prev.vectors["p"], b.dtype),
+            p_cur_f=jnp.asarray(cur.vectors["p"], b.dtype),
+            beta=cur.scalars["beta"],
+            local_method=local_method,
+        )

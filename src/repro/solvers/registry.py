@@ -1,0 +1,71 @@
+"""The solver zoo registry: sweep solvers and backends by name.
+
+Benchmarks, examples, and tests iterate ``SOLVERS`` to run every
+ESR-recoverable solver against every persistence backend; the factories
+wire schemas through so each backend's slot layout matches the solver it
+protects.
+
+    solver  = make_solver("chebyshev", op, precond)
+    backend = make_backend("nvm-prd", op, solver=solver)
+    state, report, _ = driver.solve(solver, op, b, precond, backend=backend)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Type
+
+import numpy as np
+
+# Single source of truth for backend constructors (satisfies the old
+# ``core.nvm_esr.BACKENDS`` contract: every entry is a callable).
+from repro.core.nvm_esr import BACKENDS  # noqa: F401
+from repro.core.state import RecoverySchema
+from repro.solvers.base import RecoverableSolver
+from repro.solvers.bicgstab import BiCGStabSolver
+from repro.solvers.chebyshev import ChebyshevSolver
+from repro.solvers.gmres import RestartedGMRESSolver
+from repro.solvers.jacobi import WeightedJacobiSolver
+from repro.solvers.pcg import PCGSolver
+
+SOLVERS: Dict[str, Type[RecoverableSolver]] = {
+    "pcg": PCGSolver,
+    "jacobi": WeightedJacobiSolver,
+    "chebyshev": ChebyshevSolver,
+    "bicgstab": BiCGStabSolver,
+    "gmres": RestartedGMRESSolver,
+}
+
+
+def make_solver(name: str, op=None, precond=None, **opts) -> RecoverableSolver:
+    """Build a registered solver, deriving problem-dependent parameters
+    (Chebyshev bounds, Jacobi weight) from ``(op, precond)`` when given."""
+    try:
+        cls = SOLVERS[name]
+    except KeyError:
+        raise KeyError(f"unknown solver {name!r}; have {sorted(SOLVERS)}") from None
+    return cls.from_problem(op, precond, **opts)
+
+
+def make_backend(
+    name: str,
+    op,
+    dtype=np.float64,
+    solver: Optional[RecoverableSolver] = None,
+    schema: Optional[RecoverySchema] = None,
+    **opts,
+):
+    """Build a registered backend sized for ``op``'s partition, persisting
+    ``solver``'s (or ``schema``'s) recovery set; defaults to PCG's."""
+    try:
+        cls = BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; have {sorted(BACKENDS)}") from None
+    if solver is not None:
+        if schema is not None and schema != solver.schema:
+            raise ValueError(
+                f"conflicting schemas: solver {solver.name!r} declares "
+                f"{solver.schema.solver!r} but schema={schema.solver!r} was "
+                f"passed explicitly — give one or the other")
+        schema = solver.schema
+    if schema is not None:
+        opts["schema"] = schema
+    return cls(op.nblocks, op.partition.block_size, dtype, **opts)

@@ -1,0 +1,42 @@
+"""Shim so property tests degrade to skips when hypothesis is absent.
+
+The container baseline does not ship ``hypothesis`` (see
+requirements-dev.txt for the full dev environment).  Importing this
+module instead of ``hypothesis`` directly keeps every *deterministic*
+test in the same file collectible and running; only ``@given`` property
+tests are skipped.
+
+Usage in a test module::
+
+    from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategyStub:
+        """Stand-in for ``hypothesis.strategies``: every strategy factory
+        returns None — fine, since the decorated test is skipped and the
+        strategies are never drawn from."""
+
+        def __getattr__(self, name):
+            def stub(*_args, **_kwargs):
+                return None
+
+            return stub
+
+    st = _StrategyStub()

@@ -17,10 +17,10 @@ import json, jax
 import dataclasses as dc
 from repro.distributed.sharding import set_rules
 from repro.models import registry as R
+from repro.launch.mesh import compat_make_mesh
 from repro.launch.roofline import analyze
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = compat_make_mesh((2, 2, 2), ("pod", "data", "model"))
 rules = set_rules(mesh)
 out = {}
 

@@ -97,12 +97,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, sys, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.ft.checkpoint import CheckpointConfig, NVMCheckpointManager
+from repro.launch.mesh import compat_make_mesh
 
 ckpt_dir = sys.argv[1]
 mgr = NVMCheckpointManager(CheckpointConfig(ckpt_dir))
 like = {"w": jnp.zeros((32, 16)), "b": jnp.zeros((8,))}
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat_make_mesh((8,), ("data",))
 sh = {"w": NamedSharding(mesh, P("data", None)), "b": NamedSharding(mesh, P())}
 got = mgr.restore(like, shardings=sh)
 assert got is not None

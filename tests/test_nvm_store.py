@@ -1,7 +1,8 @@
 """NVM substrate semantics: durability, crash consistency, epoch discipline."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.nvm.pmdk import HEADER_SIZE, PmemPool
 from repro.nvm.prd import PRDNode

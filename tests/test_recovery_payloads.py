@@ -1,0 +1,193 @@
+"""Generalized recovery payloads: codec, crash consistency, schedules.
+
+Property-style tests run as seeded sweeps (no hypothesis dependency) so
+they execute everywhere the container does; install requirements-dev.txt
+for the full hypothesis suites elsewhere.
+"""
+import numpy as np
+import pytest
+
+from repro.core.esr import UnrecoverableFailure
+from repro.core.nvm_esr import NVMESRHomogeneous, ring_slots
+from repro.core.state import (
+    PCG_SCHEMA,
+    RecoverySchema,
+    encode_payload,
+    payload_nbytes,
+)
+from repro.solvers import should_persist
+from repro.solvers.bicgstab import BICGSTAB_SCHEMA
+
+MULTI = RecoverySchema("multi", vectors=("r", "p", "q"),
+                       scalars=("a", "b"), history=1)
+
+
+# ---------------------------------------------------------------- codec
+@pytest.mark.parametrize("schema", [PCG_SCHEMA, BICGSTAB_SCHEMA, MULTI])
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+def test_schema_roundtrip(schema, dtype):
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        bs = int(rng.integers(1, 64))
+        shards = {v: rng.standard_normal(bs).astype(dtype)
+                  for v in schema.vectors}
+        scalars = {s: float(rng.standard_normal()) for s in schema.scalars}
+        k = int(rng.integers(0, 1 << 40))
+        raw = schema.encode(k, scalars, shards)
+        assert len(raw) == schema.slot_nbytes(bs, dtype)
+        got = schema.decode(raw, dtype)
+        assert got.k == k
+        for s in schema.scalars:
+            assert got.scalars[s] == scalars[s]
+        for v in schema.vectors:
+            np.testing.assert_array_equal(got.vectors[v], shards[v])
+
+
+def test_pcg_wire_format_unchanged():
+    """The generic codec is byte-identical to the legacy PCG layout, so
+    pools written before the zoo migration stay readable."""
+    p = np.arange(5, dtype=np.float64)
+    legacy = encode_payload(3, 0.5, p)
+    generic = PCG_SCHEMA.encode(3, {"beta": 0.5}, {"p": p})
+    assert legacy == generic
+    assert len(legacy) == payload_nbytes(5, np.float64)
+
+
+def test_schema_validation():
+    with pytest.raises(ValueError, match="at least one vector"):
+        RecoverySchema("bad", vectors=())
+    with pytest.raises(ValueError, match="history"):
+        RecoverySchema("bad", vectors=("x",), history=0)
+
+
+# ------------------------------------------------- crash consistency
+def _persist_iters(be, schema, n, ks, seed=0):
+    rng = np.random.default_rng(seed)
+    payloads = {}
+    for k in ks:
+        vectors = {v: rng.standard_normal(n) for v in schema.vectors}
+        scalars = {s: float(k) + i / 10 for i, s in enumerate(schema.scalars)}
+        be.persist_set(k, scalars, vectors)
+        payloads[k] = (scalars, vectors)
+    return payloads
+
+
+@pytest.mark.parametrize("schema", [BICGSTAB_SCHEMA, MULTI])
+def test_multi_vector_crash_keeps_last_run(schema):
+    """A node crash tearing unflushed writes never loses the last durable
+    recovery run of a multi-vector set."""
+    nblocks, bs = 4, 8
+    be = NVMESRHomogeneous(nblocks, bs, np.float64, schema=schema)
+    payloads = _persist_iters(be, schema, nblocks * bs, ks=range(4))
+    be.fail([1, 2])  # crash() rewinds unflushed bytes on the failed pools
+    (got,) = be.recover_set([1, 2], (3,))
+    scalars, vectors = payloads[3]
+    assert got.scalars == scalars
+    for v in schema.vectors:
+        want = np.concatenate([vectors[v][1 * bs:2 * bs], vectors[v][2 * bs:3 * bs]])
+        np.testing.assert_array_equal(got.vectors[v], want)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_multi_vector_torn_write_never_corrupts(seed):
+    """Property-style sweep: a torn fragment landing anywhere in the slot
+    ring can invalidate the in-flight slot but never yields a payload that
+    was not fully committed (CRC-bound headers), and the previous
+    iteration remains recoverable."""
+    rng = np.random.default_rng(seed)
+    schema = MULTI
+    nblocks, bs = 2, 8
+    be = NVMESRHomogeneous(nblocks, bs, np.float64, schema=schema)
+    payloads = _persist_iters(be, schema, nblocks * bs, ks=(0, 1), seed=seed)
+    store = be.pools[0].store
+    torn_at = int(rng.integers(0, store.size - 1))
+    frag = rng.bytes(int(rng.integers(1, 48)))
+    frag = frag[: store.size - torn_at]
+    store.crash(torn_write=(torn_at, frag))
+    be.pools[0].recover()
+    # every readable slot decodes to one of the committed payloads
+    for s in range(be.slots):
+        raw = be.pools[0].read(f"slot{s}")
+        if raw is None:
+            continue
+        got = schema.decode(raw, np.float64)
+        assert got.k in payloads
+        scalars, vectors = payloads[got.k]
+        assert got.scalars == scalars
+        for v in schema.vectors:
+            np.testing.assert_array_equal(got.vectors[v], vectors[v][:bs])
+
+
+def test_ring_depth_follows_history():
+    assert ring_slots(PCG_SCHEMA) == 4        # the paper's pair ring
+    assert ring_slots(BICGSTAB_SCHEMA) == 2   # single-state double buffer
+    assert ring_slots(RecoverySchema("h3", vectors=("x",), history=3)) == 6
+
+
+@pytest.mark.parametrize("history", [1, 2, 3, 4])
+def test_inmemory_ring_survives_interrupted_burst(history):
+    """Regression (found in review): the in-memory ring must hold the last
+    complete history-run through a PARTIAL new burst.  With the old
+    ``history+1`` sizing, history>=3 lost slot k=0 to the second write of
+    the next burst; the 2h-1 ring provably cannot."""
+    from repro.core.esr import InMemoryESR
+
+    schema = RecoverySchema("h", vectors=("x",), history=history)
+    nblocks, bs = 4, 4
+    be = InMemoryESR(nblocks, bs, np.float64, schema=schema)
+    # complete run 0..h-1, then an interrupted burst missing its last write
+    ks = list(range(history)) + list(range(history + 3, 2 * history + 2))
+    payloads = _persist_iters(be, schema, nblocks * bs, ks=ks)
+    be.fail([1])
+    sets = be.recover_set([1], tuple(range(history)))
+    for kk, got in zip(range(history), sets):
+        assert got.k == kk
+        np.testing.assert_array_equal(
+            got.vectors["x"], payloads[kk][1]["x"][bs:2 * bs])
+
+
+def test_recover_missing_iteration_raises():
+    be = NVMESRHomogeneous(2, 4, np.float64, schema=MULTI)
+    _persist_iters(be, MULTI, 8, ks=(0,))
+    with pytest.raises(UnrecoverableFailure):
+        be.recover_set([0], (5,))
+
+
+# ---------------------------------------------------- ESRP schedule
+def test_should_persist_classic_esr_every_iteration():
+    assert all(should_persist(k, 1, h) for k in range(10) for h in (1, 2))
+    assert all(should_persist(k, 0, 2) for k in range(10))
+
+
+@pytest.mark.parametrize("period", [2, 3, 5, 7])
+def test_should_persist_pair_bursts_at_period_boundaries(period):
+    """History-2 (PCG-style) ESRP: exactly the first two iterations of
+    each period persist, so every burst completes a recovery pair."""
+    for k in range(4 * period):
+        expected = k % period in (0, 1)
+        assert should_persist(k, period, history=2) == expected
+
+
+@pytest.mark.parametrize("period", [2, 3, 5])
+def test_should_persist_history1_single_shots(period):
+    for k in range(4 * period):
+        assert should_persist(k, period, history=1) == (k % period == 0)
+
+
+def test_should_persist_burst_never_splits():
+    """At every period boundary the burst is history-long and contiguous —
+    a run that would split across periods could never complete a pair."""
+    for period in (3, 5, 8):
+        for history in (1, 2):
+            ks = [k for k in range(6 * period)
+                  if should_persist(k, period, history)]
+            runs, run = [], [ks[0]]
+            for a, bb in zip(ks, ks[1:]):
+                if bb == a + 1:
+                    run.append(bb)
+                else:
+                    runs.append(run)
+                    run = [bb]
+            runs.append(run)
+            assert all(len(r) == history for r in runs)
+            assert all(r[0] % period == 0 for r in runs)
