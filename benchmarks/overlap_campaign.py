@@ -1,0 +1,94 @@
+"""Overlapped persistence + failure campaigns across the backend matrix.
+
+Two views the paper-era benchmarks don't cover:
+
+1. **Pipeline comparison** — the same PCG persistence schedule through
+   the synchronous host-pull baseline and the overlapped begin/commit
+   pipeline (DESIGN.md §6).  Reported per backend: exposed persist cost
+   per event for both modes and the persist-hidden fraction (the share of
+   modeled commit cost hidden behind the next iteration's compute).
+
+2. **Campaign resilience** — the acceptance scenario of ISSUE 2: a
+   mid-burst failure under ESRP (the staged persist is torn away, falling
+   back to the previous durable run), an overlapping second failure
+   landing during the in-flight recovery, and a repeated failure of an
+   already-failed block.  Reported per backend: recovered events,
+   recovery restarts, wasted iterations, and convergence.
+
+Smoke mode (``REPRO_BENCH_SMOKE=1`` or ``run.py --smoke``) shrinks the
+grid so the sweep doubles as a CI dry run.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core import JacobiPreconditioner, make_poisson_problem
+from repro.solvers import (
+    BACKENDS,
+    FailureCampaign,
+    FailureEvent,
+    SolveConfig,
+    make_backend,
+    make_solver,
+    solve,
+)
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def rows():
+    out = []
+    if _smoke():
+        grid, nblocks, tol = (8, 8, 8), 4, 1e-8
+    else:
+        grid, nblocks, tol = (32, 16, 16), 8, 1e-10
+    op, b = make_poisson_problem(*grid, nblocks=nblocks)
+    pre = JacobiPreconditioner(op)
+
+    # ---- pipeline comparison: sync baseline vs overlapped commit ----
+    for bname in sorted(BACKENDS):
+        reps = {}
+        for mode in ("sync", "overlap"):
+            solver = make_solver("pcg", op, pre)
+            be = make_backend(bname, op, solver=solver)
+            _, rep, _ = solve(solver, op, b, pre,
+                              SolveConfig(tol=tol, maxiter=20000,
+                                          persist_mode=mode),
+                              backend=be)
+            reps[mode] = rep
+        for mode, rep in reps.items():
+            exposed = rep.persist_exposed_s / max(rep.persist_events, 1)
+            out.append((f"overlap_{bname}_{mode}_exposed_us_per_event",
+                        exposed * 1e6,
+                        f"{rep.persist_events} events, modeled critical path"))
+        out.append((f"overlap_{bname}_hidden_fraction",
+                    reps["overlap"].persist_hidden_fraction,
+                    "share of commit cost hidden behind compute"))
+        out.append((f"overlap_{bname}_stage_us_per_event",
+                    reps["overlap"].persist_stage_s * 1e6
+                    / max(reps["overlap"].persist_events, 1),
+                    "staging copy left on the critical path"))
+
+    # ---- campaign resilience: mid-burst + overlapping + repeated ----
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1, 2), at_iteration=6),   # mid-burst (T=5)
+        FailureEvent(blocks=(0,), during_recovery_at=6),  # overlapping
+        FailureEvent(blocks=(1,), at_iteration=12),    # repeated block
+    ))
+    for bname in sorted(BACKENDS):
+        solver = make_solver("pcg", op, pre)
+        be = make_backend(bname, op, solver=solver)
+        _, rep, _ = solve(solver, op, b, pre,
+                          SolveConfig(tol=tol, maxiter=20000,
+                                      persistence_period=5,
+                                      persist_mode="overlap"),
+                          backend=be, failures=campaign)
+        out.append((f"campaign_{bname}_recovered", rep.failures_recovered,
+                    f"restarts={rep.recovery_restarts} "
+                    f"converged={rep.converged}"))
+        out.append((f"campaign_{bname}_wasted_iterations",
+                    rep.wasted_iterations,
+                    f"rollback cost over {rep.iterations} iterations"))
+    return out

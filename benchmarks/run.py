@@ -16,6 +16,7 @@ Modules:
   iteration_overhead  — wall-clock per-iteration overhead + recovery
   solver_roofline     — ESR vs NVM-ESR collective bytes on the mesh
   solver_zoo          — per-solver persist overhead across backends
+  overlap_campaign    — sync vs overlapped persistence + failure campaigns
 """
 from __future__ import annotations
 
@@ -40,6 +41,7 @@ def main() -> None:
     from benchmarks import (
         iteration_overhead,
         memory_overhead,
+        overlap_campaign,
         persist_homogeneous,
         persist_prd,
         solver_roofline,
@@ -53,6 +55,7 @@ def main() -> None:
         ("iteration_overhead", iteration_overhead),
         ("solver_roofline", solver_roofline),
         ("solver_zoo", solver_zoo),
+        ("overlap_campaign", overlap_campaign),
     ]
     if only is not None and only not in {name for name, _ in modules}:
         raise SystemExit(f"unknown module {only!r}; have "

@@ -28,10 +28,13 @@ from repro.solvers import (
 
 
 def main() -> None:
+    from repro.launch.report import solve_report_table
+
     op, b = make_poisson_problem(32, 16, 16, nblocks=8)
     pre = JacobiPreconditioner(op)
     bs = op.partition.block_size
     bnorm = float(jnp.linalg.norm(b))
+    reports = []
 
     print(f"{'solver':10s} {'set':22s} {'iters':>5s} {'relres':>9s} "
           f"{'persist(ms)':>11s} {'NVM KiB':>8s} {'wall(s)':>8s}")
@@ -45,7 +48,8 @@ def main() -> None:
             + f" h={schema.history}"
         t0 = time.perf_counter()
         state, rep, _ = solve(
-            solver, op, b, pre, SolveConfig(tol=1e-10, maxiter=20000),
+            solver, op, b, pre,
+            SolveConfig(tol=1e-10, maxiter=20000, persist_mode="overlap"),
             backend=backend, failures=[FailurePlan(fail_at, (1, 2, 6))])
         wall = time.perf_counter() - t0
         res = float(jnp.linalg.norm(b - op.apply(state.x))) / bnorm
@@ -53,6 +57,10 @@ def main() -> None:
         print(f"{name:10s} {set_desc:22s} {rep.iterations:5d} {res:9.1e} "
               f"{rep.persist_cost_s*1e3:11.2f} {nvm_kib:8.0f} {wall:8.2f}")
         assert rep.failures_recovered == 1 and rep.converged, name
+        reports.append(rep)
+
+    print("\nFull solver reports (overlapped persistence pipeline):")
+    print(solve_report_table(reports))
 
 
 if __name__ == "__main__":

@@ -18,7 +18,17 @@ class SolverConfig:
     tol: float = 1e-10
     maxiter: int = 10_000
     persistence_period: int = 1
+    persist_mode: str = "sync"     # "sync" | "overlap" (driver pipeline)
     variant: str = "auto"          # "auto" (GSPMD baseline) | "shardmap" (§Perf)
+
+    def solve_config(self):
+        """The generic-driver :class:`repro.solvers.SolveConfig` slice of
+        this launch config (grid/mesh/precond fields are launch-side)."""
+        from repro.solvers import SolveConfig
+
+        return SolveConfig(tol=self.tol, maxiter=self.maxiter,
+                           persistence_period=self.persistence_period,
+                           persist_mode=self.persist_mode)
 
 
 # dry-run cells: one pod-scale grid per ESR mode (512-way z sharding)

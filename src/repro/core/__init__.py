@@ -11,6 +11,8 @@ Public API
 - :func:`repro.core.reconstruction.reconstruct` (Algorithm 3/5)
 """
 from repro.core.pcg import (  # noqa: F401
+    FailureCampaign,
+    FailureEvent,
     FailurePlan,
     PCGConfig,
     SolveReport,

@@ -36,7 +36,13 @@ from repro.core.state import (  # noqa: F401  (payload helpers re-exported)
     shard_vectors,
     typed_vectors,
 )
-from repro.nvm.store import TIER_SPECS, NETWORK_SPECS, CostModel, Tier
+from repro.nvm.store import (
+    NETWORK_SPECS,
+    TIER_SPECS,
+    CostModel,
+    PersistStager,
+    Tier,
+)
 
 
 class UnrecoverableFailure(RuntimeError):
@@ -74,10 +80,27 @@ class InMemoryESR:
         self.cost = CostModel()
         self._dram = TIER_SPECS[Tier.DRAM]
         self._net = NETWORK_SPECS["rdma"]
+        self._stager = PersistStager(self.persist_set, cost_model=self.cost)
 
     # ------------------------------------------------------------------
     def _hosts(self, block: int) -> List[int]:
         return [(block + i + 1) % self.nblocks for i in range(self.copies)]
+
+    # -- overlapped persistence (DESIGN.md §6): stage now, replicate later
+    def persist_begin(self, k: int, scalars: Mapping[str, float],
+                      vectors: Mapping[str, np.ndarray]) -> float:
+        """Stage the payload (local DRAM copy); the peer all-to-all happens
+        at :meth:`persist_commit` and overlaps the next iteration."""
+        return self._stager.begin(k, scalars, vectors)
+
+    def persist_commit(self) -> float:
+        """Replicate the oldest staged payload to the peer hosts."""
+        return self._stager.commit()
+
+    def persist_drain(self) -> float:
+        """Drain barrier: commit everything staged (nothing else is in
+        flight — peer-RAM replication is synchronous once committed)."""
+        return self._stager.drain()
 
     def persist_set(self, k: int, scalars: Mapping[str, float],
                     vectors: Mapping[str, np.ndarray]) -> float:
@@ -105,7 +128,10 @@ class InMemoryESR:
 
     # ------------------------------------------------------------------
     def fail(self, failed_blocks: Sequence[int]) -> None:
-        """Process crash: the peer-RAM copies hosted on failed ranks die too."""
+        """Process crash: the peer-RAM copies hosted on failed ranks die
+        too, and any staged-but-uncommitted persist is torn away (the
+        failed ranks' contributions to the all-to-all never happened)."""
+        self._stager.abort()
         for b in failed_blocks:
             self.ram[b] = {}
 

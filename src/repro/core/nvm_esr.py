@@ -49,7 +49,7 @@ from repro.core.state import (
 )
 from repro.nvm.pmdk import PmemPool
 from repro.nvm.prd import PRDNode
-from repro.nvm.store import CostModel, Store, Tier
+from repro.nvm.store import CostModel, PersistStager, Store, Tier
 
 def ring_slots(schema: RecoverySchema) -> int:
     """Slot-ring size: double-buffer the ``history``-long recovery run."""
@@ -92,6 +92,24 @@ class NVMESRHomogeneous:
         self._event = 0  # persistence-event counter (NOT k: ESRP persists
         #                  with gaps, and k % slots would overwrite a slot
         #                  that is still part of the last complete run)
+        self._stager = PersistStager(self.persist_set, cost_model=self.cost)
+
+    # -- overlapped persistence (DESIGN.md §6): stage now, flush later
+    def persist_begin(self, k: int, scalars: Mapping[str, float],
+                      vectors: Mapping[str, np.ndarray]) -> float:
+        """Stage the payload (local DRAM copy); the pmem slot write happens
+        at :meth:`persist_commit` and overlaps the next iteration."""
+        return self._stager.begin(k, scalars, vectors)
+
+    def persist_commit(self) -> float:
+        """Flush the oldest staged payload through the local pools."""
+        return self._stager.commit()
+
+    def persist_drain(self) -> float:
+        """Drain barrier: commit everything staged.  PmemPool commits are
+        synchronous-durable (payload->flush->header->flush), so after this
+        returns every committed slot survives a crash."""
+        return self._stager.drain()
 
     # ------------------------------------------------------------------
     def persist_set(self, k: int, scalars: Mapping[str, float],
@@ -121,7 +139,9 @@ class NVMESRHomogeneous:
     # ------------------------------------------------------------------
     def fail(self, failed_blocks: Sequence[int]) -> None:
         """Node crash: local pools survive but are unreachable until the
-        node recovers; in-flight (unflushed) writes are torn away."""
+        node recovers; in-flight (unflushed) writes are torn away — both
+        unflushed store bytes and staged-but-uncommitted payloads."""
+        self._stager.abort()
         for b in failed_blocks:
             self.pools[b].store.crash()
             self._down.add(b)
@@ -222,6 +242,25 @@ class NVMESRPRD:
         )
         self.cost = self.prd.store.cost
         self._event = 0  # persistence-event counter (see NVMESRHomogeneous)
+        self._stager = PersistStager(self.persist_set, cost_model=self.cost)
+
+    # -- overlapped persistence (DESIGN.md §6): stage now, put later
+    def persist_begin(self, k: int, scalars: Mapping[str, float],
+                      vectors: Mapping[str, np.ndarray]) -> float:
+        """Stage the payload (local DRAM copy); the PSCW epoch happens at
+        :meth:`persist_commit` and overlaps the next iteration.  This
+        stacks with the PRD's own target-side overlap: commit returns at
+        origin-completion and the PRD drain proceeds asynchronously."""
+        return self._stager.begin(k, scalars, vectors)
+
+    def persist_commit(self) -> float:
+        """Run the PSCW epoch for the oldest staged payload."""
+        return self._stager.commit()
+
+    def persist_drain(self) -> float:
+        """Drain barrier: commit staged payloads AND join the PRD exposure
+        epoch, so every committed slot is target-side durable."""
+        return self._stager.drain() + self.drain()
 
     # ------------------------------------------------------------------
     def persist_set(self, k: int, scalars: Mapping[str, float],
@@ -258,8 +297,12 @@ class NVMESRPRD:
     # ------------------------------------------------------------------
     def fail(self, failed_blocks: Sequence[int]) -> None:
         """Compute-node failures do NOT touch the PRD node: recovery data
-        stays reachable (the PRD architecture's defining property)."""
-        self.drain()  # epochs in flight still complete on the PRD side
+        stays reachable (the PRD architecture's defining property).
+        Staged-but-uncommitted payloads die with the compute nodes (their
+        puts never started); epochs already in flight still complete on
+        the PRD side."""
+        self._stager.abort()
+        self.drain()
 
     def recover_set(self, failed_blocks: Sequence[int],
                     ks: Sequence[int]) -> List[RecoverySet]:

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 
 from repro.core.state import PCGState
 from repro.solvers.driver import (  # noqa: F401  (re-exported public API)
+    FailureCampaign,
+    FailureEvent,
     FailurePlan,
     SolveConfig,
     SolveReport,

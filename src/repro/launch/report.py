@@ -88,6 +88,44 @@ def multipod_table(rows: Dict) -> str:
     return "\n".join(out)
 
 
+# ----------------------------------------------------------------------
+# Solver-run reporting: every SolveReport field in one table (the report
+# dataclass docstring in repro/solvers/driver.py defines the semantics).
+# ----------------------------------------------------------------------
+def solve_report_rows(r) -> Dict[str, str]:
+    """One :class:`repro.solvers.SolveReport` as printable columns,
+    including the overlapped-persistence metrics."""
+    return {
+        "solver": r.solver or "-",
+        "mode": r.persist_mode,
+        "iters": str(r.iterations),
+        "conv": "Y" if r.converged else "n",
+        "relres": f"{r.final_relres:.2e}",
+        "recovered": str(r.failures_recovered),
+        "restarts": str(r.recovery_restarts),
+        "wasted": str(r.wasted_iterations),
+        "events": str(r.persist_events),
+        "persist ms": f"{r.persist_cost_s * 1e3:.3f}",
+        "exposed ms": f"{r.persist_exposed_s * 1e3:.3f}",
+        "hidden %": f"{r.persist_hidden_fraction * 100:.1f}",
+        "stage ms": f"{r.persist_stage_s * 1e3:.3f}",
+        "drain ms": f"{r.persist_drain_s * 1e3:.3f}",
+    }
+
+
+def solve_report_table(reports) -> str:
+    """Markdown table over solver runs (benchmarks/examples print this)."""
+    rows = [solve_report_rows(r) for r in reports]
+    if not rows:
+        return "(no solver reports)"
+    cols = list(rows[0])
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "---|" * len(cols)]
+    for row in rows:
+        out.append("| " + " | ".join(row[c] for c in cols) + " |")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     rows = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl")
     print(table(rows))

@@ -62,11 +62,16 @@ class PRDNode:
 
     # ---------------------- persistence iteration ----------------------
     def join(self) -> float:
-        """Block until the previous exposure epoch finished persisting."""
+        """Block until the previous exposure epoch finished persisting.
+
+        The epoch's target-side cost is consumed on read: a second join
+        with no epoch in between returns 0, so callers accumulating drain
+        cost (driver recovery barriers) never double-count."""
         if self._drainer is not None:
             self._drainer.join()
             self._drainer = None
-        return self._drain_cost
+        cost, self._drain_cost = self._drain_cost, 0.0
+        return cost
 
     def begin_epoch(self, group=None) -> None:
         """Target side: open the exposure epoch for ``group`` (default all)."""

@@ -20,8 +20,11 @@ import enum
 import os
 import threading
 import zlib
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+import numpy as np
 
 
 class Tier(enum.Enum):
@@ -214,3 +217,76 @@ class Store:
 
 def checksum(data: bytes) -> int:
     return zlib.crc32(data) & 0xFFFFFFFF
+
+
+class PersistStager:
+    """Double-buffered staging area for overlapped persistence.
+
+    Splits a persistence event into the part the solver must wait for and
+    the part it can hide behind compute (DESIGN.md §6):
+
+    - ``begin(k, scalars, vectors)`` captures the recovery payload into a
+      staging buffer.  The device->host pull already happened in
+      ``RecoverableSolver.recovery_set``; what remains on the critical
+      path is a local DRAM copy of the slot bytes, whose modeled cost is
+      returned.  Nothing is durable yet.
+    - ``commit()`` runs the backend's flush function on the *oldest*
+      staged payload — the expensive tier/network write — and returns its
+      modeled cost.  The driver calls this while the next iteration's
+      compute is in flight, so the cost overlaps.
+    - ``drain()`` commits everything still staged: the barrier a backend
+      must pass before a recovery point may be declared durable.
+    - ``abort()`` discards staged payloads.  A failure tears in-flight
+      persistence away; backends call this from ``fail()`` so an aborted
+      slot write can never be committed later as if it had survived.
+
+    Depth is 2 (double buffering): one payload may be committing while
+    the next is being staged — enough for an ESRP burst to stay one event
+    ahead.  A third ``begin`` without an intervening ``commit`` is a
+    driver bug and raises.
+    """
+
+    DEPTH = 2
+
+    def __init__(self, flush_fn: Callable[..., float],
+                 cost_model: Optional[CostModel] = None):
+        self._flush = flush_fn
+        self._staged: deque = deque()
+        self.cost = cost_model if cost_model is not None else CostModel()
+        self._dram = TIER_SPECS[Tier.DRAM]
+
+    @property
+    def pending(self) -> int:
+        """Number of staged-but-uncommitted payloads."""
+        return len(self._staged)
+
+    def begin(self, k: int, scalars: Mapping[str, float],
+              vectors: Mapping[str, "np.ndarray"]) -> float:
+        if len(self._staged) >= self.DEPTH:
+            raise RuntimeError(
+                f"persist staging depth {self.DEPTH} exceeded: commit or "
+                f"drain before staging iteration {k}")
+        # A real copy, not a view: the caller may reuse its buffers while
+        # the staged payload waits for commit (the cost charged below IS
+        # this copy).
+        vecs = {name: np.array(v) for name, v in vectors.items()}
+        nbytes = 8 + 8 * len(scalars) + sum(v.nbytes for v in vecs.values())
+        self._staged.append((int(k), dict(scalars), vecs))
+        return self.cost.add("stage", self._dram.write_cost(nbytes))
+
+    def commit(self) -> float:
+        if not self._staged:
+            return 0.0
+        k, scalars, vectors = self._staged.popleft()
+        return self._flush(k, scalars, vectors)
+
+    def drain(self) -> float:
+        total = 0.0
+        while self._staged:
+            total += self.commit()
+        return total
+
+    def abort(self) -> int:
+        n = len(self._staged)
+        self._staged.clear()
+        return n

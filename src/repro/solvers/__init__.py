@@ -25,6 +25,8 @@ from repro.solvers.chebyshev import (  # noqa: F401
     spectral_bounds,
 )
 from repro.solvers.driver import (  # noqa: F401
+    FailureCampaign,
+    FailureEvent,
     FailurePlan,
     SolveConfig,
     SolveReport,

@@ -5,8 +5,15 @@ shares one implementation of the paper's runtime machinery:
 
 - the persistence schedule (classic ESR: every iteration; ESRP: bursts of
   ``schema.history`` successive iterations every period ``T``),
-- failure injection (block crashes wiping volatile shards),
-- the survivor-side snapshot at the last completed persistence run,
+- the persistence *pipeline*: synchronous (persist on the critical path,
+  the paper's host-pull baseline) or overlapped (``persist_begin`` stages
+  the payload, ``persist_commit`` flushes it while the next iteration's
+  compute is in flight — DESIGN.md §6),
+- failure injection — single plans or multi-event :class:`FailureCampaign`
+  scenarios (overlapping failures during an in-flight recovery, failures
+  mid-burst falling back to the previous durable run, repeated failures
+  of the same block),
+- the survivor-side snapshot at the last *durable* persistence run,
 - recovery (backend fetch + solver-specific exact reconstruction),
 - convergence monitoring and reporting.
 
@@ -19,9 +26,13 @@ reconstruction.  The backend contributes schema-driven persistence
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
+
+PERSIST_MODES = ("sync", "overlap")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,27 +41,143 @@ class SolveConfig:
     maxiter: int = 10_000
     persistence_period: int = 1   # T=1: classic ESR; T>1: ESRP bursts
     local_solve: str = "auto"     # reconstruction local solver
+    persist_mode: str = "sync"    # "sync": persist on the critical path;
+    #                               "overlap": commit hides behind compute
 
 
 @dataclasses.dataclass(frozen=True)
 class FailurePlan:
-    """Inject a failure of ``blocks`` right after iteration ``at_iteration``."""
+    """Inject a failure of ``blocks`` right after iteration ``at_iteration``
+    (the single-event form, kept for the pre-campaign API)."""
 
     at_iteration: int
     blocks: Tuple[int, ...]
 
 
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    """One failure in a :class:`FailureCampaign`.
+
+    Exactly one trigger must be set:
+
+    - ``at_iteration`` — fire when the solver reaches this iteration
+      (equivalent to a :class:`FailurePlan`).
+    - ``during_recovery_at`` — fire *while the recovery* of the
+      ``at_iteration`` event with this trigger value is in flight: the
+      driver has already fetched recovery payloads for the earlier failed
+      set when this event lands, so that fetch is discarded and the
+      recovery restarts with the enlarged union (an overlapping failure).
+      ``blocks`` may repeat already-failed blocks (a second crash of the
+      same node mid-recovery).
+    """
+
+    blocks: Tuple[int, ...]
+    at_iteration: Optional[int] = None
+    during_recovery_at: Optional[int] = None
+
+    def __post_init__(self):
+        if not self.blocks:
+            raise ValueError("a FailureEvent needs at least one block")
+        if (self.at_iteration is None) == (self.during_recovery_at is None):
+            raise ValueError(
+                "set exactly one of at_iteration / during_recovery_at")
+        if self.at_iteration is not None and self.at_iteration < 1:
+            raise ValueError(
+                f"FailureEvent.at_iteration must be >= 1 (iteration 0 "
+                f"precedes the first persisted recovery point), got "
+                f"{self.at_iteration}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureCampaign:
+    """A multi-failure scenario: iteration-triggered events plus
+    overlapping events that land during those events' recoveries."""
+
+    events: Tuple[FailureEvent, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+        triggers = {e.at_iteration for e in self.events
+                    if e.at_iteration is not None}
+        for e in self.events:
+            if (e.during_recovery_at is not None
+                    and e.during_recovery_at not in triggers):
+                raise ValueError(
+                    f"during_recovery_at={e.during_recovery_at} matches no "
+                    f"at_iteration event in the campaign")
+
+
 @dataclasses.dataclass
 class SolveReport:
+    """Outcome and accounting of one driver run.
+
+    Progress / outcome:
+
+    - ``iterations`` — completed iterations at exit (``int(state.k)``).
+    - ``wasted_iterations`` — iterations discarded by rollbacks: for each
+      recovery, the distance from the failure iteration back to the
+      durable recovery point (the ESRP trade-off, paper §2; also > 0 in
+      overlap mode when the failure aborts a staged-but-uncommitted
+      persist).
+    - ``failures_recovered`` — failure *events* recovered, including
+      overlapping events absorbed into a restarted recovery.
+    - ``recovery_restarts`` — recoveries that had to discard an
+      already-fetched payload and refetch because an overlapping failure
+      enlarged the failed set mid-recovery.
+    - ``converged`` — relative residual reached ``SolveConfig.tol``.
+    - ``final_relres`` — ``||b - A x|| / ||b||`` proxy at exit
+      (``solver.residual_norm / ||b||``).
+    - ``residual_history`` — the relative residual at the top of every
+      main-loop pass (recovered iterations appear twice, by design).
+    - ``solver`` — the solver's registry name.
+
+    Persistence accounting (modeled seconds — see ``nvm/store.py`` for
+    the simulation contract):
+
+    - ``persist_events`` — committed persistence events (aborted staged
+      events are not counted).
+    - ``persist_cost_s`` — total commit cost: the tier/network write the
+      backend models for a full persist of all blocks.
+    - ``persist_stage_s`` — staging cost (the local DRAM copy of the slot
+      payload) paid on the critical path in overlap mode; 0 in sync mode,
+      where the whole persist is on the critical path.
+    - ``persist_hidden_s`` — the part of ``persist_cost_s`` hidden behind
+      the next iteration's compute (overlap mode; per event
+      ``min(commit_cost, measured compute wall)``).
+    - ``persist_exposed_s`` — ``persist_cost_s - persist_hidden_s``: what
+      the solver actually waits for.  In sync mode this equals
+      ``persist_cost_s``.
+    - ``persist_drain_s`` — drain-barrier cost paid at recoveries and at
+      exit (committing leftover staged payloads; for the PRD backend also
+      joining the target-side exposure epoch).
+    - ``persist_mode`` — the pipeline that produced these numbers.
+
+    ``persist_hidden_fraction`` is the derived headline metric:
+    ``persist_hidden_s / persist_cost_s`` (0.0 for a sync run or when
+    nothing was persisted).
+    """
+
     iterations: int = 0
     wasted_iterations: int = 0
     failures_recovered: int = 0
+    recovery_restarts: int = 0
     converged: bool = False
     final_relres: float = float("nan")
     persist_cost_s: float = 0.0
+    persist_stage_s: float = 0.0
+    persist_hidden_s: float = 0.0
+    persist_exposed_s: float = 0.0
+    persist_drain_s: float = 0.0
     persist_events: int = 0
+    persist_mode: str = "sync"
     residual_history: List[float] = dataclasses.field(default_factory=list)
     solver: str = ""
+
+    @property
+    def persist_hidden_fraction(self) -> float:
+        if self.persist_cost_s <= 0.0:
+            return 0.0
+        return self.persist_hidden_s / self.persist_cost_s
 
 
 def should_persist(k: int, period: int, history: int = 2) -> bool:
@@ -99,6 +226,26 @@ class _LegacyBackendAdapter:
                 RecoverySet(cur.k, {"beta": cur.beta}, {"p": cur.p})]
 
 
+def _as_campaign(failures) -> FailureCampaign:
+    """Normalize the ``failures`` argument: a campaign passes through; a
+    sequence of plans/events becomes an iteration-triggered campaign."""
+    if isinstance(failures, FailureCampaign):
+        return failures
+    events = []
+    for f in failures:
+        if isinstance(f, FailureEvent):
+            events.append(f)
+        elif isinstance(f, FailurePlan):
+            # FailureEvent.__post_init__ re-validates at_iteration >= 1
+            events.append(FailureEvent(blocks=tuple(f.blocks),
+                                       at_iteration=f.at_iteration))
+        else:
+            raise TypeError(
+                f"failures must be FailurePlan/FailureEvent entries or a "
+                f"FailureCampaign, got {type(f).__name__}")
+    return FailureCampaign(tuple(events))
+
+
 def solve(
     solver,
     op,
@@ -106,17 +253,25 @@ def solve(
     precond,
     config: SolveConfig = SolveConfig(),
     backend=None,
-    failures: Sequence[FailurePlan] = (),
+    failures: Union[FailureCampaign, Sequence[FailurePlan]] = (),
     x0=None,
     capture_states_at: Sequence[int] = (),
 ):
     """Run ``solver`` with optional ESR/NVM-ESR fault tolerance.
 
     ``backend`` is an in-memory-ESR or NVM-ESR recovery backend (or None
-    for an unprotected run).  ``failures`` injects block crashes.  Returns
-    the final state, a report, and any states captured for verification.
+    for an unprotected run).  ``failures`` injects block crashes — either
+    a sequence of :class:`FailurePlan` (the single-event form) or a
+    :class:`FailureCampaign` with overlapping/mid-burst/repeated events.
+    Returns the final state, a report, and any states captured for
+    verification.
     """
     schema = solver.schema
+    if config.persist_mode not in PERSIST_MODES:
+        raise ValueError(
+            f"persist_mode must be one of {PERSIST_MODES}, "
+            f"got {config.persist_mode!r}")
+    overlap = config.persist_mode == "overlap"
     if backend is not None:
         if getattr(backend, "schema", None) is not None and backend.schema != schema:
             raise ValueError(
@@ -126,40 +281,48 @@ def solve(
         if not hasattr(backend, "persist_set"):
             backend = _LegacyBackendAdapter(backend, schema)
     history = schema.history
+    # Backends without a native begin/commit pipeline (the legacy adapter,
+    # external duck-typed backends) still get overlap through driver-side
+    # staging: hold the payload here, flush via persist_set at commit.
+    native_stage = backend is not None and hasattr(backend, "persist_begin")
 
     state = solver.init_state(op, precond, b, x0)
     step = solver.make_step(op, precond)
     bnorm = float(jnp.linalg.norm(b))
-    report = SolveReport(solver=solver.name)
+    report = SolveReport(solver=solver.name, persist_mode=config.persist_mode)
     captured: Dict[int, object] = {}
-    pending = sorted(failures, key=lambda f: f.at_iteration)
-    if pending and pending[0].at_iteration < 1:
-        # a plan that can never fire would also block every later plan
-        # (injection matches the sorted list head) — fail loudly instead
-        raise ValueError(
-            f"FailurePlan.at_iteration must be >= 1 (iteration 0 precedes "
-            f"the first persisted recovery point), got "
-            f"{pending[0].at_iteration}")
-    pending_idx = 0
 
-    # Survivor-side snapshot at the last completed persistence run: the
+    campaign = _as_campaign(failures)
+    at_events: Dict[int, List[FailureEvent]] = {}
+    during_events: Dict[int, List[FailureEvent]] = {}
+    for ev in campaign.events:
+        if ev.at_iteration is not None:
+            at_events.setdefault(ev.at_iteration, []).append(ev)
+        else:
+            during_events.setdefault(ev.during_recovery_at, []).append(ev)
+
+    # Survivor-side snapshot at the last *durable* persistence run: the
     # surviving processes' own state copy kept in their local RAM (cheap,
     # one shard each).  Needed to roll back to the recovery point when
-    # persistence is periodic (ESRP trade-off, paper §2).
+    # persistence is periodic (ESRP trade-off, paper §2).  In overlap
+    # mode the snapshot only advances when the run's final commit lands —
+    # a staged-but-uncommitted persist is not a recovery point.
     snapshot = None
     last_persisted_k: Optional[int] = None
     consecutive = 0
+    staged_state = None     # state whose payload is staged, pending commit
+    staged_payload = None   # driver-side staging for non-native backends
 
-    def persist_now(st) -> None:
+    def _note_committed(st, cost: float, window_s: float) -> None:
         nonlocal snapshot, last_persisted_k, consecutive
-        if backend is None:
-            return
-        rset = solver.recovery_set(st)
-        cost = backend.persist_set(rset.k, rset.scalars, rset.vectors)
         report.persist_cost_s += cost
         report.persist_events += 1
-        consecutive = consecutive + 1 if last_persisted_k == rset.k - 1 else 1
-        last_persisted_k = rset.k
+        hidden = min(cost, window_s)
+        report.persist_hidden_s += hidden
+        report.persist_exposed_s += cost - hidden
+        k_c = int(st.k)
+        consecutive = consecutive + 1 if last_persisted_k == k_c - 1 else 1
+        last_persisted_k = k_c
         if consecutive >= history:
             # a full history-run is now durable -> new recovery point.
             # (The k=0 persist alone is NOT one for history >= 2; the
@@ -169,8 +332,97 @@ def solve(
             # below with a clear message.)
             snapshot = st
 
+    def persist_begin(st) -> None:
+        nonlocal staged_state, staged_payload
+        rset = solver.recovery_set(st)
+        if native_stage:
+            report.persist_stage_s += backend.persist_begin(
+                rset.k, rset.scalars, rset.vectors)
+        else:
+            staged_payload = rset
+        staged_state = st
+
+    def persist_commit(window_s: float = 0.0) -> None:
+        nonlocal staged_state, staged_payload
+        if staged_state is None:
+            return
+        if native_stage:
+            cost = backend.persist_commit()
+        else:
+            cost = backend.persist_set(staged_payload.k, staged_payload.scalars,
+                                       staged_payload.vectors)
+            staged_payload = None
+        _note_committed(staged_state, cost, window_s)
+        staged_state = None
+
+    def persist_abort() -> None:
+        # The backend side is aborted by backend.fail() (its stager's
+        # abort); here we only drop the driver-side bookkeeping so the
+        # dead event is never counted or committed.
+        nonlocal staged_state, staged_payload
+        staged_state = None
+        staged_payload = None
+
+    def persist_point(st) -> None:
+        """One scheduled persistence event.  Sync mode is the paper's
+        fully synchronous host pull: write straight through, no staging
+        copy, everything exposed.  Overlap mode stages now and commits
+        behind the next iteration's compute."""
+        if overlap:
+            persist_begin(st)
+        else:
+            rset = solver.recovery_set(st)
+            cost = backend.persist_set(rset.k, rset.scalars, rset.vectors)
+            _note_committed(st, cost, 0.0)
+
+    def run_recovery(ev: FailureEvent, st, k: int):
+        """The campaign recovery engine.  Handles ``ev`` plus any events
+        triggered *during* this recovery: each overlapping event enlarges
+        the failed union and forces a refetch (the already-fetched
+        payloads are stale — their hosts may just have died)."""
+        nonlocal snapshot
+        persist_abort()  # an in-flight staged persist dies with the nodes
+        overlap_queue = list(during_events.pop(ev.at_iteration, ()))
+        failed: List[int] = []
+        new = list(ev.blocks)
+        events_handled = 0
+        st_wiped = st
+        while True:
+            events_handled += 1
+            failed = sorted(set(failed) | set(new))
+            st_wiped = solver.wipe(st_wiped, op.partition, new)  # VM lost
+            backend.fail(tuple(new))
+            # Drain barrier: outstanding persistence settles (or is torn
+            # away) before the durable recovery point is read.
+            if hasattr(backend, "persist_drain"):
+                report.persist_drain_s += backend.persist_drain()
+            assert snapshot is not None, \
+                "no completed persistence run before failure"
+            k_rec = int(snapshot.k)
+            ks = tuple(range(k_rec - history + 1, k_rec + 1))
+            sets = backend.recover_set(tuple(failed), ks)
+            if overlap_queue:
+                # A second failure lands while this recovery is in
+                # flight: the fetch above is stale, restart with the
+                # enlarged union.
+                nxt = overlap_queue.pop(0)
+                new = list(nxt.blocks)
+                report.recovery_restarts += 1
+                continue
+            st_new = solver.reconstruct(
+                op, precond, b,
+                snapshot=snapshot,
+                failed_blocks=list(failed),
+                sets=sets,
+                local_method=config.local_solve,
+            )
+            report.wasted_iterations += k - k_rec
+            report.failures_recovered += events_handled
+            return st_new
+
     # Iteration 0 counts as persisted so the first run completes early.
-    persist_now(state)
+    if backend is not None:
+        persist_point(state)
 
     while int(state.k) < config.maxiter:
         k = int(state.k)
@@ -184,34 +436,34 @@ def solve(
             break
 
         # ---- failure injection + recovery ----
-        if pending_idx < len(pending) and k == pending[pending_idx].at_iteration:
-            plan = pending[pending_idx]
-            pending_idx += 1
+        pending_here = at_events.get(k)
+        if pending_here:
+            ev = pending_here.pop(0)
+            if not pending_here:
+                del at_events[k]
             if backend is None:
-                raise RuntimeError("failure injected but no recovery backend configured")
-            state = solver.wipe(state, op.partition, plan.blocks)  # VM lost
-            backend.fail(plan.blocks)
-            assert snapshot is not None, "no completed persistence run before failure"
-            k_rec = int(snapshot.k)
-            report.wasted_iterations += k - k_rec  # ESRP discard cost
-            ks = tuple(range(k_rec - history + 1, k_rec + 1))
-            sets = backend.recover_set(plan.blocks, ks)
-            state = solver.reconstruct(
-                op, precond, b,
-                snapshot=snapshot,
-                failed_blocks=list(plan.blocks),
-                sets=sets,
-                local_method=config.local_solve,
-            )
-            report.failures_recovered += 1
+                raise RuntimeError(
+                    "failure injected but no recovery backend configured")
+            state = run_recovery(ev, state, k)
             if int(state.k) in capture_states_at:
                 captured[int(state.k)] = state
             continue
 
+        t0 = time.perf_counter()
         state = step(state)
+        if staged_state is not None:
+            # Overlap window: the commit of iteration k's payload rides
+            # behind iteration k+1's compute.
+            jax.block_until_ready(state)
+            persist_commit(time.perf_counter() - t0)
         if backend is not None and should_persist(
                 int(state.k), config.persistence_period, history):
-            persist_now(state)
+            persist_point(state)
+
+    # Exit drain: a staged final event still commits (exposed — there is
+    # no further compute to hide behind), so the accounting and the
+    # backend's slot ring agree with the sync pipeline.
+    persist_commit(0.0)
 
     report.iterations = int(state.k)
     report.final_relres = solver.residual_norm(state) / bnorm

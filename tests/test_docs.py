@@ -1,0 +1,52 @@
+"""Execute the documentation's python snippets (ISSUE 2 satellite).
+
+The CI docs job syntax-checks every fenced block without a runtime
+(`tools/check_docs.py`); here, with jax available, the snippets *run* —
+so the README example and the wire-format round-trip cannot rot.
+Blocks are executed per-file in one shared namespace, in order, like a
+doctest session.
+"""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from check_docs import python_blocks  # noqa: E402
+
+DOC_FILES = ["README.md", "docs/recovery-format.md"]
+
+
+@pytest.mark.parametrize("doc", DOC_FILES)
+def test_doc_snippets_execute(doc):
+    text = (REPO / doc).read_text()
+    blocks = list(python_blocks(text))
+    assert blocks, f"{doc} has no python examples to run"
+    namespace = {}
+    for line_no, src in blocks:
+        code = compile(src, f"{doc}:{line_no}", "exec")
+        exec(code, namespace)  # noqa: S102 — executing our own docs
+
+
+def test_check_docs_cli_passes_on_repo_docs():
+    """The docs CI job's exact invocation succeeds against the tree."""
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"),
+         "README.md", "DESIGN.md", "docs/recovery-format.md"],
+        cwd=REPO, capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_check_docs_cli_flags_rot(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text(
+        "see [missing](nope.md)\n\n```python\ndef broken(:\n```\n")
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"), str(bad)],
+        capture_output=True, text=True)
+    assert out.returncode == 1
+    assert "does not compile" in out.stderr
+    assert "broken relative link" in out.stderr

@@ -1,0 +1,101 @@
+"""Unit coverage for ``driver._LegacyBackendAdapter`` (ISSUE 2 satellite).
+
+The adapter bridges pre-zoo duck-typed backends (``persist(k, beta, p)`` /
+``recover(blocks, k)``, PCG payloads only) into the schema-driven
+``persist_set``/``recover_set`` contract.  The end-to-end path is covered
+by ``test_solver_zoo``; these tests pin the adapter's own behavior —
+round-trip fidelity, attribute passthrough, the stale-pair refusal for
+untrusted external contracts, and the non-PCG schema rejection.
+"""
+import numpy as np
+import pytest
+
+from repro.core.state import PCG_SCHEMA, RecoveryPayload
+from repro.solvers import make_solver
+from repro.solvers.driver import _LegacyBackendAdapter
+from repro.solvers.gmres import GMRES_SCHEMA
+
+
+class _OldStyle:
+    """Minimal pre-zoo backend: full-vector slots keyed by iteration."""
+
+    custom_attr = "passthrough"
+
+    def __init__(self, block_size=8):
+        self.block_size = block_size
+        self.slots = {}
+        self.failed = []
+
+    def persist(self, k, beta, p_full):
+        self.slots[k] = (beta, np.asarray(p_full).copy())
+        return 0.125
+
+    def fail(self, blocks):
+        self.failed.append(tuple(blocks))
+
+    def recover(self, blocks, k):
+        def payload(kk):
+            beta, p = self.slots[kk]
+            shards = [p[b * self.block_size:(b + 1) * self.block_size]
+                      for b in blocks]
+            return RecoveryPayload(kk, beta, np.concatenate(shards))
+        return payload(k - 1), payload(k)
+
+
+def test_persist_recover_round_trip():
+    be = _OldStyle()
+    ad = _LegacyBackendAdapter(be, PCG_SCHEMA)
+
+    p0 = np.arange(32, dtype=np.float64)
+    p1 = p0 + 100.0
+    assert ad.persist_set(0, {"beta": 0.0}, {"p": p0}) == 0.125
+    assert ad.persist_set(1, {"beta": 0.25}, {"p": p1}) == 0.125
+
+    sets = ad.recover_set([1, 2], (0, 1))
+    assert [s.k for s in sets] == [0, 1]
+    assert sets[-1].scalars["beta"] == 0.25
+    np.testing.assert_array_equal(sets[0].vectors["p"], p0[8:24])
+    np.testing.assert_array_equal(sets[-1].vectors["p"], p1[8:24])
+
+    # non-shim attributes fall through to the wrapped backend
+    assert ad.custom_attr == "passthrough"
+    ad.fail((1, 2))
+    assert be.failed == [(1, 2)]
+
+
+def test_stale_pair_refused():
+    """An external backend returning the wrong iteration pair must not be
+    silently reconstructed from — the adapter refuses loudly."""
+
+    class StaleBackend(_OldStyle):
+        def recover(self, blocks, k):
+            prev, cur = super().recover(blocks, k)
+            return prev._replace(k=prev.k - 1), cur  # off-by-one pair
+
+    ad = _LegacyBackendAdapter(StaleBackend(), PCG_SCHEMA)
+    ad.persist_set(4, {"beta": 0.0}, {"p": np.zeros(32)})
+    ad.persist_set(5, {"beta": 0.5}, {"p": np.ones(32)})
+    with pytest.raises(RuntimeError, match="legacy backend .* returned"):
+        ad.recover_set([0], (4, 5))
+
+
+def test_non_pcg_schema_rejected():
+    """The legacy wire format carries PCG payloads only; adapting a
+    backend for any other schema is a loud, early error."""
+    with pytest.raises(ValueError, match="legacy"):
+        _LegacyBackendAdapter(_OldStyle(), GMRES_SCHEMA)
+
+
+def test_driver_wraps_legacy_backend_lazily():
+    """solve() only wraps backends lacking persist_set; the adapter is an
+    internal detail the caller never constructs for modern backends."""
+    from repro.core import JacobiPreconditioner, make_poisson_problem
+    from repro.solvers import SolveConfig, solve
+
+    op, b = make_poisson_problem(8, 8, 8, nblocks=4)
+    pre = JacobiPreconditioner(op)
+    be = _OldStyle(op.partition.block_size)
+    solver = make_solver("pcg", op, pre)
+    _, rep, _ = solve(solver, op, b, pre, SolveConfig(tol=1e-10), backend=be)
+    assert rep.converged and rep.persist_events > 0
+    assert be.slots  # persisted through the adapter shim

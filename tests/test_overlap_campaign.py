@@ -1,0 +1,285 @@
+"""Overlapped persistence + multi-failure campaign acceptance suite.
+
+The tentpole claims (ISSUE 2):
+
+- every zoo solver survives a campaign that chains a *mid-burst* failure
+  (the ESRP burst is interrupted while its last persist is staged but not
+  committed, so recovery falls back to the previous durable run), an
+  *overlapping* failure (a second block set crashes while the first
+  recovery's payload fetch is already in flight, forcing a refetch over
+  the enlarged union), and a *repeated* failure after recovery — through
+  all three backends, reconstructing to machine precision;
+- the overlapped pipeline hides persistence behind compute
+  (``persist_hidden_fraction > 0``) while the synchronous baseline pays
+  everything on the critical path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import JacobiPreconditioner, make_poisson_problem
+from repro.core.esr import InMemoryESR
+from repro.core.nvm_esr import NVMESRHomogeneous
+from repro.core.state import PCG_SCHEMA
+from repro.nvm.store import CostModel, PersistStager
+from repro.solvers import (
+    SOLVERS,
+    FailureCampaign,
+    FailureEvent,
+    FailurePlan,
+    SolveConfig,
+    make_backend,
+    make_solver,
+    solve,
+)
+
+ALL_BACKENDS = ("esr", "nvm-homogeneous", "nvm-prd")
+
+# Per-solver campaign schedule, chosen against each solver's convergence
+# horizon on the 8x8x8 problem.  With persistence period T and history h,
+# overlapped commits trail staging by one iteration, so a failure at the
+# listed iteration catches the burst's last persist staged-but-uncommitted
+# (mid-burst) and rolls back to krec — the previous durable run's end.
+#   fields: (solver opts, T, event1_at, krec1, event2_at, krec2)
+CAMPAIGN_CASES = {
+    "pcg":       ({},         5, 6, 1, 12, 11),
+    "chebyshev": ({},         5, 6, 1, 12, 11),
+    "jacobi":    ({},         5, 5, 0, 12, 10),
+    "bicgstab":  ({},         5, 5, 0,  9,  5),   # converges at k=12
+    "gmres":     ({"m": 4},   3, 3, 0,  7,  6),   # k counts restart cycles
+}
+assert set(CAMPAIGN_CASES) == set(SOLVERS)
+
+CAPTURE = tuple(range(14))
+
+
+def _problem():
+    op, b = make_poisson_problem(8, 8, 8, nblocks=4)
+    return op, b, JacobiPreconditioner(op)
+
+
+_REF_CACHE = {}
+
+
+def _reference(solver_name):
+    """Fault-free captured states per solver (shared across backends)."""
+    if solver_name not in _REF_CACHE:
+        op, b, pre = _problem()
+        opts = CAMPAIGN_CASES[solver_name][0]
+        solver = make_solver(solver_name, op, pre, **opts)
+        _, rep, cap = solve(solver, op, b, pre,
+                            SolveConfig(tol=1e-10, maxiter=5000),
+                            capture_states_at=CAPTURE)
+        assert rep.converged
+        _REF_CACHE[solver_name] = cap
+    return _REF_CACHE[solver_name]
+
+
+def _state_fields_close(got, want, rtol=1e-8, atol=1e-10):
+    for field in got._fields:
+        a, c = getattr(got, field), getattr(want, field)
+        if hasattr(a, "shape"):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                       rtol=rtol, atol=atol, err_msg=field)
+
+
+@pytest.mark.parametrize("backend_name", ALL_BACKENDS)
+@pytest.mark.parametrize("solver_name", sorted(SOLVERS))
+def test_campaign_overlapping_midburst_repeated(solver_name, backend_name):
+    """The acceptance criterion: one campaign chains (1) a mid-burst
+    failure whose staged persist is torn away, (2) a second failure
+    landing during the in-flight recovery (same union refetched), and
+    (3) a repeated failure of an already-failed block after recovery —
+    every reconstruction matching the fault-free trajectory."""
+    op, b, pre = _problem()
+    opts, period, e1, krec1, e2, krec2 = CAMPAIGN_CASES[solver_name]
+    ref_cap = _reference(solver_name)
+
+    solver = make_solver(solver_name, op, pre, **opts)
+    backend = make_backend(backend_name, op, solver=solver)
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1, 2), at_iteration=e1),
+        FailureEvent(blocks=(0,), during_recovery_at=e1),  # overlapping
+        FailureEvent(blocks=(1,), at_iteration=e2),        # repeated block
+    ))
+    state, rep, cap = solve(
+        solver, op, b, pre,
+        SolveConfig(tol=1e-10, maxiter=5000, persistence_period=period,
+                    persist_mode="overlap"),
+        backend=backend, failures=campaign, capture_states_at=CAPTURE)
+
+    assert rep.failures_recovered == 3
+    assert rep.recovery_restarts == 1
+    assert rep.wasted_iterations == (e1 - krec1) + (e2 - krec2)
+    assert rep.converged
+    assert rep.persist_hidden_fraction > 0.0
+
+    # Post-recovery states match the fault-free run at the rollback points
+    # (captured last by the recovery that produced them).
+    _state_fields_close(cap[krec1], ref_cap[krec1])
+    _state_fields_close(cap[krec2], ref_cap[krec2])
+
+    res = float(np.linalg.norm(np.asarray(b - op.apply(state.x)))
+                / np.linalg.norm(np.asarray(b)))
+    assert res < 1e-9
+
+
+@pytest.mark.parametrize("backend_name", ALL_BACKENDS)
+def test_sync_vs_overlap_accounting(backend_name):
+    """Same schedule, two pipelines: overlap hides commit cost behind
+    compute, sync pays it all exposed; both persist the same events."""
+    op, b, pre = _problem()
+    reps = {}
+    for mode in ("sync", "overlap"):
+        solver = make_solver("pcg", op, pre)
+        backend = make_backend(backend_name, op, solver=solver)
+        _, rep, _ = solve(solver, op, b, pre,
+                          SolveConfig(tol=1e-10, maxiter=5000,
+                                      persist_mode=mode),
+                          backend=backend)
+        reps[mode] = rep
+
+    sync, over = reps["sync"], reps["overlap"]
+    assert sync.persist_events == over.persist_events > 0
+    np.testing.assert_allclose(sync.persist_cost_s, over.persist_cost_s,
+                               rtol=1e-12)
+    assert sync.persist_hidden_s == 0.0
+    assert sync.persist_hidden_fraction == 0.0
+    assert sync.persist_exposed_s == pytest.approx(sync.persist_cost_s)
+    assert sync.persist_stage_s == 0.0          # no staging copy in sync
+    assert over.persist_hidden_fraction > 0.0
+    assert over.persist_stage_s > 0.0
+    assert over.persist_exposed_s < sync.persist_exposed_s
+
+
+def test_overlap_with_duck_typed_legacy_backend():
+    """Backends without a native begin/commit pipeline get driver-side
+    staging: overlap mode works through the legacy adapter too."""
+    from repro.core.state import RecoveryPayload
+
+    class OldStyleBackend:
+        def __init__(self, nblocks, block_size):
+            self.nblocks, self.block_size = nblocks, block_size
+            self.slots = {}
+
+        def persist(self, k, beta, p_full):
+            self.slots[k] = (beta, np.asarray(p_full).copy())
+            return 0.0
+
+        def fail(self, blocks):
+            pass
+
+        def recover(self, blocks, k):
+            def payload(kk, beta):
+                shards = [self.slots[kk][1][b * self.block_size:(b + 1) * self.block_size]
+                          for b in blocks]
+                return RecoveryPayload(kk, beta, np.concatenate(shards))
+            return payload(k - 1, 0.0), payload(k, self.slots[k][0])
+
+    op, b, pre = _problem()
+    be = OldStyleBackend(op.nblocks, op.partition.block_size)
+    solver = make_solver("pcg", op, pre)
+    state, rep, _ = solve(solver, op, b, pre,
+                          SolveConfig(tol=1e-10, persist_mode="overlap"),
+                          backend=be, failures=[FailurePlan(10, (1, 2))])
+    assert rep.failures_recovered == 1 and rep.converged
+    # the failure aborted the staged persist of iteration 10
+    assert rep.wasted_iterations == 1
+
+
+def test_invalid_persist_mode_rejected():
+    op, b, pre = _problem()
+    solver = make_solver("pcg", op, pre)
+    with pytest.raises(ValueError, match="persist_mode"):
+        solve(solver, op, b, pre, SolveConfig(persist_mode="async"))
+
+
+def test_campaign_validation():
+    with pytest.raises(ValueError, match="at least one block"):
+        FailureEvent(blocks=())
+    with pytest.raises(ValueError, match="exactly one"):
+        FailureEvent(blocks=(1,))
+    with pytest.raises(ValueError, match="exactly one"):
+        FailureEvent(blocks=(1,), at_iteration=3, during_recovery_at=3)
+    with pytest.raises(ValueError, match="at_iteration"):
+        FailureEvent(blocks=(1,), at_iteration=0)
+    with pytest.raises(ValueError, match="matches no"):
+        FailureCampaign((FailureEvent(blocks=(1,), during_recovery_at=5),))
+    with pytest.raises(TypeError, match="failures"):
+        solve_args = _problem()
+        op, b, pre = solve_args
+        solve(make_solver("pcg", op, pre), op, b, pre,
+              SolveConfig(tol=1e-10), failures=[object()])
+
+
+# ----------------------------------------------------------------------
+# Pipeline unit tests
+# ----------------------------------------------------------------------
+def test_persist_stager_lifecycle():
+    flushed = []
+
+    def flush(k, scalars, vectors):
+        flushed.append((k, dict(scalars), {n: v.copy() for n, v in vectors.items()}))
+        return 1.5
+
+    cm = CostModel()
+    st = PersistStager(flush, cost_model=cm)
+    assert st.pending == 0
+    assert st.commit() == 0.0          # nothing staged: free no-op
+
+    c0 = st.begin(0, {"beta": 0.5}, {"p": np.arange(4.0)})
+    assert c0 > 0.0 and st.pending == 1
+    assert cm.seconds["stage"] == pytest.approx(c0)
+
+    # double buffering: a second begin is allowed, a third is a bug
+    st.begin(1, {"beta": 0.25}, {"p": np.arange(4.0) + 1})
+    with pytest.raises(RuntimeError, match="depth"):
+        st.begin(2, {}, {"p": np.arange(4.0)})
+
+    assert st.commit() == 1.5          # oldest first
+    assert flushed[0][0] == 0 and flushed[0][1] == {"beta": 0.5}
+    assert st.drain() == 1.5
+    assert flushed[1][0] == 1
+    assert st.pending == 0
+
+    st.begin(2, {}, {"p": np.arange(4.0)})
+    assert st.abort() == 1
+    assert st.pending == 0 and st.drain() == 0.0
+    assert len(flushed) == 2           # aborted payload never flushed
+
+
+@pytest.mark.parametrize("make_be", [
+    lambda: InMemoryESR(4, 8, np.float64, schema=PCG_SCHEMA),
+    lambda: NVMESRHomogeneous(4, 8, np.float64, schema=PCG_SCHEMA),
+])
+def test_staged_persist_dies_with_failure(make_be):
+    """Crash consistency through the pipeline: a staged-but-uncommitted
+    payload is torn away by a failure and can never be recovered, while
+    committed slots survive."""
+    be = make_be()
+    n = 4 * 8
+    for k in range(3):
+        be.persist_set(k, {"beta": 0.1 * k}, {"p": np.full(n, float(k))})
+    be.persist_begin(3, {"beta": 0.3}, {"p": np.full(n, 3.0)})
+    be.fail((0,))
+
+    sets = be.recover_set((0,), (1, 2))            # previous run intact
+    assert [s.k for s in sets] == [1, 2]
+    np.testing.assert_array_equal(sets[-1].vectors["p"], np.full(8, 2.0))
+    with pytest.raises(Exception, match="3"):      # staged slot never landed
+        be.recover_set((0,), (2, 3))
+
+
+def test_prd_drain_barrier_settles_epochs():
+    """persist_drain commits staged payloads AND joins the PRD exposure
+    epoch, so a subsequent crash of the PRD store loses nothing."""
+    be = make_backend("nvm-prd", make_poisson_problem(8, 8, 8, nblocks=4)[0],
+                      schema=PCG_SCHEMA)
+    n = be.nblocks * be.block_size
+    be.persist_set(0, {"beta": 0.0}, {"p": np.zeros(n)})
+    be.persist_begin(1, {"beta": 0.5}, {"p": np.ones(n)})
+    be.persist_drain()
+    be.prd.crash()                                  # durable image only
+    sets = be.recover_set((1,), (0, 1))
+    assert [s.k for s in sets] == [0, 1]
+    np.testing.assert_array_equal(sets[-1].vectors["p"],
+                                  np.ones(be.block_size))

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Lightweight documentation checker (ISSUE 2 satellite: docs CI job).
+
+Dependency-free on purpose — the CI docs job runs it on a bare Python
+without jax installed.  Two classes of rot it catches:
+
+1. **Snippet rot** — every fenced ```python block must at least compile
+   (SyntaxError = broken example).  Full *execution* of the snippets
+   happens in the tier-1 suite (``tests/test_docs.py``), which has the
+   real runtime available.
+2. **Link rot** — every relative markdown link / image target must exist
+   in the repository (``[text](path)``; external ``http(s)://`` and
+   ``#anchor`` links are skipped).
+
+Usage: ``python tools/check_docs.py README.md DESIGN.md docs/*.md``
+Exit status is non-zero when anything is broken.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def python_blocks(text: str):
+    """Yield (start_line, source) for each fenced ```python block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m and m.group(1) == "python":
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield start + 1, "\n".join(body)
+        i += 1
+
+
+def relative_links(text: str):
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        yield target.split("#")[0]
+
+
+def check_file(path: Path, repo_root: Path) -> list:
+    errors = []
+    text = path.read_text()
+    nblocks = 0
+    for line_no, src in python_blocks(text):
+        nblocks += 1
+        try:
+            compile(src, f"{path}:{line_no}", "exec")
+        except SyntaxError as e:
+            errors.append(f"{path}:{line_no}: python block does not compile: {e}")
+    nlinks = 0
+    for target in relative_links(text):
+        if not target:
+            continue
+        nlinks += 1
+        base = repo_root if target.startswith("/") else path.parent
+        resolved = (base / target.lstrip("/")).resolve()
+        if not resolved.exists():
+            errors.append(f"{path}: broken relative link -> {target}")
+    print(f"{path}: {nblocks} python block(s), {nlinks} relative link(s)")
+    return errors
+
+
+def main(argv) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    repo_root = Path(__file__).resolve().parent.parent
+    errors = []
+    for name in argv:
+        p = Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        errors.extend(check_file(p, repo_root))
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
