@@ -15,8 +15,15 @@ Two views the paper-era benchmarks don't cover:
    already-failed block.  Reported per backend: recovered events,
    recovery restarts, wasted iterations, and convergence.
 
+3. **Replicated PRD** (ISSUE 3) — ``replicated(nvm-prd x2)`` vs a single
+   PRD node: the persist-cost overhead of RAID-1 mirroring in both
+   pipelines, the hidden fraction the overlap window still buys, and a
+   campaign whose event crashes one PRD node *itself* alongside two
+   compute blocks (recovered from the surviving mirror).
+
 Smoke mode (``REPRO_BENCH_SMOKE=1`` or ``run.py --smoke``) shrinks the
-grid so the sweep doubles as a CI dry run.
+grid so the sweep doubles as a CI dry run (including the composite
+backend path).
 """
 from __future__ import annotations
 
@@ -91,4 +98,42 @@ def rows():
         out.append((f"campaign_{bname}_wasted_iterations",
                     rep.wasted_iterations,
                     f"rollback cost over {rep.iterations} iterations"))
+
+    # ---- replicated PRD: mirroring overhead + PRD-node-loss campaign ----
+    repl_name = "replicated(nvm-prd x2)"
+    repl_reps = {}
+    for mode in ("sync", "overlap"):
+        reps = {}
+        for bname in ("nvm-prd", repl_name):
+            solver = make_solver("pcg", op, pre)
+            be = make_backend(bname, op, solver=solver)
+            _, rep, _ = solve(solver, op, b, pre,
+                              SolveConfig(tol=tol, maxiter=20000,
+                                          persist_mode=mode),
+                              backend=be)
+            reps[bname] = rep
+        repl_reps[mode] = reps[repl_name]
+        out.append((f"replicated_prd_x2_{mode}_persist_overhead",
+                    reps[repl_name].persist_cost_s
+                    / max(reps["nvm-prd"].persist_cost_s, 1e-30),
+                    "mirrored persist cost / single-PRD cost (~2x)"))
+        out.append((f"replicated_prd_x2_{mode}_exposed_us_per_event",
+                    reps[repl_name].persist_exposed_s * 1e6
+                    / max(reps[repl_name].persist_events, 1),
+                    "critical-path cost per event with two mirrors"))
+    out.append(("replicated_prd_x2_hidden_fraction",
+                repl_reps["overlap"].persist_hidden_fraction,
+                "share of the DOUBLED commit cost still hidden"))
+
+    solver = make_solver("pcg", op, pre)
+    be = make_backend(repl_name, op, solver=solver)
+    prd_campaign = FailureCampaign((
+        FailureEvent(blocks=(1, 2), at_iteration=8, prd=True),))
+    _, rep, _ = solve(solver, op, b, pre,
+                      SolveConfig(tol=tol, maxiter=20000,
+                                  persist_mode="overlap"),
+                      backend=be, failures=prd_campaign)
+    out.append(("replicated_prd_x2_prdloss_recovered", rep.failures_recovered,
+                f"PRD node + 2 blocks crashed; storage_failures="
+                f"{rep.storage_failures} converged={rep.converged}"))
     return out

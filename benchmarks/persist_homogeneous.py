@@ -38,13 +38,14 @@ def esr_inmemory_cost(nprocs: int) -> float:
     """Full-fault-tolerance redundancy iteration (modeled)."""
     nprocs = max(nprocs, 2)  # redundancy needs at least one peer
     be = InMemoryESR(nprocs, LOCAL_N, np.float64)
-    return be.persist(1, 0.5, _payload(nprocs)) / nprocs  # per-process view
+    cost = be.persist_set(1, {"beta": 0.5}, {"p": _payload(nprocs)})
+    return cost / nprocs  # per-process view
 
 
 def nvm_homog_cost(nprocs: int, tier: Tier) -> float:
     be = NVMESRHomogeneous(min(nprocs, 4), LOCAL_N, np.float64, tier=tier)
     # wall cost is the max over blocks (parallel nodes): measure 4, it's flat
-    return be.persist(1, 0.5, _payload(min(nprocs, 4)))
+    return be.persist_set(1, {"beta": 0.5}, {"p": _payload(min(nprocs, 4))})
 
 
 def local_window_cost(nprocs: int) -> float:

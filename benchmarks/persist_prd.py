@@ -26,7 +26,7 @@ def prd_costs(nprocs: int, tier: Tier, network: str):
                    async_drain=True)
     rng = np.random.default_rng(0)
     p = rng.standard_normal(nprocs * LOCAL_N)
-    origin = be.persist(1, 0.5, p)
+    origin = be.persist_set(1, {"beta": 0.5}, {"p": p})
     target = be.drain()
     return origin, target
 
@@ -38,7 +38,8 @@ def rows():
         o_ram, _ = prd_costs(nprocs, Tier.DRAM, "rdma")
         o_ssd, t_ssd = prd_costs(nprocs, Tier.SSD, "sshfs")
         esr = InMemoryESR(max(nprocs, 2), LOCAL_N, np.float64)
-        e = esr.persist(1, 0.5, np.zeros(max(nprocs, 2) * LOCAL_N)) / max(nprocs, 2)
+        e = esr.persist_set(1, {"beta": 0.5},
+                            {"p": np.zeros(max(nprocs, 2) * LOCAL_N)}) / max(nprocs, 2)
         out.append((f"fig10_prd_rdma_nvm_p{nprocs}", o_nvm * 1e6,
                     f"origin us; target drain {t_nvm*1e6:.0f}us overlapped"))
         out.append((f"fig10_prd_rdma_ram_p{nprocs}", o_ram * 1e6,

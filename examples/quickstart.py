@@ -1,9 +1,11 @@
-"""Quickstart: the paper in 60 seconds.
+"""Quickstart: the paper in 60 seconds, through the ``repro.api`` façade.
 
-Solve a 3-D Poisson system with distributed PCG, kill two "nodes"
-mid-solve, and watch NVM-ESR reconstruct the exact state from the
-persisted minimal set (two p-vectors and a scalar) — no checkpoint of
-x/r/z ever taken.
+Solve a 3-D Poisson system with distributed PCG over two *mirrored*
+(simulated) NVRAM PRD nodes, then kill two compute "nodes" AND one of
+the PRD nodes mid-solve — and watch recovery reconstruct the exact
+state from the surviving mirror's minimal persisted set (two p-vectors
+and a scalar).  No checkpoint of x/r/z is ever taken, and the
+persistence commits hide behind the solver's own compute.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,44 +13,42 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import (
-    FailurePlan,
-    JacobiPreconditioner,
-    NVMESRPRD,
-    PCGConfig,
-    make_poisson_problem,
-    solve,
-)
+from repro import api
 
 
 def main() -> None:
     # 24x16x16 grid = 6144 unknowns over 8 process blocks (z-slabs)
-    op, b = make_poisson_problem(24, 16, 16, nblocks=8)
-    pre = JacobiPreconditioner(op)
+    problem = api.Problem.poisson(24, 16, 16, nblocks=8)
 
-    # recovery data goes to a (simulated) remote NVRAM PRD node via
-    # MPI-OSC/PSCW — O(n) NVM bytes, ZERO peer RAM
-    backend = NVMESRPRD(op.nblocks, op.partition.block_size, np.float64)
-
-    state, report, _ = solve(
-        op, b, pre, PCGConfig(tol=1e-10),
-        backend=backend,
-        failures=[FailurePlan(at_iteration=25, blocks=(2, 5))],
+    result = api.solve(
+        problem,
+        api.SolverSpec("pcg", tol=1e-10),
+        # RAID-1 over two PRD nodes: the single-point-of-failure the
+        # paper scopes out, closed by composition (DESIGN.md §7)
+        api.ResilienceSpec("replicated(nvm-prd x2)", persist_mode="overlap"),
+        failures=[api.FailureEvent(blocks=(2, 5), at_iteration=25, prd=True)],
     )
 
-    res = float(jnp.linalg.norm(b - op.apply(state.x)) / jnp.linalg.norm(b))
-    print(f"converged       : {report.converged} in {report.iterations} iterations")
-    print(f"final rel. res. : {res:.2e}")
-    print(f"failures healed : {report.failures_recovered} "
-          f"(blocks 2 and 5 died at iteration 25)")
-    print(f"wasted iters    : {report.wasted_iterations} (ESR persists every iter)")
-    print(f"RAM redundancy  : {backend.memory_overhead_values()} values "
-          f"(in-memory ESR would hold {2*(op.nblocks-1)*op.n})")
-    print(f"NVM footprint   : {backend.nvm_values()} values (4-slot ring of p-shards)")
-    assert report.converged and res < 1e-9
+    rep = result.report
+    caps = result.capabilities
+    print(f"backend caps    : durability={caps.durability} "
+          f"survives_prd_loss={caps.survives_prd_loss} "
+          f"overlap={caps.overlap}")
+    print(f"converged       : {result.converged} in {result.iterations} iterations")
+    print(f"final rel. res. : {result.relres:.2e}")
+    print(f"failures healed : {rep.failures_recovered} "
+          f"(blocks 2 and 5 + one PRD node died at iteration 25)")
+    print(f"PRD nodes lost  : {rep.storage_failures} (absorbed by the mirror)")
+    print(f"wasted iters    : {rep.wasted_iterations}")
+    print(f"persist hidden  : {rep.persist_hidden_fraction:.0%} of the "
+          f"mirrored commit cost rode behind compute")
+    print(f"RAM redundancy  : {result.backend.memory_overhead_values()} values "
+          f"(in-memory ESR would hold "
+          f"{2 * (problem.op.nblocks - 1) * problem.op.n})")
+    print(f"NVM footprint   : {result.backend.nvm_values()} values "
+          f"(a 4-slot ring of p-shards, x2 mirrors)")
+    assert result.converged and result.relres < 1e-9
+    assert rep.failures_recovered == 1 and rep.storage_failures == 1
 
 
 if __name__ == "__main__":

@@ -28,13 +28,20 @@ from repro.solvers import (
 
 
 def main() -> None:
-    from repro.launch.report import solve_report_table
+    from repro.launch.report import capability_matrix_table, solve_report_table
+    from repro.nvm.backend import backend_names
 
     op, b = make_poisson_problem(32, 16, 16, nblocks=8)
     pre = JacobiPreconditioner(op)
     bs = op.partition.block_size
     bnorm = float(jnp.linalg.norm(b))
     reports = []
+
+    print("Registered backends and their declared capabilities "
+          "(DESIGN.md §7):")
+    print(capability_matrix_table(
+        (name, make_backend(name, op)) for name in backend_names()))
+    print()
 
     print(f"{'solver':10s} {'set':22s} {'iters':>5s} {'relres':>9s} "
           f"{'persist(ms)':>11s} {'NVM KiB':>8s} {'wall(s)':>8s}")

@@ -1,0 +1,220 @@
+"""``repro.api`` — the front door: problem, solver, resilience, solve.
+
+The rest of the package is deliberately explicit (operators, schemas,
+sessions, registries); this façade wires it for the common case so a
+recoverable solve is three declarations and one call::
+
+    from repro import api
+
+    result = api.solve(
+        api.Problem.poisson(8, nblocks=4),
+        api.SolverSpec("pcg"),
+        api.ResilienceSpec("replicated(nvm-prd x2)", persist_mode="overlap"),
+    )
+    assert result.converged
+
+Everything is still the same machinery underneath — `SolverSpec.build`
+returns a registry solver, `ResilienceSpec.build` a registry
+:class:`~repro.nvm.backend.PersistenceBackend` (spec strings compose:
+``"replicated(nvm-prd x2)"``, ``"tiered(nvm-homogeneous)"``), and
+:func:`solve` drives :func:`repro.solvers.driver.solve` — so anything
+built here interoperates with hand-wired code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.poisson import PRECONDITIONERS, make_poisson_problem
+from repro.nvm.backend import (
+    BackendCapabilities,
+    PersistenceBackend,
+    UnrecoverableFailure,
+    backend_names,
+)
+from repro.solvers import driver as _driver
+from repro.solvers.driver import (
+    FailureCampaign,
+    FailureEvent,
+    FailurePlan,
+    SolveConfig,
+    SolveReport,
+)
+from repro.solvers.registry import SOLVERS, make_backend, make_solver
+
+__all__ = [
+    "Problem",
+    "SolverSpec",
+    "ResilienceSpec",
+    "SolveResult",
+    "solve",
+    "solver_names",
+    "backend_names",
+    "BackendCapabilities",
+    "PersistenceBackend",
+    "UnrecoverableFailure",
+    "FailureCampaign",
+    "FailureEvent",
+    "FailurePlan",
+    "SolveConfig",
+    "SolveReport",
+]
+
+
+def solver_names() -> list:
+    """All registered solver names."""
+    return sorted(SOLVERS)
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """A linear system ``A x = b`` with a preconditioner: the operator is
+    matrix-free and block-partitioned (the failure/recovery unit)."""
+
+    op: Any
+    b: Any
+    precond: Any
+
+    @classmethod
+    def poisson(cls, nz: int, ny: Optional[int] = None,
+                nx: Optional[int] = None, nblocks: int = 4,
+                preconditioner: str = "jacobi") -> "Problem":
+        """The paper's benchmark: a 7-point 3-D Poisson stencil with a
+        smooth right-hand side, split into ``nblocks`` z-slabs.  ``ny``
+        and ``nx`` default to ``nz`` (a cubic grid)."""
+        op, b = make_poisson_problem(nz, ny if ny is not None else nz,
+                                     nx if nx is not None else nz,
+                                     nblocks=nblocks)
+        try:
+            pre_cls = PRECONDITIONERS[preconditioner]
+        except KeyError:
+            from repro.nvm.backend import unknown_name_error
+
+            raise unknown_name_error("preconditioner", preconditioner,
+                                     PRECONDITIONERS) from None
+        return cls(op=op, b=b, precond=pre_cls(op))
+
+    @classmethod
+    def from_parts(cls, op, b, precond=None) -> "Problem":
+        """Wrap an existing operator / rhs / preconditioner triple."""
+        if precond is None:
+            precond = PRECONDITIONERS["identity"](op)
+        return cls(op=op, b=b, precond=precond)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    """Which solver, to what accuracy.
+
+    ``options`` are forwarded to the solver factory (e.g. ``{"m": 8}``
+    for restarted GMRES)."""
+
+    name: str = "pcg"
+    tol: float = 1e-10
+    maxiter: int = 10_000
+    options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def build(self, problem: Problem):
+        return make_solver(self.name, problem.op, problem.precond,
+                           **dict(self.options))
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceSpec:
+    """Which persistence backend, and how persistence is scheduled.
+
+    ``backend`` is a registry name or composable spec string
+    (``"nvm-prd"``, ``"replicated(nvm-prd x2)"``,
+    ``"tiered(nvm-homogeneous)"``), an already-built
+    :class:`~repro.nvm.backend.PersistenceBackend`, or None for an
+    unprotected run.  ``persist_mode`` picks the pipeline ("sync" or
+    "overlap", DESIGN.md §6); ``period`` the ESRP persistence period.
+    ``options`` are forwarded to the backend factory."""
+
+    backend: Union[str, PersistenceBackend, None] = "nvm-prd"
+    persist_mode: str = "sync"
+    period: int = 1
+    dtype: Any = np.float64
+    options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def build(self, problem: Problem, solver) -> Optional[PersistenceBackend]:
+        if self.backend is None or isinstance(self.backend, PersistenceBackend):
+            return self.backend
+        return make_backend(self.backend, problem.op, dtype=self.dtype,
+                            solver=solver, **dict(self.options))
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    """Outcome of :func:`solve`: the final solver state, the full
+    :class:`~repro.solvers.driver.SolveReport`, any captured states, and
+    the backend (for capability / footprint inspection)."""
+
+    state: Any
+    report: SolveReport
+    captured: Dict[int, Any]
+    backend: Optional[PersistenceBackend]
+
+    @property
+    def x(self) -> np.ndarray:
+        """The solution iterate as a host array."""
+        return np.asarray(self.state.x)
+
+    @property
+    def converged(self) -> bool:
+        return self.report.converged
+
+    @property
+    def relres(self) -> float:
+        return self.report.final_relres
+
+    @property
+    def iterations(self) -> int:
+        return self.report.iterations
+
+    @property
+    def capabilities(self) -> Optional[BackendCapabilities]:
+        return None if self.backend is None else self.backend.capabilities
+
+
+def solve(
+    problem: Problem,
+    solver: Union[SolverSpec, str] = SolverSpec(),
+    resilience: Union[ResilienceSpec, str, None] = None,
+    failures: Union[FailureCampaign, Sequence, Tuple] = (),
+    x0=None,
+    capture_states_at: Sequence[int] = (),
+) -> SolveResult:
+    """Build the solver and backend from their specs and run the
+    recoverable solve.
+
+    ``solver`` and ``resilience`` accept bare name strings as shorthand
+    for default specs (``"pcg"`` == ``SolverSpec("pcg")``,
+    ``"replicated(nvm-prd x2)"`` ==
+    ``ResilienceSpec("replicated(nvm-prd x2)")``); ``resilience=None``
+    runs unprotected (and refuses injected failures, like the driver).
+    """
+    if isinstance(solver, str):
+        solver = SolverSpec(solver)
+    if isinstance(resilience, str):
+        resilience = ResilienceSpec(resilience)
+    if resilience is None:
+        resilience = ResilienceSpec(backend=None)
+
+    built_solver = solver.build(problem)
+    backend = resilience.build(problem, built_solver)
+    config = SolveConfig(
+        tol=solver.tol,
+        maxiter=solver.maxiter,
+        persistence_period=resilience.period,
+        persist_mode=resilience.persist_mode,
+    )
+    state, report, captured = _driver.solve(
+        built_solver, problem.op, problem.b, problem.precond,
+        config=config, backend=backend, failures=failures, x0=x0,
+        capture_states_at=capture_states_at,
+    )
+    return SolveResult(state=state, report=report, captured=captured,
+                       backend=backend)

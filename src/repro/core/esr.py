@@ -31,10 +31,18 @@ from repro.core.state import (  # noqa: F401  (payload helpers re-exported)
     RecoverySet,
     concat_sets,
     legacy_pair,
+    newest_complete_run,
     peek_k,
     require_pcg_schema,
     shard_vectors,
     typed_vectors,
+)
+from repro.nvm.backend import (  # noqa: F401  (UnrecoverableFailure re-exported)
+    OVERLAP_NATIVE,
+    BackendCapabilities,
+    SchemaDrivenBackend,
+    UnrecoverableFailure,
+    warn_legacy_call,
 )
 from repro.nvm.store import (
     NETWORK_SPECS,
@@ -45,11 +53,7 @@ from repro.nvm.store import (
 )
 
 
-class UnrecoverableFailure(RuntimeError):
-    """All redundancy copies of some failed block were lost with it."""
-
-
-class InMemoryESR:
+class InMemoryESR(SchemaDrivenBackend):
     """Peer-RAM redundancy backend with explicit copy placement."""
 
     name = "esr-inmemory"
@@ -81,6 +85,21 @@ class InMemoryESR:
         self._dram = TIER_SPECS[Tier.DRAM]
         self._net = NETWORK_SPECS["rdma"]
         self._stager = PersistStager(self.persist_set, cost_model=self.cost)
+
+    # ------------------------------------------------------------------
+    @property
+    def capabilities(self) -> BackendCapabilities:
+        """Peer RAM is volatile and dies with its hosts: data survives
+        node loss only while ``|failures| <= copies`` (the failed block
+        occupies one slot of the failed set, so at most ``copies - 1``
+        of its ``copies`` peer hosts can be among the casualties)."""
+        return BackendCapabilities(
+            durability="ram",
+            survives_node_loss=True,
+            survives_prd_loss=False,
+            overlap=OVERLAP_NATIVE,
+            max_block_failures=self.copies,
+        )
 
     # ------------------------------------------------------------------
     def _hosts(self, block: int) -> List[int]:
@@ -122,7 +141,8 @@ class InMemoryESR:
         return cost
 
     def persist(self, k: int, beta: float, p_full: np.ndarray) -> float:
-        """Legacy PCG-shaped persist (pre-zoo API)."""
+        """Legacy PCG-shaped persist (pre-zoo API; deprecated)."""
+        warn_legacy_call(self, "persist")
         require_pcg_schema(self.schema, "persist")
         return self.persist_set(k, {"beta": beta}, {"p": p_full})
 
@@ -150,7 +170,8 @@ class InMemoryESR:
                 return self.schema.decode(cand, self.dtype)
         raise UnrecoverableFailure(
             f"block {block}: no surviving copy of iteration {kk} — "
-            f"{len(failed_blocks)} failures exceed tolerance c={self.copies - 1}"
+            f"{len(failed_blocks)} failures exceed tolerance c={self.copies} "
+            f"(capabilities.max_block_failures)"
         )
 
     def recover_set(self, failed_blocks: Sequence[int],
@@ -166,9 +187,22 @@ class InMemoryESR:
         return out
 
     def recover(self, failed_blocks: Sequence[int], k: int) -> Tuple[RecoveryPayload, RecoveryPayload]:
-        """Legacy PCG-shaped recover (pre-zoo API): the (k-1, k) pair."""
+        """Legacy PCG-shaped recover (pre-zoo API; deprecated): the
+        (k-1, k) pair."""
+        warn_legacy_call(self, "recover")
         require_pcg_schema(self.schema, "recover")
         return legacy_pair(self.recover_set(failed_blocks, (k - 1, k)))
+
+    def durable_run(self) -> Optional[int]:
+        """Newest iteration ending a complete ``history``-run still held
+        by block 0's surviving peer copies (peer-RAM writes are durable
+        the moment they land — there is no flush pipeline)."""
+        ks = set()
+        for host in self._hosts(0):
+            for (owner, _slot), payload in self.ram[host].items():
+                if owner == 0:
+                    ks.add(peek_k(payload))
+        return newest_complete_run(ks, self.schema.history)
 
     # ------------------------------------------------------------------
     def memory_overhead_values(self) -> int:

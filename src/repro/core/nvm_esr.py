@@ -42,10 +42,19 @@ from repro.core.state import (
     RecoverySet,
     concat_sets,
     legacy_pair,
+    newest_complete_run,
     peek_k,
     require_pcg_schema,
     shard_vectors,
     typed_vectors,
+)
+from repro.nvm.backend import (
+    OVERLAP_NATIVE,
+    BackendCapabilities,
+    DeprecatedBackendTable,
+    SchemaDrivenBackend,
+    register_backend_class,
+    warn_legacy_call,
 )
 from repro.nvm.pmdk import PmemPool
 from repro.nvm.prd import PRDNode
@@ -56,7 +65,7 @@ def ring_slots(schema: RecoverySchema) -> int:
     return max(2, 2 * schema.history)
 
 
-class NVMESRHomogeneous:
+class NVMESRHomogeneous(SchemaDrivenBackend):
     """Local-NVM persistence (one pool per block / compute node)."""
 
     name = "nvm-esr-homogeneous"
@@ -93,6 +102,27 @@ class NVMESRHomogeneous:
         #                  with gaps, and k % slots would overwrite a slot
         #                  that is still part of the last complete run)
         self._stager = PersistStager(self.persist_set, cost_model=self.cost)
+
+    @property
+    def capabilities(self) -> BackendCapabilities:
+        """Local pools survive a node crash (Algorithm 5 waits for the
+        node to return), but the pool service itself is the node — a
+        persistence-service loss is not survivable without mirroring."""
+        return BackendCapabilities(
+            durability=self.pools[0].store.tier.value,
+            survives_node_loss=True,
+            survives_prd_loss=False,
+            overlap=OVERLAP_NATIVE,
+            max_block_failures=None,
+        )
+
+    def storage_crash(self) -> None:
+        """Persistence-service loss: every pool's node power-fails at
+        once (unflushed writes torn).  Reachability is gone regardless;
+        sessions guard fetches with :class:`UnrecoverableFailure`."""
+        self._stager.abort()
+        for pool in self.pools:
+            pool.store.crash()
 
     # -- overlapped persistence (DESIGN.md §6): stage now, flush later
     def persist_begin(self, k: int, scalars: Mapping[str, float],
@@ -132,7 +162,8 @@ class NVMESRHomogeneous:
         return cost
 
     def persist(self, k: int, beta: float, p_full: np.ndarray) -> float:
-        """Legacy PCG-shaped persist (pre-zoo API)."""
+        """Legacy PCG-shaped persist (pre-zoo API; deprecated)."""
+        warn_legacy_call(self, "persist")
         require_pcg_schema(self.schema, "persist")
         return self.persist_set(k, {"beta": beta}, {"p": p_full})
 
@@ -176,7 +207,9 @@ class NVMESRHomogeneous:
         return [concat_sets(self.schema, per_k[kk]) for kk in ks]
 
     def recover(self, failed_blocks: Sequence[int], k: int) -> Tuple[RecoveryPayload, RecoveryPayload]:
-        """Legacy PCG-shaped recover (pre-zoo API): the (k-1, k) pair."""
+        """Legacy PCG-shaped recover (pre-zoo API; deprecated): the
+        (k-1, k) pair."""
+        warn_legacy_call(self, "recover")
         require_pcg_schema(self.schema, "recover")
         return legacy_pair(self.recover_set(failed_blocks, (k - 1, k)))
 
@@ -188,14 +221,13 @@ class NVMESRHomogeneous:
             raw = pool.read(f"slot{s}")
             if raw is not None:
                 ks.add(peek_k(raw))
-        best = None
-        for k in sorted(ks):
-            if all(k - i in ks for i in range(self.schema.history)):
-                best = k
-        return best
+        return newest_complete_run(ks, self.schema.history)
 
     # legacy alias (PCG pair semantics)
     latest_pair = latest_run
+
+    # the protocol name (PersistSession.durable_run delegates here)
+    durable_run = latest_run
 
     # ------------------------------------------------------------------
     def memory_overhead_values(self) -> int:
@@ -205,7 +237,7 @@ class NVMESRHomogeneous:
         return self.slots * len(self.schema.vectors) * self.nblocks * self.block_size
 
 
-class NVMESRPRD:
+class NVMESRPRD(SchemaDrivenBackend):
     """Remote persistence to a PRD sub-cluster node over MPI OSC / RDMA."""
 
     name = "nvm-esr-prd"
@@ -243,6 +275,27 @@ class NVMESRPRD:
         self.cost = self.prd.store.cost
         self._event = 0  # persistence-event counter (see NVMESRHomogeneous)
         self._stager = PersistStager(self.persist_set, cost_model=self.cost)
+
+    @property
+    def capabilities(self) -> BackendCapabilities:
+        """Recovery data stays reachable through arbitrary compute-node
+        failures (the PRD architecture's defining property) but the PRD
+        node itself is a single point of failure — the paper scopes the
+        RAID fix out; :class:`repro.nvm.backend.ReplicatedBackend`
+        composes it back in."""
+        return BackendCapabilities(
+            durability=self.prd.store.tier.value,
+            survives_node_loss=True,
+            survives_prd_loss=False,
+            overlap=OVERLAP_NATIVE,
+            max_block_failures=None,
+        )
+
+    def storage_crash(self) -> None:
+        """The PRD node power-fails: staged origin-side payloads can
+        never be put, and unflushed exposure epochs are torn away."""
+        self._stager.abort()
+        self.prd.crash()
 
     # -- overlapped persistence (DESIGN.md §6): stage now, put later
     def persist_begin(self, k: int, scalars: Mapping[str, float],
@@ -286,7 +339,8 @@ class NVMESRPRD:
         return origin
 
     def persist(self, k: int, beta: float, p_full: np.ndarray) -> float:
-        """Legacy PCG-shaped persist (pre-zoo API)."""
+        """Legacy PCG-shaped persist (pre-zoo API; deprecated)."""
+        warn_legacy_call(self, "persist")
         require_pcg_schema(self.schema, "persist")
         return self.persist_set(k, {"beta": beta}, {"p": p_full})
 
@@ -323,9 +377,21 @@ class NVMESRPRD:
         return [concat_sets(self.schema, per_k[kk]) for kk in ks]
 
     def recover(self, failed_blocks: Sequence[int], k: int) -> Tuple[RecoveryPayload, RecoveryPayload]:
-        """Legacy PCG-shaped recover (pre-zoo API): the (k-1, k) pair."""
+        """Legacy PCG-shaped recover (pre-zoo API; deprecated): the
+        (k-1, k) pair."""
+        warn_legacy_call(self, "recover")
         require_pcg_schema(self.schema, "recover")
         return legacy_pair(self.recover_set(failed_blocks, (k - 1, k)))
+
+    def durable_run(self) -> Optional[int]:
+        """Newest iteration ending a complete ``history``-run durable on
+        the PRD node (block 0's virtual ranks; this is a drain barrier —
+        it joins any in-flight exposure epoch before answering)."""
+        ks = set()
+        for vr in range(self.vranks):
+            for seq, _payload in self.prd.scan_rank(vr):
+                ks.add(seq - 1)  # header seq carries k+1
+        return newest_complete_run(ks, self.schema.history)
 
     # ------------------------------------------------------------------
     def memory_overhead_values(self) -> int:
@@ -336,12 +402,19 @@ class NVMESRPRD:
                 * self.nblocks * self.block_size)
 
 
-# Backend registry: every entry resolves to a constructor callable
-# ``(nblocks, block_size, dtype, **opts) -> backend``.  The richer
-# solver-zoo view (backends x solvers by name) lives in
-# :mod:`repro.solvers.registry`, which re-exports this table.
-BACKENDS = {
+# The three core architectures in the single backend registry
+# (:mod:`repro.nvm.backend`); composites ("replicated", "tiered")
+# register there.  ``repro.solvers.registry.make_backend`` and
+# ``repro.api`` size registry backends from an operator.
+register_backend_class("esr", InMemoryESR)
+register_backend_class("nvm-homogeneous", NVMESRHomogeneous)
+register_backend_class("nvm-prd", NVMESRPRD)
+
+# Deprecated table view of the pre-redesign registry: iteration and
+# membership stay silent (benchmarks sweep the names), construction via
+# ``BACKENDS[name](...)`` warns and routes through the class factory.
+BACKENDS = DeprecatedBackendTable({
     "esr": InMemoryESR,
     "nvm-homogeneous": NVMESRHomogeneous,
     "nvm-prd": NVMESRPRD,
-}
+})

@@ -105,6 +105,18 @@ def peek_k(raw: bytes) -> int:
     return _K_HEADER.unpack(raw[: _K_HEADER.size])[0]
 
 
+def newest_complete_run(ks, history: int):
+    """Newest ``k`` ending a consecutive ``history``-long run within the
+    iteration set ``ks`` (the durable-recovery-point scan every backend's
+    ``durable_run`` performs), or None if no complete run exists."""
+    ks = set(ks)
+    best = None
+    for k in sorted(ks):
+        if all(k - i in ks for i in range(history)):
+            best = k
+    return best
+
+
 class RecoverySet(NamedTuple):
     """One iteration's decoded recovery payload.
 

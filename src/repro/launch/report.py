@@ -103,6 +103,7 @@ def solve_report_rows(r) -> Dict[str, str]:
         "relres": f"{r.final_relres:.2e}",
         "recovered": str(r.failures_recovered),
         "restarts": str(r.recovery_restarts),
+        "prd lost": str(r.storage_failures),
         "wasted": str(r.wasted_iterations),
         "events": str(r.persist_events),
         "persist ms": f"{r.persist_cost_s * 1e3:.3f}",
@@ -113,17 +114,47 @@ def solve_report_rows(r) -> Dict[str, str]:
     }
 
 
-def solve_report_table(reports) -> str:
-    """Markdown table over solver runs (benchmarks/examples print this)."""
-    rows = [solve_report_rows(r) for r in reports]
+def _markdown_table(rows, empty: str) -> str:
+    """Render dict rows (shared column order from the first row)."""
     if not rows:
-        return "(no solver reports)"
+        return empty
     cols = list(rows[0])
     out = ["| " + " | ".join(cols) + " |",
            "|" + "---|" * len(cols)]
     for row in rows:
         out.append("| " + " | ".join(row[c] for c in cols) + " |")
     return "\n".join(out)
+
+
+def solve_report_table(reports) -> str:
+    """Markdown table over solver runs (benchmarks/examples print this)."""
+    return _markdown_table([solve_report_rows(r) for r in reports],
+                           "(no solver reports)")
+
+
+# ----------------------------------------------------------------------
+# Backend capability reporting (DESIGN.md §7): what each backend in the
+# registry *declares* — rendered by examples and the docs surface.
+# ----------------------------------------------------------------------
+def capability_rows(name: str, backend) -> Dict[str, str]:
+    """One backend's :class:`repro.nvm.backend.BackendCapabilities` as
+    printable columns."""
+    caps = backend.capabilities
+    tol = caps.max_block_failures
+    return {
+        "backend": name,
+        "durability": caps.durability,
+        "node loss": "survives" if caps.survives_node_loss else "fatal",
+        "PRD loss": "survives" if caps.survives_prd_loss else "fatal",
+        "overlap": caps.overlap,
+        "max failures": "unbounded" if tol is None else str(tol),
+    }
+
+
+def capability_matrix_table(named_backends) -> str:
+    """Markdown capability matrix over ``(name, backend)`` pairs."""
+    return _markdown_table([capability_rows(n, b) for n, b in named_backends],
+                           "(no backends)")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,9 @@ Layers
 - :mod:`repro.nvm.windows` — MPI one-sided-communication windows (PSCW /
   fence / passive-target epochs) with ``*_persist`` variants
 - :mod:`repro.nvm.prd`     — persistent-recovery-data (PRD) sub-cluster node
+- :mod:`repro.nvm.backend` — the formal persistence-backend API
+  (capability protocol, sessions, composite replicated/tiered backends,
+  the single backend registry) — DESIGN.md §7
 """
 from repro.nvm.store import (  # noqa: F401
     Tier,
@@ -26,3 +29,15 @@ from repro.nvm.store import (  # noqa: F401
 from repro.nvm.pmdk import PmemPool  # noqa: F401
 from repro.nvm.windows import Window, EpochError  # noqa: F401
 from repro.nvm.prd import PRDNode  # noqa: F401
+from repro.nvm.backend import (  # noqa: F401
+    BackendCapabilities,
+    PersistenceBackend,
+    PersistSession,
+    ReplicatedBackend,
+    TieredBackend,
+    UnrecoverableFailure,
+    backend_names,
+    create_backend,
+    open_persist_session,
+    register_backend,
+)

@@ -1,0 +1,882 @@
+"""The formal persistence-backend API (DESIGN.md §7).
+
+Before this module, the three recovery backends were duck-typed classes
+with an informal, grafted-on protocol (``persist_begin/commit/drain``,
+``persist_set``, legacy ``persist``, ``fail``, ``recover_set``) and the
+resilience guarantee you actually got was implied by which concrete
+class you happened to construct.  Following the composition lesson of
+Pachajoa et al. (arXiv:1907.13077) and EasyCrash (arXiv:1906.10081),
+this module makes the contract explicit:
+
+- :class:`PersistenceBackend` — the ABC every backend implements.  A
+  backend *declares* what it guarantees through a
+  :class:`BackendCapabilities` record and *opens* a
+  :class:`PersistSession` for each solve.
+- :class:`PersistSession` — the per-solve lifecycle the driver speaks:
+  ``begin/commit/drain/abort`` (the overlapped pipeline of DESIGN.md
+  §6), ``persist`` (synchronous write-through), ``fetch`` (recovery
+  reads), ``durable_run`` (the newest durable recovery point), and the
+  failure injection points ``fail`` (compute blocks) / ``fail_storage``
+  (the PRD / persistence-service node itself).
+- composite backends: :class:`ReplicatedBackend` (RAID-1-style
+  mirroring across N children with quorum fetch — PRD redundancy as a
+  *composition*, not a fourth hand-written backend) and
+  :class:`TieredBackend` (a volatile RAM front staging into any child;
+  this tier is also what gives non-pipelined backends overlap support,
+  absorbing the old driver-side staging path).
+- the single backend registry (:func:`register_backend`,
+  :func:`create_backend`, :func:`backend_names`) with composable spec
+  strings — ``"replicated(nvm-prd x2)"`` — replacing the
+  ``core.nvm_esr.BACKENDS`` dict and the registry special-casing.
+- shims that route the two legacy entry points through the new
+  protocol with a :class:`DeprecationWarning`: pre-zoo duck-typed
+  backends (``persist(k, beta, p)`` / ``recover(blocks, k)``) and
+  schema-duck-typed externals (``persist_set`` without sessions).
+
+The slot wire format is untouched: sessions delegate to the same
+schema codecs (docs/recovery-format.md stays valid byte for byte).
+"""
+from __future__ import annotations
+
+import abc
+import collections.abc
+import difflib
+import re
+import warnings
+from dataclasses import dataclass
+from typing import (
+    TYPE_CHECKING,
+    Callable,
+    Dict,
+    List,
+    Mapping,
+    Optional,
+    Sequence,
+    Tuple,
+)
+
+import numpy as np
+
+from repro.nvm.store import TIER_SPECS, CostModel, PersistStager, Tier
+
+if TYPE_CHECKING:
+    from repro.core.state import RecoverySchema, RecoverySet  # noqa: F401
+
+# NOTE: repro.core.* is imported lazily throughout this module.  The
+# core package's __init__ pulls in the solver driver, which imports this
+# module — a top-level core import here would make ``import repro.nvm``
+# order-dependent.
+
+
+class UnrecoverableFailure(RuntimeError):
+    """The recovery data needed to reconstruct a failed block is gone —
+    every redundancy copy died with the failure, or the persistence
+    service itself (PRD node, local pools, peer RAM) was lost and the
+    backend's :class:`BackendCapabilities` do not cover that loss."""
+
+
+OVERLAP_NATIVE = "native"
+OVERLAP_DRIVER_STAGED = "driver-staged"
+
+
+@dataclass(frozen=True)
+class BackendCapabilities:
+    """What a backend *guarantees*, declared instead of implied.
+
+    - ``durability`` — the tier recovery data rests on once committed:
+      ``"ram"`` (volatile peer memory), ``"nvm"``, or ``"ssd"``.
+      Composites join their children's tiers (``"ram+nvm"``).
+    - ``survives_node_loss`` — committed recovery data remains usable
+      after compute-node failures (possibly after the node returns, as
+      in the homogeneous architecture).
+    - ``survives_prd_loss`` — committed recovery data remains usable
+      after the persistence-service node itself (the PRD node, the
+      local pool service, the peer-RAM fabric) crashes.  Only
+      redundant compositions can honestly declare this.
+    - ``overlap`` — ``"native"`` when the backend pipelines
+      ``begin/commit`` itself; ``"driver-staged"`` when overlap is
+      provided by fronting it with a volatile staging tier.
+    - ``max_block_failures`` — largest set of concurrently failed
+      blocks a fetch can serve; ``None`` means unbounded (any number
+      of compute blocks may fail simultaneously).
+    """
+
+    durability: str
+    survives_node_loss: bool
+    survives_prd_loss: bool
+    overlap: str
+    max_block_failures: Optional[int] = None
+
+    def __post_init__(self):
+        if self.overlap not in (OVERLAP_NATIVE, OVERLAP_DRIVER_STAGED):
+            raise ValueError(
+                f"overlap must be {OVERLAP_NATIVE!r} or "
+                f"{OVERLAP_DRIVER_STAGED!r}, got {self.overlap!r}")
+        if not self.durability:
+            raise ValueError("durability tier must be a non-empty string")
+
+
+class PersistSession(abc.ABC):
+    """One solve's persistence stream on an open backend.
+
+    The driver speaks only this interface; costs are modeled seconds
+    (the simulation contract of ``nvm/store.py``).  Lifecycle::
+
+        session = backend.open_session(schema)
+        session.persist(k, scalars, vectors)      # sync write-through
+        session.begin(...); session.commit()      # overlapped pipeline
+        session.fail(blocks); session.drain()     # failure + barrier
+        sets = session.fetch(failed_blocks, ks)   # recovery reads
+    """
+
+    def __init__(self, schema: RecoverySchema):
+        self.schema = schema
+        self._storage_down = False
+
+    # -- overlapped pipeline (DESIGN.md §6) -----------------------------
+    @abc.abstractmethod
+    def begin(self, k: int, scalars: Mapping[str, float],
+              vectors: Mapping[str, np.ndarray]) -> float:
+        """Stage a persistence event; returns the critical-path cost."""
+
+    @abc.abstractmethod
+    def commit(self) -> float:
+        """Flush the oldest staged event; returns the overlappable cost."""
+
+    @abc.abstractmethod
+    def drain(self) -> float:
+        """Barrier: commit everything staged and settle in-flight epochs
+        so every committed event is durable."""
+
+    @abc.abstractmethod
+    def abort(self) -> None:
+        """Discard staged-but-uncommitted events (they died with their
+        origin nodes; an aborted event must never surface later)."""
+
+    # -- synchronous path ----------------------------------------------
+    @abc.abstractmethod
+    def persist(self, k: int, scalars: Mapping[str, float],
+                vectors: Mapping[str, np.ndarray]) -> float:
+        """Write one event straight through (the paper's host-pull
+        baseline); the whole cost is on the critical path."""
+
+    # -- failure + recovery --------------------------------------------
+    @abc.abstractmethod
+    def fail(self, blocks: Sequence[int]) -> None:
+        """Compute blocks crashed: tear away their in-flight writes and
+        whatever recovery copies lived in their volatile memory."""
+
+    def fail_storage(self) -> None:
+        """The persistence-service node itself crashed (the ROADMAP's
+        'campaign event that kills the PRD node').  The base behavior is
+        honest non-survival: committed data becomes unreachable and a
+        later :meth:`fetch` raises :class:`UnrecoverableFailure` instead
+        of serving data that no longer exists.  Redundant composites
+        override this to absorb the loss."""
+        self._storage_down = True
+        self.abort()
+
+    @abc.abstractmethod
+    def fetch(self, failed_blocks: Sequence[int],
+              ks: Sequence[int]) -> List[RecoverySet]:
+        """Read the recovery sets for iterations ``ks`` over the failed
+        union (vectors concatenated in ``failed_blocks`` order).  Must
+        raise :class:`UnrecoverableFailure` — never return stale or
+        partial data — when the request cannot be served exactly."""
+
+    @abc.abstractmethod
+    def durable_run(self) -> Optional[int]:
+        """Newest iteration ending a durable consecutive
+        ``schema.history``-run, or None before the first complete run."""
+
+    # -- guards ---------------------------------------------------------
+    def _check_storage(self) -> None:
+        if self._storage_down:
+            raise UnrecoverableFailure(
+                "persistence-service (PRD) node was lost and this backend "
+                "does not declare survives_prd_loss; recovery data is "
+                "unreachable — compose a ReplicatedBackend for PRD "
+                "redundancy")
+
+
+class PersistenceBackend(abc.ABC):
+    """A persistence backend: declared capabilities + session factory.
+
+    Concrete backends also keep whatever storage-level surface they
+    need (pools, PRD node, accounting); the driver only ever touches
+    the session returned by :meth:`open_session`.
+    """
+
+    #: registry name ("esr", "nvm-prd", "replicated", ...)
+    name: str = ""
+
+    @property
+    @abc.abstractmethod
+    def capabilities(self) -> BackendCapabilities:
+        """The declared guarantee record (instance-level: e.g. the
+        in-memory backend's failure tolerance depends on ``copies``)."""
+
+    @abc.abstractmethod
+    def open_session(self, schema: Optional[RecoverySchema] = None,
+                     partition=None) -> PersistSession:
+        """Open the per-solve lifecycle.  ``schema`` (when given) must
+        match the schema the backend was sized for; ``partition`` is
+        accepted for future unbound backends and validated when the
+        backend knows its own geometry."""
+
+    # -- accounting (paper Fig. 2/8 benchmarks) -------------------------
+    def memory_overhead_values(self) -> int:
+        """Redundancy values resident in volatile RAM."""
+        return 0
+
+    def nvm_values(self) -> int:
+        """Values resident on persistent tiers."""
+        return 0
+
+
+def _validate_schema(backend, schema: Optional[RecoverySchema]):
+    bound = getattr(backend, "schema", None)
+    if schema is not None and bound is not None and bound != schema:
+        raise ValueError(
+            f"backend persists schema {bound.solver!r} but the session "
+            f"was opened for {schema.solver!r}; construct the backend "
+            f"with the solver's schema (see repro.solvers.registry."
+            f"make_backend)")
+    if schema is None and bound is None:
+        raise ValueError("open_session needs a schema for an unbound backend")
+    return bound if schema is None else schema
+
+
+class SchemaDrivenBackend(PersistenceBackend):
+    """Shared base for the schema-driven storage backends (the three
+    core architectures): session opening with schema/partition
+    validation, and the stager-abort hook sessions use on storage loss.
+    Concrete classes declare their own :class:`BackendCapabilities`."""
+
+    nblocks: int
+
+    def open_session(self, schema: Optional[RecoverySchema] = None,
+                     partition=None) -> "CoreBackendSession":
+        schema = _validate_schema(self, schema)
+        if (partition is not None
+                and getattr(partition, "nblocks", self.nblocks) != self.nblocks):
+            raise ValueError(
+                f"backend sized for {self.nblocks} blocks but the "
+                f"partition has {partition.nblocks}")
+        return CoreBackendSession(self, schema)
+
+    def persist_abort(self) -> None:
+        """Abort staged-but-uncommitted payloads (storage-loss teardown;
+        ``fail()`` also aborts as part of the failure model)."""
+        self._stager.abort()
+
+
+def warn_legacy_call(obj, api: str) -> None:
+    """DeprecationWarning for the pre-zoo PCG-only entry points."""
+    warnings.warn(
+        f"{type(obj).__name__}.{api}() is the deprecated PCG-only API; "
+        f"use persist_set/recover_set or a PersistSession "
+        f"(repro.nvm.backend)",
+        DeprecationWarning, stacklevel=3)
+
+
+# ----------------------------------------------------------------------
+# The RAM staging front: a volatile tier that buys overlap for any
+# backend whose own pipeline is synchronous.  This is the component the
+# old driver-side staging path (and the `_LegacyBackendAdapter`) turned
+# into; `TieredBackend` is its first-class composition.
+# ----------------------------------------------------------------------
+class RAMFront:
+    """Double-buffered volatile staging buffer with tier-modeled cost."""
+
+    def __init__(self, flush: Callable[..., float], tier: Tier = Tier.DRAM,
+                 cost_model: Optional[CostModel] = None):
+        self.tier = tier
+        self._stager = PersistStager(flush, cost_model=cost_model)
+        # PersistStager models its staging copy as a DRAM write; other
+        # front tiers scale by the tier's write cost ratio on commit-path
+        # accounting (kept simple: DRAM is the only front used today).
+        if tier is not Tier.DRAM:
+            raise ValueError("only a DRAM front is calibrated; see §7")
+
+    @property
+    def pending(self) -> int:
+        return self._stager.pending
+
+    def begin(self, k, scalars, vectors) -> float:
+        return self._stager.begin(k, scalars, vectors)
+
+    def commit(self) -> float:
+        return self._stager.commit()
+
+    def drain(self) -> float:
+        return self._stager.drain()
+
+    def abort(self) -> int:
+        return self._stager.abort()
+
+
+# ----------------------------------------------------------------------
+# Sessions over the schema-driven core backends (InMemoryESR,
+# NVMESRHomogeneous, NVMESRPRD — and any external object speaking
+# persist_set/recover_set/fail).
+# ----------------------------------------------------------------------
+class CoreBackendSession(PersistSession):
+    """Session over a schema-driven backend.
+
+    Backends with a native ``persist_begin/commit/drain`` pipeline are
+    delegated to directly; backends exposing only ``persist_set`` are
+    fronted by a :class:`RAMFront`, which is exactly the overlap
+    behavior the driver used to hand-roll for them.
+    """
+
+    def __init__(self, backend, schema: RecoverySchema):
+        super().__init__(schema)
+        self._backend = backend
+        self._native = hasattr(backend, "persist_begin")
+        self._front = None if self._native else RAMFront(backend.persist_set)
+
+    # -- pipeline -------------------------------------------------------
+    def begin(self, k, scalars, vectors) -> float:
+        if self._storage_down:
+            return 0.0  # the put target is gone; the event is lost
+        if self._native:
+            return self._backend.persist_begin(k, scalars, vectors)
+        return self._front.begin(k, scalars, vectors)
+
+    def commit(self) -> float:
+        if self._storage_down:
+            self.abort()
+            return 0.0
+        if self._native:
+            return self._backend.persist_commit()
+        return self._front.commit()
+
+    def drain(self) -> float:
+        if self._storage_down:
+            self.abort()
+            return 0.0
+        if self._native:
+            return self._backend.persist_drain()
+        return self._front.drain()
+
+    def abort(self) -> None:
+        if self._native:
+            # core backends abort their stager inside fail(); expose it
+            # directly where available for storage-loss teardown
+            aborter = getattr(self._backend, "persist_abort", None)
+            if aborter is not None:
+                aborter()
+        else:
+            self._front.abort()
+
+    # -- sync path ------------------------------------------------------
+    def persist(self, k, scalars, vectors) -> float:
+        if self._storage_down:
+            return 0.0
+        return self._backend.persist_set(k, scalars, vectors)
+
+    # -- failure + recovery ---------------------------------------------
+    def fail(self, blocks: Sequence[int]) -> None:
+        self._backend.fail(tuple(blocks))
+        if not self._native:
+            self._front.abort()
+
+    def fail_storage(self) -> None:
+        super().fail_storage()
+        crash = getattr(self._backend, "storage_crash", None)
+        if crash is not None:
+            crash()
+
+    def fetch(self, failed_blocks, ks) -> List[RecoverySet]:
+        self._check_storage()
+        return self._backend.recover_set(tuple(failed_blocks), tuple(ks))
+
+    def durable_run(self) -> Optional[int]:
+        if self._storage_down:
+            return None
+        runner = getattr(self._backend, "durable_run", None)
+        return None if runner is None else runner()
+
+
+class LegacyBackendSession(PersistSession):
+    """Session over a pre-zoo duck-typed backend (``persist(k, beta,
+    p_full)`` / ``recover(blocks, k)``, PCG payloads only).
+
+    Replaces the old ``driver._LegacyBackendAdapter``: overlap comes
+    from the :class:`RAMFront` tier, and the untrusted external
+    ``recover`` contract is still refused loudly on a stale pair.
+    """
+
+    def __init__(self, backend, schema: RecoverySchema):
+        from repro.core.state import require_pcg_schema
+
+        try:
+            require_pcg_schema(schema, "persist/recover")
+        except TypeError as e:
+            raise ValueError(
+                f"backend {type(backend).__name__} implements only the "
+                f"legacy API: {e}") from None
+        super().__init__(schema)
+        self._backend = backend
+        self._front = RAMFront(self._flush)
+
+    def _flush(self, k, scalars, vectors) -> float:
+        return self._backend.persist(k, scalars["beta"], vectors["p"])
+
+    def begin(self, k, scalars, vectors) -> float:
+        if self._storage_down:
+            return 0.0  # the flush target is gone; the event is lost
+        return self._front.begin(k, scalars, vectors)
+
+    def commit(self) -> float:
+        if self._storage_down:
+            self.abort()
+            return 0.0
+        return self._front.commit()
+
+    def drain(self) -> float:
+        if self._storage_down:
+            self.abort()
+            return 0.0
+        return self._front.drain()
+
+    def abort(self) -> None:
+        self._front.abort()
+
+    def persist(self, k, scalars, vectors) -> float:
+        if self._storage_down:
+            return 0.0
+        return self._flush(k, scalars, vectors)
+
+    def fail(self, blocks: Sequence[int]) -> None:
+        self._front.abort()
+        self._backend.fail(tuple(blocks))
+
+    def fetch(self, failed_blocks, ks) -> List[RecoverySet]:
+        from repro.core.state import RecoverySet
+
+        self._check_storage()
+        prev, cur = self._backend.recover(tuple(failed_blocks), ks[-1])
+        if (prev.k, cur.k) != (ks[0], ks[-1]):
+            # external, untrusted contract: refuse loudly rather than
+            # reconstruct from a stale pair
+            raise RuntimeError(
+                f"legacy backend {type(self._backend).__name__}.recover "
+                f"returned iterations {(prev.k, cur.k)}, wanted {tuple(ks)}")
+        return [RecoverySet(prev.k, {"beta": prev.beta}, {"p": prev.p}),
+                RecoverySet(cur.k, {"beta": cur.beta}, {"p": cur.p})]
+
+    def durable_run(self) -> Optional[int]:
+        return None
+
+
+def open_persist_session(backend, schema: RecoverySchema,
+                         partition=None) -> PersistSession:
+    """Normalize any backend object into a :class:`PersistSession`.
+
+    - a :class:`PersistenceBackend` opens its own session;
+    - a schema-duck-typed object (``persist_set``/``recover_set``) is
+      wrapped in a :class:`CoreBackendSession`;
+    - a pre-zoo duck-typed object (``persist``/``recover``) routes
+      through :class:`LegacyBackendSession` with a
+      :class:`DeprecationWarning`.
+    """
+    if isinstance(backend, PersistenceBackend) or hasattr(backend, "open_session"):
+        return backend.open_session(schema, partition)
+    if hasattr(backend, "persist_set"):
+        return CoreBackendSession(backend, _validate_schema(backend, schema))
+    if hasattr(backend, "persist"):
+        warnings.warn(
+            f"duck-typed legacy backend {type(backend).__name__} "
+            f"(persist/recover, PCG payloads only) is deprecated; "
+            f"implement repro.nvm.backend.PersistenceBackend",
+            DeprecationWarning, stacklevel=3)
+        return LegacyBackendSession(backend, schema)
+    raise TypeError(
+        f"{type(backend).__name__} is not a persistence backend: expected "
+        f"a PersistenceBackend, a persist_set/recover_set object, or a "
+        f"legacy persist/recover object")
+
+
+# ----------------------------------------------------------------------
+# Composite backends
+# ----------------------------------------------------------------------
+def _join_tiers(children) -> str:
+    tiers = []
+    for c in children:
+        t = c.capabilities.durability
+        if t not in tiers:
+            tiers.append(t)
+    return "+".join(tiers)
+
+
+class ReplicatedSession(PersistSession):
+    """Mirror every event to all live children; fetch by quorum.
+
+    Quorum rule (DESIGN.md §7): mirrors are written in lockstep, every
+    slot is content-addressed (``k``) and CRC-validated by the child,
+    so **any single mirror that serves the complete requested run is
+    authoritative**.  A mirror whose storage died, or that cannot
+    produce the full run, is skipped; only when *no* mirror can serve
+    the run does the fetch raise :class:`UnrecoverableFailure`.
+    """
+
+    def __init__(self, backend: "ReplicatedBackend", schema, partition):
+        super().__init__(schema)
+        self._backend = backend
+        self._children = [open_persist_session(c, schema, partition)
+                          for c in backend.children]
+
+    def _live(self) -> List[PersistSession]:
+        return [s for s in self._children if not s._storage_down]
+
+    # Mirror puts leave the same origin NIC back to back, so the
+    # origin-visible cost of a replicated event is the SUM over mirrors
+    # (the mirroring overhead the benchmarks report), while staging is
+    # still a single local copy per child pipeline.
+    def begin(self, k, scalars, vectors) -> float:
+        return sum(s.begin(k, scalars, vectors) for s in self._live())
+
+    def commit(self) -> float:
+        return sum(s.commit() for s in self._live())
+
+    def drain(self) -> float:
+        return sum(s.drain() for s in self._live())
+
+    def abort(self) -> None:
+        for s in self._children:
+            s.abort()
+
+    def persist(self, k, scalars, vectors) -> float:
+        return sum(s.persist(k, scalars, vectors) for s in self._live())
+
+    def fail(self, blocks: Sequence[int]) -> None:
+        for s in self._children:
+            s.fail(blocks)
+
+    def fail_storage(self) -> None:
+        """One mirror's storage node crashes (mirrors die in order:
+        the first storage-loss event takes mirror 0, the next mirror 1,
+        ...).  The composite itself stays up while any mirror lives."""
+        for s in self._children:
+            if not s._storage_down:
+                s.fail_storage()
+                break
+        if not self._live():
+            self._storage_down = True
+
+    def fetch(self, failed_blocks, ks) -> List[RecoverySet]:
+        errors = []
+        for i, s in enumerate(self._children):
+            if s._storage_down:
+                errors.append(f"mirror {i}: storage lost")
+                continue
+            try:
+                return s.fetch(failed_blocks, ks)
+            except (UnrecoverableFailure, RuntimeError) as e:
+                errors.append(f"mirror {i}: {e}")
+        raise UnrecoverableFailure(
+            f"no mirror of {len(self._children)} can serve iterations "
+            f"{tuple(ks)} for blocks {tuple(failed_blocks)}: "
+            + "; ".join(errors))
+
+    def durable_run(self) -> Optional[int]:
+        runs = [s.durable_run() for s in self._live()]
+        runs = [r for r in runs if r is not None]
+        return max(runs) if runs else None
+
+
+class ReplicatedBackend(PersistenceBackend):
+    """RAID-1-style mirroring across N child backends.
+
+    In particular ``ReplicatedBackend`` over two ``nvm-prd`` children
+    realizes the ROADMAP's "RAID-style PRD redundancy": two PRD nodes,
+    each receiving every persistence epoch, so a campaign event that
+    crashes one PRD node is absorbed and recovery proceeds from the
+    surviving mirror — exactly.
+    """
+
+    name = "replicated"
+
+    def __init__(self, children: Sequence[PersistenceBackend]):
+        if len(children) < 2:
+            raise ValueError(
+                f"replication needs >= 2 children, got {len(children)} — "
+                f"a single child adds cost without redundancy")
+        schemas = {getattr(c, "schema", None) for c in children}
+        if len(schemas) != 1:
+            raise ValueError("all mirrors must persist the same schema")
+        self.children = list(children)
+        self.schema = self.children[0].schema
+
+    @property
+    def capabilities(self) -> BackendCapabilities:
+        caps = [c.capabilities for c in self.children]
+        maxes = [c.max_block_failures for c in caps]
+        return BackendCapabilities(
+            durability=_join_tiers(self.children),
+            survives_node_loss=all(c.survives_node_loss for c in caps),
+            # the defining property: one full mirror may die
+            survives_prd_loss=True,
+            overlap=(OVERLAP_NATIVE
+                     if all(c.overlap == OVERLAP_NATIVE for c in caps)
+                     else OVERLAP_DRIVER_STAGED),
+            max_block_failures=(None if all(m is None for m in maxes)
+                                else min(m for m in maxes if m is not None)),
+        )
+
+    def open_session(self, schema=None, partition=None) -> PersistSession:
+        return ReplicatedSession(self, _validate_schema(self, schema),
+                                 partition)
+
+    def memory_overhead_values(self) -> int:
+        return sum(c.memory_overhead_values() for c in self.children)
+
+    def nvm_values(self) -> int:
+        return sum(c.nvm_values() for c in self.children)
+
+
+class TieredSession(PersistSession):
+    """RAM-front staging into a single child session."""
+
+    def __init__(self, backend: "TieredBackend", schema, partition):
+        super().__init__(schema)
+        self._child = open_persist_session(backend.child, schema, partition)
+        self._front = RAMFront(self._child.persist, tier=backend.front_tier)
+
+    def begin(self, k, scalars, vectors) -> float:
+        return self._front.begin(k, scalars, vectors)
+
+    def commit(self) -> float:
+        return self._front.commit()
+
+    def drain(self) -> float:
+        return self._front.drain() + self._child.drain()
+
+    def abort(self) -> None:
+        self._front.abort()
+        self._child.abort()
+
+    def persist(self, k, scalars, vectors) -> float:
+        return self._child.persist(k, scalars, vectors)
+
+    def fail(self, blocks: Sequence[int]) -> None:
+        self._front.abort()  # the staged front is volatile — it dies
+        self._child.fail(blocks)
+
+    def fail_storage(self) -> None:
+        self._front.abort()
+        self._child.fail_storage()
+        self._storage_down = self._child._storage_down
+
+    def fetch(self, failed_blocks, ks) -> List[RecoverySet]:
+        return self._child.fetch(failed_blocks, ks)
+
+    def durable_run(self) -> Optional[int]:
+        return self._child.durable_run()
+
+
+class TieredBackend(PersistenceBackend):
+    """A volatile RAM front staging into any child backend.
+
+    The front gives *every* child an overlapped ``begin/commit``
+    pipeline (capability ``overlap="native"`` from the driver's point
+    of view) while durability, node-loss and PRD-loss guarantees remain
+    the child's.  This is the first-class form of the staging path the
+    driver used to improvise for non-pipelined backends.
+    """
+
+    name = "tiered"
+
+    def __init__(self, child: PersistenceBackend,
+                 front_tier: Tier = Tier.DRAM):
+        if front_tier is not Tier.DRAM:
+            # fail at composition time, not mid-solve in open_session
+            raise ValueError("only a DRAM front is calibrated; see §7")
+        self.child = child
+        self.front_tier = front_tier
+        self.schema = getattr(child, "schema", None)
+
+    @property
+    def capabilities(self) -> BackendCapabilities:
+        c = self.child.capabilities
+        return BackendCapabilities(
+            durability=c.durability,
+            survives_node_loss=c.survives_node_loss,
+            survives_prd_loss=c.survives_prd_loss,
+            overlap=OVERLAP_NATIVE,
+            max_block_failures=c.max_block_failures,
+        )
+
+    def open_session(self, schema=None, partition=None) -> PersistSession:
+        return TieredSession(self, _validate_schema(self, schema), partition)
+
+    def memory_overhead_values(self) -> int:
+        return self.child.memory_overhead_values()
+
+    def nvm_values(self) -> int:
+        return self.child.nvm_values()
+
+
+# ----------------------------------------------------------------------
+# The single backend registry
+# ----------------------------------------------------------------------
+# name -> factory(nblocks, block_size, dtype, schema=..., **opts)
+_REGISTRY: Dict[str, Callable] = {}
+_SPEC_RE = re.compile(r"^(?P<name>[\w.-]+)\s*(?:\((?P<args>[^()]*)\))?$")
+_CHILD_RE = re.compile(r"^(?P<child>[\w.-]+)\s*[x×]\s*(?P<n>\d+)$")
+
+
+def register_backend(name: str, factory: Callable) -> None:
+    """Register a backend factory under ``name``.  The factory signature
+    is ``factory(nblocks, block_size, dtype, schema=..., **opts) ->
+    PersistenceBackend``."""
+    _REGISTRY[name] = factory
+
+
+def register_backend_class(name: str, cls) -> None:
+    """Register a backend class whose constructor is ``cls(nblocks,
+    block_size, dtype, **opts)`` with a ``schema`` keyword defaulting
+    internally (``schema=None`` from a composite factory is dropped so
+    the class default applies)."""
+
+    def build(nblocks, block_size, dtype, schema=None, **opts):
+        if schema is not None:
+            opts["schema"] = schema
+        return cls(nblocks, block_size, dtype, **opts)
+
+    build.__name__ = f"make_{cls.__name__}"
+    register_backend(name, build)
+
+
+def _ensure_builtin() -> None:
+    # The three core backends register themselves at import; import them
+    # lazily here to avoid a core <-> nvm module cycle.
+    if "esr" not in _REGISTRY:
+        import repro.core.esr  # noqa: F401
+        import repro.core.nvm_esr  # noqa: F401
+
+
+def backend_names() -> List[str]:
+    """All registered backend names (the composable registry view)."""
+    _ensure_builtin()
+    return sorted(_REGISTRY)
+
+
+def unknown_name_error(kind: str, name: str, have) -> KeyError:
+    """A registry miss with a did-you-mean hint (closest match)."""
+    have = sorted(have)
+    msg = f"unknown {kind} {name!r}"
+    close = difflib.get_close_matches(str(name), have, n=1, cutoff=0.5)
+    if close:
+        msg += f" — did you mean {close[0]!r}?"
+    return KeyError(f"{msg}; have {have}")
+
+
+def parse_backend_spec(spec: str) -> Tuple[str, dict]:
+    """Parse a composable backend spec string into ``(name, opts)``.
+
+    Grammar::
+
+        "nvm-prd"                      -> ("nvm-prd", {})
+        "replicated(nvm-prd x2)"       -> ("replicated", {"children": ("nvm-prd",)*2})
+        "replicated(nvm-prd,nvm-homogeneous)"
+        "tiered(nvm-homogeneous)"      -> ("tiered", {"child": "nvm-homogeneous"})
+    """
+    m = _SPEC_RE.match(spec.strip())
+    if m is None:
+        raise ValueError(f"malformed backend spec {spec!r}")
+    name, args = m.group("name"), m.group("args")
+    if args is None:
+        return name, {}
+    args = args.strip()
+    if name == "replicated":
+        xn = _CHILD_RE.match(args)
+        if xn is not None:
+            return name, {"children": (xn.group("child"),) * int(xn.group("n"))}
+        return name, {"children": tuple(a.strip() for a in args.split(",") if a.strip())}
+    if name == "tiered":
+        return name, {"child": args}
+    # Parsing is purely syntactic; whether the name exists (and whether
+    # it takes arguments) is judged by create_backend, so misspelled
+    # composites still get a did-you-mean hint.
+    return name, {"spec_args": args}
+
+
+def create_backend(spec: str, nblocks: int, block_size: int,
+                   dtype=np.float64, **opts) -> PersistenceBackend:
+    """Build a backend from a registry name or composable spec string.
+
+    This is the single constructor path: ``repro.solvers.registry.
+    make_backend`` sizes it from an operator; ``repro.api`` sizes it
+    from a :class:`~repro.api.Problem`.
+    """
+    _ensure_builtin()
+    name, spec_opts = parse_backend_spec(spec)
+    if name not in _REGISTRY:
+        raise unknown_name_error("backend", name, _REGISTRY)
+    if "spec_args" in spec_opts:
+        raise ValueError(
+            f"backend {name!r} takes no spec arguments, got {spec!r}")
+    merged = {**spec_opts, **opts}
+    return _REGISTRY[name](nblocks, block_size, dtype, **merged)
+
+
+def _replicated_factory(nblocks, block_size, dtype,
+                        children: Sequence = ("nvm-prd", "nvm-prd"),
+                        schema=None, **opts) -> ReplicatedBackend:
+    built = [c if isinstance(c, PersistenceBackend)
+             else create_backend(c, nblocks, block_size, dtype,
+                                 schema=schema, **opts)
+             for c in children]
+    return ReplicatedBackend(built)
+
+
+def _tiered_factory(nblocks, block_size, dtype, child="nvm-homogeneous",
+                    schema=None, **opts) -> TieredBackend:
+    built = (child if isinstance(child, PersistenceBackend)
+             else create_backend(child, nblocks, block_size, dtype,
+                                 schema=schema, **opts))
+    return TieredBackend(built)
+
+
+register_backend("replicated", _replicated_factory)
+register_backend("tiered", _tiered_factory)
+
+
+# ----------------------------------------------------------------------
+# Deprecated table view: ``BACKENDS[name](...)`` construction.
+# ----------------------------------------------------------------------
+class DeprecatedBackendTable(collections.abc.Mapping):
+    """Mapping façade over the legacy ``core.nvm_esr.BACKENDS`` dict.
+
+    Iteration and membership are silent (benchmarks sweep the names);
+    *constructing* through ``BACKENDS[name](...)`` warns and routes the
+    construction through the registry factory, so the resulting object
+    is the same first-class :class:`PersistenceBackend` the registry
+    would build."""
+
+    def __init__(self, names_to_ctor: Dict[str, Callable]):
+        self._table = dict(names_to_ctor)
+
+    def __iter__(self):
+        return iter(self._table)
+
+    def __len__(self):
+        return len(self._table)
+
+    def __getitem__(self, name: str) -> Callable:
+        ctor = self._table[name]
+
+        def construct(*args, **kwargs):
+            warnings.warn(
+                f"constructing backends through BACKENDS[{name!r}](...) is "
+                f"deprecated; use repro.solvers.registry.make_backend or "
+                f"repro.nvm.backend.create_backend",
+                DeprecationWarning, stacklevel=2)
+            return ctor(*args, **kwargs)
+
+        construct.__name__ = getattr(ctor, "__name__", name)
+        construct.__wrapped__ = ctor
+        return construct

@@ -165,6 +165,32 @@ class PRDNode:
             self.window.unlock(reader, persist=False)
         return best
 
+    def scan_rank(self, rank: int,
+                  reader_rank: Optional[int] = None) -> List[Tuple[int, bytes]]:
+        """All valid slots of ``rank`` (both parities), newest first.
+
+        Backend ``durable_run`` scans use this: unlike
+        :meth:`read_latest` it returns every CRC-valid slot, so the
+        caller can check run completeness across the whole ring."""
+        self.join()
+        reader = self.nranks if reader_rank is None else reader_rank
+        self.window.lock(reader)
+        found: List[Tuple[int, bytes]] = []
+        try:
+            for parity in (0, 1):
+                off = rank * 2 * self._slot + parity * self._slot
+                raw, _ = self.window.get(reader, off, HEADER_SIZE)
+                seq, size, crc, _pad = _HEADER.unpack(raw)
+                if seq == 0 or size > self.capacity:
+                    continue
+                payload, _ = self.window.get(reader, off + HEADER_SIZE, size)
+                if slot_crc(payload, seq) != crc:
+                    continue
+                found.append((seq, payload))
+        finally:
+            self.window.unlock(reader, persist=False)
+        return sorted(found, key=lambda sp: -sp[0])
+
     def crash(self) -> None:
         """PRD node power-fail (single point of failure unless RAIDed,
         which the paper scopes out); unflushed epochs are lost."""

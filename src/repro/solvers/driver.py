@@ -6,13 +6,14 @@ shares one implementation of the paper's runtime machinery:
 - the persistence schedule (classic ESR: every iteration; ESRP: bursts of
   ``schema.history`` successive iterations every period ``T``),
 - the persistence *pipeline*: synchronous (persist on the critical path,
-  the paper's host-pull baseline) or overlapped (``persist_begin`` stages
-  the payload, ``persist_commit`` flushes it while the next iteration's
+  the paper's host-pull baseline) or overlapped (``session.begin`` stages
+  the payload, ``session.commit`` flushes it while the next iteration's
   compute is in flight — DESIGN.md §6),
 - failure injection — single plans or multi-event :class:`FailureCampaign`
   scenarios (overlapping failures during an in-flight recovery, failures
   mid-burst falling back to the previous durable run, repeated failures
-  of the same block),
+  of the same block, and ``prd=True`` events that crash the persistence
+  service / PRD node itself),
 - the survivor-side snapshot at the last *durable* persistence run,
 - recovery (backend fetch + solver-specific exact reconstruction),
 - convergence monitoring and reporting.
@@ -20,8 +21,12 @@ shares one implementation of the paper's runtime machinery:
 The solver contributes only algorithm-specific pieces through the
 :class:`~repro.solvers.base.RecoverableSolver` interface: the jitted
 iteration, the minimal recovery set, and the Algorithm-3/5-style exact
-reconstruction.  The backend contributes schema-driven persistence
-(:mod:`repro.core.esr`, :mod:`repro.core.nvm_esr`).
+reconstruction.  The backend contributes a declared-capability
+:class:`~repro.nvm.backend.PersistSession` (DESIGN.md §7): any
+:class:`~repro.nvm.backend.PersistenceBackend`, any schema-duck-typed
+object (``persist_set``/``recover_set``), or — deprecated — a pre-zoo
+``persist``/``recover`` object, all normalized through
+:func:`repro.nvm.backend.open_persist_session`.
 """
 from __future__ import annotations
 
@@ -31,6 +36,8 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+
+from repro.nvm.backend import open_persist_session
 
 PERSIST_MODES = ("sync", "overlap")
 
@@ -69,14 +76,25 @@ class FailureEvent:
       recovery restarts with the enlarged union (an overlapping failure).
       ``blocks`` may repeat already-failed blocks (a second crash of the
       same node mid-recovery).
-    """
+
+    ``prd=True`` additionally crashes the **persistence-service node**
+    (the PRD node / pool service) at the trigger: staged payloads die,
+    unflushed epochs are torn away, and — unless the backend's
+    :class:`~repro.nvm.backend.BackendCapabilities` declare
+    ``survives_prd_loss`` (e.g. a
+    :class:`~repro.nvm.backend.ReplicatedBackend` with a surviving
+    mirror) — any later recovery fetch raises
+    :class:`~repro.nvm.backend.UnrecoverableFailure`.  A ``prd`` event
+    may carry no blocks (the PRD dies alone; the solve itself
+    continues, unprotected)."""
 
     blocks: Tuple[int, ...]
     at_iteration: Optional[int] = None
     during_recovery_at: Optional[int] = None
+    prd: bool = False
 
     def __post_init__(self):
-        if not self.blocks:
+        if not self.blocks and not self.prd:
             raise ValueError("a FailureEvent needs at least one block")
         if (self.at_iteration is None) == (self.during_recovery_at is None):
             raise ValueError(
@@ -124,6 +142,9 @@ class SolveReport:
     - ``recovery_restarts`` — recoveries that had to discard an
       already-fetched payload and refetch because an overlapping failure
       enlarged the failed set mid-recovery.
+    - ``storage_failures`` — persistence-service (PRD-node) crashes
+      injected by ``FailureEvent(prd=True)`` campaign events; survived
+      only by backends declaring ``survives_prd_loss``.
     - ``converged`` — relative residual reached ``SolveConfig.tol``.
     - ``final_relres`` — ``||b - A x|| / ||b||`` proxy at exit
       (``solver.residual_norm / ||b||``).
@@ -161,6 +182,7 @@ class SolveReport:
     wasted_iterations: int = 0
     failures_recovered: int = 0
     recovery_restarts: int = 0
+    storage_failures: int = 0
     converged: bool = False
     final_relres: float = float("nan")
     persist_cost_s: float = 0.0
@@ -188,42 +210,6 @@ def should_persist(k: int, period: int, history: int = 2) -> bool:
     if period <= 1:
         return True
     return k % period < history
-
-
-class _LegacyBackendAdapter:
-    """Wrap a pre-zoo backend (``persist(k, beta, p)`` / ``recover(blocks,
-    k)``, PCG payloads only) so external backend implementations written
-    against the original ``core.pcg.solve`` contract keep working."""
-
-    def __init__(self, backend, schema):
-        from repro.core.state import require_pcg_schema
-
-        try:
-            require_pcg_schema(schema, "persist/recover")
-        except TypeError as e:
-            raise ValueError(
-                f"backend {type(backend).__name__} implements only the "
-                f"legacy API: {e}") from None
-        self._backend = backend
-
-    def __getattr__(self, name):
-        return getattr(self._backend, name)
-
-    def persist_set(self, k, scalars, vectors):
-        return self._backend.persist(k, scalars["beta"], vectors["p"])
-
-    def recover_set(self, failed_blocks, ks):
-        from repro.core.state import RecoverySet
-
-        prev, cur = self._backend.recover(failed_blocks, ks[-1])
-        if (prev.k, cur.k) != (ks[0], ks[-1]):
-            # external, untrusted contract: refuse loudly rather than
-            # reconstruct from a stale pair
-            raise RuntimeError(
-                f"legacy backend {type(self._backend).__name__}.recover "
-                f"returned iterations {(prev.k, cur.k)}, wanted {tuple(ks)}")
-        return [RecoverySet(prev.k, {"beta": prev.beta}, {"p": prev.p}),
-                RecoverySet(cur.k, {"beta": cur.beta}, {"p": cur.p})]
 
 
 def _as_campaign(failures) -> FailureCampaign:
@@ -259,12 +245,16 @@ def solve(
 ):
     """Run ``solver`` with optional ESR/NVM-ESR fault tolerance.
 
-    ``backend`` is an in-memory-ESR or NVM-ESR recovery backend (or None
-    for an unprotected run).  ``failures`` injects block crashes — either
-    a sequence of :class:`FailurePlan` (the single-event form) or a
-    :class:`FailureCampaign` with overlapping/mid-burst/repeated events.
-    Returns the final state, a report, and any states captured for
-    verification.
+    ``backend`` is any recovery backend :func:`repro.nvm.backend.
+    open_persist_session` accepts — a first-class
+    :class:`~repro.nvm.backend.PersistenceBackend` (including the
+    composite ``replicated``/``tiered`` backends), a schema-duck-typed
+    object, or a deprecated pre-zoo object — or None for an unprotected
+    run.  ``failures`` injects block crashes — either a sequence of
+    :class:`FailurePlan` (the single-event form) or a
+    :class:`FailureCampaign` with overlapping / mid-burst / repeated /
+    PRD-loss events.  Returns the final state, a report, and any states
+    captured for verification.
     """
     schema = solver.schema
     if config.persist_mode not in PERSIST_MODES:
@@ -272,19 +262,11 @@ def solve(
             f"persist_mode must be one of {PERSIST_MODES}, "
             f"got {config.persist_mode!r}")
     overlap = config.persist_mode == "overlap"
+    session = None
     if backend is not None:
-        if getattr(backend, "schema", None) is not None and backend.schema != schema:
-            raise ValueError(
-                f"backend persists schema {backend.schema.solver!r} but solver "
-                f"{solver.name!r} needs {schema.solver!r}; construct the backend "
-                f"with the solver's schema (see repro.solvers.registry.make_backend)")
-        if not hasattr(backend, "persist_set"):
-            backend = _LegacyBackendAdapter(backend, schema)
+        session = open_persist_session(backend, schema,
+                                       getattr(op, "partition", None))
     history = schema.history
-    # Backends without a native begin/commit pipeline (the legacy adapter,
-    # external duck-typed backends) still get overlap through driver-side
-    # staging: hold the payload here, flush via persist_set at commit.
-    native_stage = backend is not None and hasattr(backend, "persist_begin")
 
     state = solver.init_state(op, precond, b, x0)
     step = solver.make_step(op, precond)
@@ -311,7 +293,6 @@ def solve(
     last_persisted_k: Optional[int] = None
     consecutive = 0
     staged_state = None     # state whose payload is staged, pending commit
-    staged_payload = None   # driver-side staging for non-native backends
 
     def _note_committed(st, cost: float, window_s: float) -> None:
         nonlocal snapshot, last_persisted_k, consecutive
@@ -333,35 +314,26 @@ def solve(
             snapshot = st
 
     def persist_begin(st) -> None:
-        nonlocal staged_state, staged_payload
+        nonlocal staged_state
         rset = solver.recovery_set(st)
-        if native_stage:
-            report.persist_stage_s += backend.persist_begin(
-                rset.k, rset.scalars, rset.vectors)
-        else:
-            staged_payload = rset
+        report.persist_stage_s += session.begin(
+            rset.k, rset.scalars, rset.vectors)
         staged_state = st
 
     def persist_commit(window_s: float = 0.0) -> None:
-        nonlocal staged_state, staged_payload
+        nonlocal staged_state
         if staged_state is None:
             return
-        if native_stage:
-            cost = backend.persist_commit()
-        else:
-            cost = backend.persist_set(staged_payload.k, staged_payload.scalars,
-                                       staged_payload.vectors)
-            staged_payload = None
+        cost = session.commit()
         _note_committed(staged_state, cost, window_s)
         staged_state = None
 
     def persist_abort() -> None:
-        # The backend side is aborted by backend.fail() (its stager's
-        # abort); here we only drop the driver-side bookkeeping so the
-        # dead event is never counted or committed.
-        nonlocal staged_state, staged_payload
+        # The session side is aborted by session.fail() / fail_storage();
+        # here we only drop the driver-side bookkeeping so the dead event
+        # is never counted or committed.
+        nonlocal staged_state
         staged_state = None
-        staged_payload = None
 
     def persist_point(st) -> None:
         """One scheduled persistence event.  Sync mode is the paper's
@@ -372,41 +344,50 @@ def solve(
             persist_begin(st)
         else:
             rset = solver.recovery_set(st)
-            cost = backend.persist_set(rset.k, rset.scalars, rset.vectors)
+            cost = session.persist(rset.k, rset.scalars, rset.vectors)
             _note_committed(st, cost, 0.0)
 
     def run_recovery(ev: FailureEvent, st, k: int):
         """The campaign recovery engine.  Handles ``ev`` plus any events
         triggered *during* this recovery: each overlapping event enlarges
         the failed union and forces a refetch (the already-fetched
-        payloads are stale — their hosts may just have died)."""
+        payloads are stale — their hosts may just have died).  A
+        ``prd=True`` event additionally crashes the persistence-service
+        node before its blocks are processed; the fetch then succeeds
+        only if the backend's capabilities cover the loss (mirrors)."""
         nonlocal snapshot
         persist_abort()  # an in-flight staged persist dies with the nodes
         overlap_queue = list(during_events.pop(ev.at_iteration, ()))
         failed: List[int] = []
         new = list(ev.blocks)
+        prd_hit = ev.prd
         events_handled = 0
         st_wiped = st
         while True:
             events_handled += 1
+            if prd_hit:
+                session.fail_storage()
+                report.storage_failures += 1
+                prd_hit = False
             failed = sorted(set(failed) | set(new))
-            st_wiped = solver.wipe(st_wiped, op.partition, new)  # VM lost
-            backend.fail(tuple(new))
+            if new:
+                st_wiped = solver.wipe(st_wiped, op.partition, new)  # VM lost
+                session.fail(tuple(new))
             # Drain barrier: outstanding persistence settles (or is torn
             # away) before the durable recovery point is read.
-            if hasattr(backend, "persist_drain"):
-                report.persist_drain_s += backend.persist_drain()
+            report.persist_drain_s += session.drain()
             assert snapshot is not None, \
                 "no completed persistence run before failure"
             k_rec = int(snapshot.k)
             ks = tuple(range(k_rec - history + 1, k_rec + 1))
-            sets = backend.recover_set(tuple(failed), ks)
+            sets = session.fetch(tuple(failed), ks)
             if overlap_queue:
                 # A second failure lands while this recovery is in
                 # flight: the fetch above is stale, restart with the
                 # enlarged union.
                 nxt = overlap_queue.pop(0)
                 new = list(nxt.blocks)
+                prd_hit = nxt.prd
                 report.recovery_restarts += 1
                 continue
             st_new = solver.reconstruct(
@@ -421,7 +402,7 @@ def solve(
             return st_new
 
     # Iteration 0 counts as persisted so the first run completes early.
-    if backend is not None:
+    if session is not None:
         persist_point(state)
 
     while int(state.k) < config.maxiter:
@@ -441,9 +422,17 @@ def solve(
             ev = pending_here.pop(0)
             if not pending_here:
                 del at_events[k]
-            if backend is None:
+            if session is None:
                 raise RuntimeError(
                     "failure injected but no recovery backend configured")
+            if not ev.blocks:
+                # Storage-only event: the PRD node dies but no compute
+                # state is lost, so the solve continues.  The loss
+                # surfaces — loudly — at the next recovery fetch unless
+                # the backend's capabilities cover it.
+                session.fail_storage()
+                report.storage_failures += 1
+                continue
             state = run_recovery(ev, state, k)
             if int(state.k) in capture_states_at:
                 captured[int(state.k)] = state
@@ -456,7 +445,7 @@ def solve(
             # behind iteration k+1's compute.
             jax.block_until_ready(state)
             persist_commit(time.perf_counter() - t0)
-        if backend is not None and should_persist(
+        if session is not None and should_persist(
                 int(state.k), config.persistence_period, history):
             persist_point(state)
 

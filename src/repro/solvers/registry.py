@@ -3,11 +3,15 @@
 Benchmarks, examples, and tests iterate ``SOLVERS`` to run every
 ESR-recoverable solver against every persistence backend; the factories
 wire schemas through so each backend's slot layout matches the solver it
-protects.
+protects.  Backends resolve through the single registry in
+:mod:`repro.nvm.backend`, including composable spec strings::
 
     solver  = make_solver("chebyshev", op, precond)
-    backend = make_backend("nvm-prd", op, solver=solver)
+    backend = make_backend("replicated(nvm-prd x2)", op, solver=solver)
     state, report, _ = driver.solve(solver, op, b, precond, backend=backend)
+
+Unknown names raise with a did-you-mean hint (the closest registered
+name) in both directions.
 """
 from __future__ import annotations
 
@@ -15,10 +19,15 @@ from typing import Dict, Optional, Type
 
 import numpy as np
 
-# Single source of truth for backend constructors (satisfies the old
-# ``core.nvm_esr.BACKENDS`` contract: every entry is a callable).
+# Deprecated table view (``BACKENDS[name](...)`` warns); the live
+# registry is repro.nvm.backend.
 from repro.core.nvm_esr import BACKENDS  # noqa: F401
 from repro.core.state import RecoverySchema
+from repro.nvm.backend import (
+    PersistenceBackend,
+    create_backend,
+    unknown_name_error,
+)
 from repro.solvers.base import RecoverableSolver
 from repro.solvers.bicgstab import BiCGStabSolver
 from repro.solvers.chebyshev import ChebyshevSolver
@@ -41,7 +50,7 @@ def make_solver(name: str, op=None, precond=None, **opts) -> RecoverableSolver:
     try:
         cls = SOLVERS[name]
     except KeyError:
-        raise KeyError(f"unknown solver {name!r}; have {sorted(SOLVERS)}") from None
+        raise unknown_name_error("solver", name, SOLVERS) from None
     return cls.from_problem(op, precond, **opts)
 
 
@@ -52,13 +61,12 @@ def make_backend(
     solver: Optional[RecoverableSolver] = None,
     schema: Optional[RecoverySchema] = None,
     **opts,
-):
+) -> PersistenceBackend:
     """Build a registered backend sized for ``op``'s partition, persisting
-    ``solver``'s (or ``schema``'s) recovery set; defaults to PCG's."""
-    try:
-        cls = BACKENDS[name]
-    except KeyError:
-        raise KeyError(f"unknown backend {name!r}; have {sorted(BACKENDS)}") from None
+    ``solver``'s (or ``schema``'s) recovery set; defaults to PCG's.
+
+    ``name`` may be any registry name or a composable spec string —
+    ``"replicated(nvm-prd x2)"``, ``"tiered(nvm-homogeneous)"``."""
     if solver is not None:
         if schema is not None and schema != solver.schema:
             raise ValueError(
@@ -66,6 +74,5 @@ def make_backend(
                 f"{solver.schema.solver!r} but schema={schema.solver!r} was "
                 f"passed explicitly — give one or the other")
         schema = solver.schema
-    if schema is not None:
-        opts["schema"] = schema
-    return cls(op.nblocks, op.partition.block_size, dtype, **opts)
+    return create_backend(name, op.nblocks, op.partition.block_size, dtype,
+                          schema=schema, **opts)

@@ -1,0 +1,440 @@
+"""The persistence-backend API acceptance suite (ISSUE 3 tentpole).
+
+Covers the formal protocol (`repro.nvm.backend`):
+
+- every registered backend declares complete `BackendCapabilities`,
+- capability *enforcement*: a backend that forbids PRD loss raises
+  `UnrecoverableFailure` (never silently corrupts) when a campaign
+  kills its PRD node,
+- the ROADMAP closure: `ReplicatedBackend` over two PRD children
+  recovers a campaign that crashes the PRD node itself — exactly, for
+  all 5 zoo solvers, over both NVM child backends, in both sync and
+  overlap persist modes,
+- the composable registry (spec strings, did-you-mean errors),
+- `TieredBackend` (RAM front over any child) and session lifecycle,
+- the `repro.api` façade end to end.
+"""
+import numpy as np
+import pytest
+
+from repro.core import JacobiPreconditioner, make_poisson_problem
+from repro.core.esr import InMemoryESR
+from repro.core.nvm_esr import NVMESRHomogeneous, NVMESRPRD
+from repro.core.state import PCG_SCHEMA
+from repro.nvm.backend import (
+    BackendCapabilities,
+    PersistenceBackend,
+    ReplicatedBackend,
+    TieredBackend,
+    UnrecoverableFailure,
+    backend_names,
+    create_backend,
+    parse_backend_spec,
+)
+from repro.solvers import (
+    SOLVERS,
+    FailureCampaign,
+    FailureEvent,
+    SolveConfig,
+    make_backend,
+    make_solver,
+    solve,
+)
+
+NVM_CHILDREN = ("nvm-prd", "nvm-homogeneous")
+
+# (fail_at, solver opts): gmres counts restart cycles, not iterations
+SOLVER_CASES = {
+    "pcg": (10, {}),
+    "jacobi": (10, {}),
+    "chebyshev": (10, {}),
+    "bicgstab": (10, {}),
+    "gmres": (3, {"m": 4}),
+}
+assert set(SOLVER_CASES) == set(SOLVERS)
+
+
+def _problem(nblocks=4):
+    op, b = make_poisson_problem(8, 8, 8, nblocks=nblocks)
+    return op, b, JacobiPreconditioner(op)
+
+
+def _state_fields_close(got, want, rtol=1e-9, atol=1e-9):
+    for field in got._fields:
+        a, c = getattr(got, field), getattr(want, field)
+        if hasattr(a, "shape"):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                       rtol=rtol, atol=atol, err_msg=field)
+
+
+# ---------------------------------------------------------- capabilities
+def test_every_registered_backend_declares_complete_capabilities():
+    """The check_api.py CI gate, in-suite: construction through the
+    registry yields a PersistenceBackend with a fully populated record."""
+    for name in backend_names():
+        be = create_backend(name, nblocks=4, block_size=8,
+                            dtype=np.float64, schema=PCG_SCHEMA)
+        assert isinstance(be, PersistenceBackend), name
+        caps = be.capabilities
+        assert isinstance(caps, BackendCapabilities), name
+        assert caps.durability and isinstance(caps.durability, str), name
+        assert isinstance(caps.survives_node_loss, bool), name
+        assert isinstance(caps.survives_prd_loss, bool), name
+        assert caps.overlap in ("native", "driver-staged"), name
+
+
+def test_capability_matrix_expectations():
+    """The declared guarantees match the architectures' semantics."""
+    op, _, _ = _problem()
+    esr = make_backend("esr", op)
+    assert esr.capabilities.durability == "ram"
+    assert esr.capabilities.max_block_failures == esr.copies
+    assert not esr.capabilities.survives_prd_loss
+
+    prd = make_backend("nvm-prd", op)
+    assert prd.capabilities.durability == "nvm"
+    assert prd.capabilities.survives_node_loss
+    assert not prd.capabilities.survives_prd_loss
+
+    repl = make_backend("replicated(nvm-prd x2)", op)
+    assert repl.capabilities.survives_prd_loss  # the composition's point
+    assert repl.capabilities.durability == "nvm"
+
+    tiered = make_backend("tiered(nvm-homogeneous)", op)
+    assert tiered.capabilities.overlap == "native"
+    assert not tiered.capabilities.survives_prd_loss  # child's guarantee
+
+
+def test_capabilities_validate_fields():
+    with pytest.raises(ValueError, match="overlap"):
+        BackendCapabilities("nvm", True, False, overlap="sometimes")
+    with pytest.raises(ValueError, match="durability"):
+        BackendCapabilities("", True, False, overlap="native")
+
+
+# ------------------------------------------------- capability enforcement
+@pytest.mark.parametrize("backend_name", ["esr", "nvm-homogeneous", "nvm-prd"])
+def test_prd_loss_without_mirror_raises_not_corrupts(backend_name):
+    """The satellite criterion: a backend whose capabilities forbid PRD
+    loss must raise UnrecoverableFailure — not silently reconstruct from
+    unreachable or stale data — when a campaign kills its PRD node."""
+    op, b, pre = _problem()
+    solver = make_solver("pcg", op, pre)
+    backend = make_backend(backend_name, op, solver=solver)
+    assert not backend.capabilities.survives_prd_loss
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1, 2), at_iteration=8, prd=True),))
+    with pytest.raises(UnrecoverableFailure, match="PRD"):
+        solve(solver, op, b, pre, SolveConfig(tol=1e-10),
+              backend=backend, failures=campaign)
+
+
+@pytest.mark.parametrize("persist_mode", ["sync", "overlap"])
+def test_prd_only_event_is_survived_until_recovery_is_needed(persist_mode):
+    """A PRD crash with no block failure loses no compute state: the
+    solve converges (storage_failures counts the event).  But the loss
+    is latent — the same run with a LATER block failure must raise."""
+    op, b, pre = _problem()
+    solver = make_solver("pcg", op, pre)
+    backend = make_backend("nvm-prd", op, solver=solver)
+    _, rep, _ = solve(
+        solver, op, b, pre, SolveConfig(tol=1e-10, persist_mode=persist_mode),
+        backend=backend,
+        failures=FailureCampaign((FailureEvent(blocks=(), at_iteration=5,
+                                               prd=True),)))
+    assert rep.converged and rep.storage_failures == 1
+    assert rep.failures_recovered == 0
+
+    solver = make_solver("pcg", op, pre)
+    backend = make_backend("nvm-prd", op, solver=solver)
+    with pytest.raises(UnrecoverableFailure):
+        solve(solver, op, b, pre,
+              SolveConfig(tol=1e-10, persist_mode=persist_mode),
+              backend=backend,
+              failures=FailureCampaign((
+                  FailureEvent(blocks=(), at_iteration=5, prd=True),
+                  FailureEvent(blocks=(1,), at_iteration=8),
+              )))
+
+
+def test_replicated_all_mirrors_lost_raises():
+    """Redundancy is not magic: when every mirror's PRD dies, the fetch
+    refuses with a per-mirror diagnosis."""
+    op, b, pre = _problem()
+    solver = make_solver("pcg", op, pre)
+    backend = make_backend("replicated(nvm-prd x2)", op, solver=solver)
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(), at_iteration=4, prd=True),   # mirror 0 dies
+        FailureEvent(blocks=(1,), at_iteration=8, prd=True), # mirror 1 + block
+    ))
+    with pytest.raises(UnrecoverableFailure, match="no mirror"):
+        solve(solver, op, b, pre, SolveConfig(tol=1e-10),
+              backend=backend, failures=campaign)
+
+
+# ------------------------------------- the ROADMAP closure (acceptance)
+_REF_CACHE = {}
+
+
+def _reference(solver_name):
+    """Fault-free captured states per solver (shared across cases)."""
+    if solver_name not in _REF_CACHE:
+        op, b, pre = _problem()
+        fail_at, opts = SOLVER_CASES[solver_name]
+        solver = make_solver(solver_name, op, pre, **opts)
+        _, rep, cap = solve(solver, op, b, pre,
+                            SolveConfig(tol=1e-10, maxiter=5000),
+                            capture_states_at=[fail_at - 1, fail_at])
+        assert rep.converged
+        _REF_CACHE[solver_name] = cap
+    return _REF_CACHE[solver_name]
+
+
+@pytest.mark.parametrize("persist_mode", ["sync", "overlap"])
+@pytest.mark.parametrize("child", NVM_CHILDREN)
+@pytest.mark.parametrize("solver_name", sorted(SOLVERS))
+def test_replicated_prd_kill_recovers_exactly(solver_name, child,
+                                              persist_mode):
+    """The acceptance criterion: a FailureCampaign event that crashes
+    the PRD node itself — simultaneously with two compute blocks — is
+    recovered to machine precision by ReplicatedBackend over two
+    mirrors, for every zoo solver, over both NVM child backends, in
+    both persist modes."""
+    op, b, pre = _problem()
+    fail_at, opts = SOLVER_CASES[solver_name]
+    ref_cap = _reference(solver_name)
+
+    solver = make_solver(solver_name, op, pre, **opts)
+    backend = make_backend(f"replicated({child} x2)", op, solver=solver)
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1, 2), at_iteration=fail_at, prd=True),))
+    state, rep, cap = solve(
+        solver, op, b, pre,
+        SolveConfig(tol=1e-10, maxiter=5000, persist_mode=persist_mode),
+        backend=backend, failures=campaign,
+        capture_states_at=[fail_at - 1, fail_at])
+
+    assert rep.failures_recovered == 1
+    assert rep.storage_failures == 1
+    assert rep.converged
+    # T=1 sync: the recovery point IS the failure iteration.  In overlap
+    # mode the event tears the staged-but-uncommitted persist of the
+    # failure iteration, so the durable point is one iteration back.
+    assert rep.wasted_iterations == (1 if persist_mode == "overlap" else 0)
+    k_rec = fail_at - rep.wasted_iterations
+    _state_fields_close(cap[k_rec], ref_cap[k_rec])
+    res = float(np.linalg.norm(np.asarray(b - op.apply(state.x)))
+                / np.linalg.norm(np.asarray(b)))
+    assert res < 1e-9
+
+
+def test_mirror_dies_during_inflight_recovery():
+    """An overlapping campaign: mirror 0's PRD dies while the recovery
+    of an earlier block failure is in flight — the stale fetch is
+    discarded and the refetch proceeds from the surviving mirror."""
+    op, b, pre = _problem()
+    solver = make_solver("pcg", op, pre)
+    backend = make_backend("replicated(nvm-prd x2)", op, solver=solver)
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1, 2), at_iteration=8),
+        FailureEvent(blocks=(), during_recovery_at=8, prd=True),
+    ))
+    state, rep, _ = solve(solver, op, b, pre,
+                          SolveConfig(tol=1e-10, persist_mode="overlap"),
+                          backend=backend, failures=campaign)
+    assert rep.converged
+    assert rep.recovery_restarts == 1
+    assert rep.storage_failures == 1
+    res = float(np.linalg.norm(np.asarray(b - op.apply(state.x)))
+                / np.linalg.norm(np.asarray(b)))
+    assert res < 1e-9
+
+
+def test_replicated_mirroring_costs_sum_over_children():
+    """Mirroring is visible in the accounting: the replicated persist
+    cost is the sum of its children's (origin-NIC serialization), and
+    its NVM footprint doubles."""
+    op, b, pre = _problem()
+    reps = {}
+    for name in ("nvm-prd", "replicated(nvm-prd x2)"):
+        solver = make_solver("pcg", op, pre)
+        be = make_backend(name, op, solver=solver)
+        _, rep, _ = solve(solver, op, b, pre, SolveConfig(tol=1e-10),
+                          backend=be, failures=())
+        reps[name] = (rep, be)
+    single, repl = reps["nvm-prd"], reps["replicated(nvm-prd x2)"]
+    assert single[0].persist_events == repl[0].persist_events
+    np.testing.assert_allclose(repl[0].persist_cost_s,
+                               2 * single[0].persist_cost_s, rtol=1e-9)
+    assert repl[1].nvm_values() == 2 * single[1].nvm_values()
+
+
+# ------------------------------------------------------------- registry
+def test_backend_registry_lists_composites():
+    names = backend_names()
+    for expected in ("esr", "nvm-homogeneous", "nvm-prd", "replicated",
+                     "tiered"):
+        assert expected in names
+
+
+def test_parse_backend_spec():
+    assert parse_backend_spec("nvm-prd") == ("nvm-prd", {})
+    assert parse_backend_spec("replicated(nvm-prd x2)") == (
+        "replicated", {"children": ("nvm-prd", "nvm-prd")})
+    assert parse_backend_spec("replicated(nvm-prd×3)") == (
+        "replicated", {"children": ("nvm-prd",) * 3})
+    assert parse_backend_spec("replicated(nvm-prd, nvm-homogeneous)") == (
+        "replicated", {"children": ("nvm-prd", "nvm-homogeneous")})
+    assert parse_backend_spec("tiered(nvm-prd)") == (
+        "tiered", {"child": "nvm-prd"})
+    with pytest.raises(ValueError, match="malformed"):
+        parse_backend_spec("replicated(nvm-prd")
+    with pytest.raises(ValueError, match="no spec arguments"):
+        create_backend("esr(nvm-prd)", 4, 8)
+
+
+def test_registry_did_you_mean():
+    op, b, pre = _problem()
+    with pytest.raises(KeyError, match="did you mean 'pcg'"):
+        make_solver("pgc", op, pre)
+    with pytest.raises(KeyError, match="did you mean 'nvm-prd'"):
+        make_backend("nvm-prdd", op)
+    with pytest.raises(KeyError, match="did you mean 'replicated'"):
+        make_backend("replicate(nvm-prd x2)", op)
+    # no close match: plain unknown-name error, with the inventory
+    with pytest.raises(KeyError, match="unknown solver"):
+        make_solver("zzz", op, pre)
+
+
+def test_replicated_validation():
+    op, _, _ = _problem()
+    with pytest.raises(ValueError, match=">= 2 children"):
+        make_backend("replicated", op, children=("nvm-prd",))
+    pcg_child = create_backend("nvm-prd", op.nblocks,
+                               op.partition.block_size, np.float64,
+                               schema=PCG_SCHEMA)
+    from repro.solvers.bicgstab import BICGSTAB_SCHEMA
+
+    bicg_child = create_backend("nvm-prd", op.nblocks,
+                                op.partition.block_size, np.float64,
+                                schema=BICGSTAB_SCHEMA)
+    with pytest.raises(ValueError, match="same schema"):
+        ReplicatedBackend([pcg_child, bicg_child])
+
+
+def test_session_schema_mismatch_rejected():
+    """Opening a session for the wrong schema refuses up front — same
+    guarantee as the old driver check, now at the protocol layer."""
+    op, b, pre = _problem()
+    pcg = make_solver("pcg", op, pre)
+    backend = make_backend("replicated(nvm-prd x2)", op, solver=pcg)
+    bicg = make_solver("bicgstab", op, pre)
+    with pytest.raises(ValueError, match="schema"):
+        solve(bicg, op, b, pre, SolveConfig(tol=1e-10), backend=backend)
+
+
+# ---------------------------------------------------------------- tiered
+def test_tiered_backend_stages_then_flushes_to_child():
+    op, _, _ = _problem()
+    child = make_backend("nvm-homogeneous", op)
+    be = TieredBackend(child)
+    session = be.open_session(PCG_SCHEMA)
+    n = op.n
+
+    c = session.begin(0, {"beta": 0.0}, {"p": np.zeros(n)})
+    assert c > 0.0
+    assert child.durable_run() is None          # still only in the RAM front
+    session.commit()
+    session.begin(1, {"beta": 0.5}, {"p": np.ones(n)})
+    session.drain()
+    assert child.durable_run() == 1             # flushed through the child
+    sets = session.fetch((2,), (0, 1))
+    assert [s.k for s in sets] == [0, 1]
+    bs = op.partition.block_size
+    np.testing.assert_array_equal(sets[-1].vectors["p"], np.ones(bs))
+    assert session.durable_run() == 1
+
+
+def test_tiered_rejects_uncalibrated_front_at_construction():
+    from repro.nvm.store import Tier
+
+    op, _, _ = _problem()
+    child = make_backend("nvm-homogeneous", op)
+    with pytest.raises(ValueError, match="DRAM front"):
+        TieredBackend(child, front_tier=Tier.NVM)
+
+
+def test_tiered_staged_event_dies_with_failure():
+    op, _, _ = _problem()
+    be = make_backend("tiered(nvm-homogeneous)", op)
+    session = be.open_session(PCG_SCHEMA)
+    n = op.n
+    for k in range(2):
+        session.persist(k, {"beta": 0.1 * k}, {"p": np.full(n, float(k))})
+    session.begin(2, {"beta": 0.2}, {"p": np.full(n, 2.0)})
+    session.fail((0,))                           # the RAM front is volatile
+    sets = session.fetch((0,), (0, 1))
+    assert [s.k for s in sets] == [0, 1]
+    with pytest.raises(Exception, match="2"):
+        session.fetch((0,), (1, 2))
+
+
+# ------------------------------------------------------------ durable_run
+@pytest.mark.parametrize("backend_name", ["esr", "nvm-homogeneous",
+                                          "nvm-prd"])
+def test_durable_run_tracks_complete_history_runs(backend_name):
+    """durable_run answers the driver's rollback question from the
+    backend's own slots: the newest complete history-run, gaps and all."""
+    op, _, _ = _problem()
+    be = make_backend(backend_name, op)          # PCG schema, history=2
+    session = be.open_session(PCG_SCHEMA)
+    n = op.n
+    assert session.durable_run() is None
+    session.persist(0, {"beta": 0.0}, {"p": np.zeros(n)})
+    assert session.durable_run() is None         # half a pair
+    session.persist(1, {"beta": 0.1}, {"p": np.ones(n)})
+    assert session.durable_run() == 1
+    # ESRP gap: iterations 5 alone does not form a run; 5,6 does
+    session.persist(5, {"beta": 0.5}, {"p": np.full(n, 5.0)})
+    assert session.durable_run() == 1
+    session.persist(6, {"beta": 0.6}, {"p": np.full(n, 6.0)})
+    assert session.durable_run() == 6
+
+
+# ------------------------------------------------------------ repro.api
+def test_api_facade_end_to_end():
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro import api
+
+    result = api.solve(
+        api.Problem.poisson(8, nblocks=4),
+        api.SolverSpec("pcg"),
+        api.ResilienceSpec("replicated(nvm-prd x2)", persist_mode="overlap"),
+        failures=[api.FailureEvent(blocks=(1, 2), at_iteration=8, prd=True)],
+    )
+    assert result.converged
+    assert result.report.failures_recovered == 1
+    assert result.report.storage_failures == 1
+    assert result.capabilities.survives_prd_loss
+    assert result.x.shape == (8 * 8 * 8,)
+    assert result.relres < 1e-9
+
+
+def test_api_accepts_bare_names_and_unprotected_runs():
+    from repro import api
+
+    r = api.solve(api.Problem.poisson(8, nblocks=4), "jacobi")
+    assert r.converged and r.backend is None and r.capabilities is None
+    r2 = api.solve(api.Problem.poisson(8, nblocks=4), "bicgstab",
+                   "tiered(nvm-homogeneous)")
+    assert r2.converged and r2.backend.capabilities.overlap == "native"
+
+
+def test_api_surface_is_importable():
+    """Every name in repro.api.__all__ resolves (the check_api gate)."""
+    from repro import api
+
+    for name in api.__all__:
+        assert getattr(api, name) is not None, name

@@ -1,0 +1,191 @@
+"""The consolidated deprecation-shim suite (ISSUE 3 satellite).
+
+Two legacy entry points survive the backend-API redesign as warning
+shims that route through the new protocol:
+
+1. the PCG-only ``backend.persist(k, beta, p_full)`` /
+   ``backend.recover(blocks, k)`` methods on the three core backends,
+2. direct ``BACKENDS[name](...)`` construction from the pre-redesign
+   registry table,
+
+plus the driver-level shim for *external* pre-zoo duck-typed backends,
+which now routes through :class:`repro.nvm.backend.LegacyBackendSession`
+(the RAM-front staging tier) instead of the deleted
+``driver._LegacyBackendAdapter``.  This file absorbs the old
+``test_legacy_adapter.py`` coverage: round-trip fidelity, the stale-pair
+refusal for untrusted external contracts, and the non-PCG rejection.
+"""
+import numpy as np
+import pytest
+
+from repro.core import JacobiPreconditioner, make_poisson_problem
+from repro.core.nvm_esr import BACKENDS, NVMESRHomogeneous
+from repro.core.state import PCG_SCHEMA, RecoveryPayload
+from repro.nvm.backend import LegacyBackendSession, open_persist_session
+from repro.solvers import FailurePlan, SolveConfig, make_solver, solve
+from repro.solvers.gmres import GMRES_SCHEMA
+
+
+class _OldStyle:
+    """Minimal pre-zoo external backend: full-vector slots keyed by
+    iteration, PCG payloads only."""
+
+    def __init__(self, block_size=8):
+        self.block_size = block_size
+        self.slots = {}
+        self.failed = []
+
+    def persist(self, k, beta, p_full):
+        self.slots[k] = (beta, np.asarray(p_full).copy())
+        return 0.125
+
+    def fail(self, blocks):
+        self.failed.append(tuple(blocks))
+
+    def recover(self, blocks, k):
+        def payload(kk):
+            beta, p = self.slots[kk]
+            shards = [p[b * self.block_size:(b + 1) * self.block_size]
+                      for b in blocks]
+            return RecoveryPayload(kk, beta, np.concatenate(shards))
+        return payload(k - 1), payload(k)
+
+
+# ---------------------------------------------------------------- shim 1
+def test_legacy_persist_recover_warn_and_stay_wire_compatible():
+    """The pre-zoo persist/recover entry points (used by old external
+    callers) warn, route through the schema codec, and stay
+    byte-compatible with persist_set/recover_set slots."""
+    be = NVMESRHomogeneous(4, 8, np.float64)
+    p0 = np.arange(32, dtype=np.float64)
+    p1 = p0 + 1.0
+    with pytest.warns(DeprecationWarning, match="deprecated PCG-only"):
+        be.persist(0, 0.0, p0)
+    be.persist_set(1, {"beta": 0.25}, {"p": p1})  # modern path, no warning
+    with pytest.warns(DeprecationWarning, match="deprecated PCG-only"):
+        prev, cur = be.recover([1, 2], 1)
+    assert prev.k == 0 and cur.k == 1 and cur.beta == 0.25
+    np.testing.assert_array_equal(prev.p, p0[8:24])
+    np.testing.assert_array_equal(cur.p, p1[8:24])
+    # the same slots serve the modern protocol: one ring, one format
+    sets = be.recover_set([1, 2], (0, 1))
+    assert [s.k for s in sets] == [0, 1]
+    np.testing.assert_array_equal(sets[-1].vectors["p"], p1[8:24])
+
+
+# ---------------------------------------------------------------- shim 2
+def test_backends_table_construction_warns_and_routes():
+    """``BACKENDS[name](...)`` still constructs a working first-class
+    backend — with a DeprecationWarning on the construction call, while
+    iteration/membership (the benchmark sweeps) stay silent."""
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # sweeping must NOT warn
+        names = sorted(BACKENDS)
+        assert names == ["esr", "nvm-homogeneous", "nvm-prd"]
+        assert "nvm-prd" in BACKENDS and len(BACKENDS) == 3
+        ctor = BACKENDS["nvm-homogeneous"]  # lookup alone must not warn
+
+    with pytest.warns(DeprecationWarning, match="BACKENDS\\['nvm-homogeneous'\\]"):
+        be = ctor(4, 8, np.float64)
+    assert isinstance(be, NVMESRHomogeneous)
+    assert be.capabilities.durability == "nvm"  # the new protocol surface
+    be.persist_set(0, {"beta": 0.0}, {"p": np.zeros(32)})
+    be.persist_set(1, {"beta": 0.5}, {"p": np.ones(32)})
+    (got,) = be.recover_set([0], (1,))
+    np.testing.assert_array_equal(got.vectors["p"], np.ones(8))
+
+
+# ------------------------------------------------- external duck-typed
+def test_external_legacy_backend_round_trip_through_session():
+    be = _OldStyle()
+    with pytest.warns(DeprecationWarning, match="duck-typed legacy"):
+        session = open_persist_session(be, PCG_SCHEMA)
+    assert isinstance(session, LegacyBackendSession)
+
+    p0 = np.arange(32, dtype=np.float64)
+    p1 = p0 + 100.0
+    assert session.persist(0, {"beta": 0.0}, {"p": p0}) == 0.125
+    assert session.persist(1, {"beta": 0.25}, {"p": p1}) == 0.125
+
+    sets = session.fetch([1, 2], (0, 1))
+    assert [s.k for s in sets] == [0, 1]
+    assert sets[-1].scalars["beta"] == 0.25
+    np.testing.assert_array_equal(sets[0].vectors["p"], p0[8:24])
+    np.testing.assert_array_equal(sets[-1].vectors["p"], p1[8:24])
+
+    session.fail((1, 2))
+    assert be.failed == [(1, 2)]
+
+
+def test_external_legacy_backend_overlap_via_ram_front():
+    """Overlap staging for legacy backends now lives in the session's
+    RAM front (the TieredBackend component), not in the driver."""
+    be = _OldStyle()
+    with pytest.warns(DeprecationWarning):
+        session = open_persist_session(be, PCG_SCHEMA)
+    c = session.begin(0, {"beta": 0.5}, {"p": np.arange(32.0)})
+    assert c > 0.0 and 0 not in be.slots      # staged, not yet durable
+    assert session.commit() == 0.125 and 0 in be.slots
+    session.begin(1, {"beta": 0.25}, {"p": np.arange(32.0) + 1})
+    session.abort()
+    assert session.drain() == 0.0 and 1 not in be.slots  # aborted event died
+
+
+def test_legacy_session_goes_dark_after_storage_loss():
+    """After fail_storage() the legacy pipeline must stop flushing to
+    the dead backend in BOTH pipelines (sync persist and overlapped
+    begin/commit/drain) and refuse fetches — same model as the core
+    sessions."""
+    be = _OldStyle()
+    with pytest.warns(DeprecationWarning):
+        session = open_persist_session(be, PCG_SCHEMA)
+    session.persist(0, {"beta": 0.0}, {"p": np.zeros(32)})
+    session.fail_storage()
+    assert session.persist(1, {"beta": 0.1}, {"p": np.ones(32)}) == 0.0
+    assert session.begin(2, {"beta": 0.2}, {"p": np.ones(32)}) == 0.0
+    assert session.commit() == 0.0 and session.drain() == 0.0
+    assert set(be.slots) == {0}  # nothing reached the dead backend
+    with pytest.raises(Exception, match="PRD"):
+        session.fetch([1], (0, 1))
+
+
+def test_stale_pair_refused():
+    """An external backend returning the wrong iteration pair must not be
+    silently reconstructed from — the session refuses loudly."""
+
+    class StaleBackend(_OldStyle):
+        def recover(self, blocks, k):
+            prev, cur = super().recover(blocks, k)
+            return prev._replace(k=prev.k - 1), cur  # off-by-one pair
+
+    with pytest.warns(DeprecationWarning):
+        session = open_persist_session(StaleBackend(), PCG_SCHEMA)
+    session.persist(4, {"beta": 0.0}, {"p": np.zeros(32)})
+    session.persist(5, {"beta": 0.5}, {"p": np.ones(32)})
+    with pytest.raises(RuntimeError, match="legacy backend .* returned"):
+        session.fetch([0], (4, 5))
+
+
+def test_non_pcg_schema_rejected():
+    """The legacy wire format carries PCG payloads only; adapting a
+    backend for any other schema is a loud, early error."""
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="legacy"):
+            open_persist_session(_OldStyle(), GMRES_SCHEMA)
+
+
+def test_driver_routes_legacy_backend_end_to_end():
+    """solve() normalizes external legacy backends through the session
+    shim: persistence, failure, and recovery all work — with exactly the
+    deprecation warning, once, at wrap time."""
+    op, b = make_poisson_problem(8, 8, 8, nblocks=4)
+    pre = JacobiPreconditioner(op)
+    be = _OldStyle(op.partition.block_size)
+    solver = make_solver("pcg", op, pre)
+    with pytest.warns(DeprecationWarning, match="duck-typed legacy"):
+        _, rep, _ = solve(solver, op, b, pre, SolveConfig(tol=1e-10),
+                          backend=be, failures=[FailurePlan(10, (1, 2))])
+    assert rep.converged and rep.failures_recovered == 1
+    assert be.slots  # persisted through the shim

@@ -17,7 +17,7 @@ sys.path.insert(0, str(REPO / "tools"))
 
 from check_docs import python_blocks  # noqa: E402
 
-DOC_FILES = ["README.md", "docs/recovery-format.md"]
+DOC_FILES = ["README.md", "docs/recovery-format.md", "docs/backend-api.md"]
 
 
 @pytest.mark.parametrize("doc", DOC_FILES)
@@ -35,9 +35,24 @@ def test_check_docs_cli_passes_on_repo_docs():
     """The docs CI job's exact invocation succeeds against the tree."""
     out = subprocess.run(
         [sys.executable, str(REPO / "tools" / "check_docs.py"),
-         "README.md", "DESIGN.md", "docs/recovery-format.md"],
+         "README.md", "DESIGN.md", "docs/recovery-format.md",
+         "docs/backend-api.md"],
         cwd=REPO, capture_output=True, text=True)
     assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_check_api_cli_passes_on_repo():
+    """The docs CI job's API gate succeeds against the tree: repro.api
+    imports cleanly and every registered backend declares complete
+    BackendCapabilities."""
+    import os
+
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_api.py")],
+        cwd=REPO, capture_output=True, text=True, env=env)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "public names resolve" in out.stdout
 
 
 def test_check_docs_cli_flags_rot(tmp_path):

@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""API-surface gate (ISSUE 3 satellite: docs/CI tooling).
+
+Two invariants the docs CI job enforces on every push:
+
+1. **Façade integrity** — ``repro.api`` imports cleanly and every name
+   in its ``__all__`` resolves (a broken re-export is a broken
+   quickstart).
+2. **Capability completeness** — every backend in the single registry
+   (``repro.nvm.backend``) constructs through its factory and declares
+   a fully populated :class:`BackendCapabilities` record with sane
+   field types.  A backend that cannot state its guarantees cannot be
+   composed safely.
+
+Usage: ``PYTHONPATH=src python tools/check_api.py``
+Exit status is non-zero when anything is broken.  Requires jax+numpy
+(the package imports them); the CI docs job installs both.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def check_api_surface() -> list:
+    errors = []
+    try:
+        from repro import api
+    except Exception:
+        return [f"repro.api failed to import:\n{traceback.format_exc()}"]
+    if not getattr(api, "__all__", None):
+        return ["repro.api has no __all__"]
+    for name in api.__all__:
+        if getattr(api, name, None) is None:
+            errors.append(f"repro.api.__all__ lists {name!r} but it does "
+                          f"not resolve")
+    print(f"repro.api: {len(api.__all__)} public names resolve")
+    return errors
+
+
+def check_backend_capabilities() -> list:
+    import numpy as np
+
+    from repro.core.state import PCG_SCHEMA
+    from repro.nvm.backend import (
+        BackendCapabilities,
+        PersistenceBackend,
+        backend_names,
+        create_backend,
+    )
+
+    errors = []
+    for name in backend_names():
+        try:
+            be = create_backend(name, nblocks=4, block_size=8,
+                                dtype=np.float64, schema=PCG_SCHEMA)
+        except Exception as e:  # noqa: BLE001
+            errors.append(f"backend {name!r}: factory failed: {e!r}")
+            continue
+        if not isinstance(be, PersistenceBackend):
+            errors.append(f"backend {name!r}: factory returned "
+                          f"{type(be).__name__}, not a PersistenceBackend")
+            continue
+        try:
+            caps = be.capabilities
+        except Exception as e:  # noqa: BLE001
+            errors.append(f"backend {name!r}: capabilities raised {e!r}")
+            continue
+        if not isinstance(caps, BackendCapabilities):
+            errors.append(f"backend {name!r}: capabilities is "
+                          f"{type(caps).__name__}")
+            continue
+        problems = []
+        if not (caps.durability and isinstance(caps.durability, str)):
+            problems.append("durability must be a non-empty str")
+        if not isinstance(caps.survives_node_loss, bool):
+            problems.append("survives_node_loss must be a bool")
+        if not isinstance(caps.survives_prd_loss, bool):
+            problems.append("survives_prd_loss must be a bool")
+        if caps.overlap not in ("native", "driver-staged"):
+            problems.append(f"overlap {caps.overlap!r} invalid")
+        if caps.max_block_failures is not None and not (
+                isinstance(caps.max_block_failures, int)
+                and caps.max_block_failures >= 1):
+            problems.append("max_block_failures must be None or int >= 1")
+        if problems:
+            errors.append(f"backend {name!r}: incomplete capabilities: "
+                          + "; ".join(problems))
+        else:
+            print(f"backend {name!r}: {caps}")
+    return errors
+
+
+def main() -> int:
+    errors = check_api_surface() + check_backend_capabilities()
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
