@@ -21,6 +21,16 @@ Two views the paper-era benchmarks don't cover:
    campaign whose event crashes one PRD node *itself* alongside two
    compute blocks (recovered from the surviving mirror).
 
+4. **Erasure-coded stripe** (ISSUE 4) — ``erasure(nvm-prd x4+p)`` vs
+   the single PRD node and the 2x mirror: the *storage* overhead of
+   XOR parity ((K+1)/K = 1.25x, strictly below the mirror's 2.0x — the
+   footprint-vs-resilience trade-off of the paper applied to the
+   redundancy layer), its persist-cost overhead in both pipelines, and
+   the same PRD-node-loss campaign recovered in degraded mode from
+   parity.  A planner row records that the campaign the stripe cannot
+   survive (two PRD losses feeding a recovery) is rejected before
+   iteration 0.
+
 Smoke mode (``REPRO_BENCH_SMOKE=1`` or ``run.py --smoke``) shrinks the
 grid so the sweep doubles as a CI dry run (including the composite
 backend path).
@@ -35,6 +45,7 @@ from repro.solvers import (
     FailureCampaign,
     FailureEvent,
     SolveConfig,
+    UnsurvivableCampaignError,
     make_backend,
     make_solver,
     solve,
@@ -136,4 +147,68 @@ def rows():
     out.append(("replicated_prd_x2_prdloss_recovered", rep.failures_recovered,
                 f"PRD node + 2 blocks crashed; storage_failures="
                 f"{rep.storage_failures} converged={rep.converged}"))
+
+    # ---- erasure stripe: footprint + cost vs the mirror (ISSUE 4) ----
+    er_name = "erasure(nvm-prd x4+p)"
+    solver = make_solver("pcg", op, pre)
+    single_be = make_backend("nvm-prd", op, solver=solver)
+    repl_be = make_backend(repl_name, op, solver=solver)
+    er_be = make_backend(er_name, op, solver=solver)
+    out.append(("erasure_x4p_storage_overhead",
+                er_be.nvm_values() / single_be.nvm_values(),
+                f"stripe values / single-PRD values; mirror pays "
+                f"{repl_be.nvm_values() / single_be.nvm_values():.2f}x for "
+                f"the same single-PRD-loss guarantee"))
+    er_reps = {}
+    for mode in ("sync", "overlap"):
+        reps = {}
+        for bname in ("nvm-prd", er_name):
+            solver = make_solver("pcg", op, pre)
+            be = make_backend(bname, op, solver=solver)
+            _, rep, _ = solve(solver, op, b, pre,
+                              SolveConfig(tol=tol, maxiter=20000,
+                                          persist_mode=mode),
+                              backend=be)
+            reps[bname] = rep
+        er_reps[mode] = reps[er_name]
+        out.append((f"erasure_x4p_{mode}_persist_overhead",
+                    reps[er_name].persist_cost_s
+                    / max(reps["nvm-prd"].persist_cost_s, 1e-30),
+                    "striped persist cost / single-PRD cost "
+                    "(K+1 smaller puts)"))
+        out.append((f"erasure_x4p_{mode}_exposed_us_per_event",
+                    reps[er_name].persist_exposed_s * 1e6
+                    / max(reps[er_name].persist_events, 1),
+                    "critical-path cost per event across the stripe"))
+    out.append(("erasure_x4p_hidden_fraction",
+                er_reps["overlap"].persist_hidden_fraction,
+                "share of the striped commit cost still hidden"))
+
+    solver = make_solver("pcg", op, pre)
+    be = make_backend(er_name, op, solver=solver)
+    _, rep, _ = solve(solver, op, b, pre,
+                      SolveConfig(tol=tol, maxiter=20000,
+                                  persist_mode="overlap"),
+                      backend=be, failures=prd_campaign)
+    out.append(("erasure_x4p_prdloss_recovered", rep.failures_recovered,
+                f"stripe node + 2 blocks crashed; degraded fetch rebuilt "
+                f"the lost chunks from parity; storage_failures="
+                f"{rep.storage_failures} converged={rep.converged}"))
+
+    # planner: the campaign the stripe provably cannot survive (two PRD
+    # losses feeding recoveries) is rejected before iteration 0
+    double_loss = FailureCampaign((
+        FailureEvent(blocks=(1,), at_iteration=6, prd=True),
+        FailureEvent(blocks=(2,), at_iteration=10, prd=True),
+    ))
+    solver = make_solver("pcg", op, pre)
+    be = make_backend(er_name, op, solver=solver)
+    try:
+        solve(solver, op, b, pre, SolveConfig(tol=tol, maxiter=20000),
+              backend=be, failures=double_loss)
+        rejected = 0
+    except UnsurvivableCampaignError:
+        rejected = 1
+    out.append(("erasure_x4p_planner_rejects_double_prd_loss", rejected,
+                "plan_campaign refused before iteration 0 (1 = rejected)"))
     return out

@@ -28,7 +28,8 @@ from repro.solvers import (
 
 
 def main() -> None:
-    from repro.launch.report import capability_matrix_table, solve_report_table
+    from repro.launch.report import (capability_matrix_table,
+                                     solve_report_table, storage_values)
     from repro.nvm.backend import backend_names
 
     op, b = make_poisson_problem(32, 16, 16, nblocks=8)
@@ -38,9 +39,11 @@ def main() -> None:
     reports = []
 
     print("Registered backends and their declared capabilities "
-          "(DESIGN.md §7):")
+          "(DESIGN.md §7/§8); storage overhead is relative to one "
+          "unreplicated PRD node:")
     print(capability_matrix_table(
-        (name, make_backend(name, op)) for name in backend_names()))
+        ((name, make_backend(name, op)) for name in backend_names()),
+        baseline_values=storage_values(make_backend("nvm-prd", op))))
     print()
 
     print(f"{'solver':10s} {'set':22s} {'iters':>5s} {'relres':>9s} "

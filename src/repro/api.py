@@ -36,11 +36,14 @@ from repro.nvm.backend import (
 )
 from repro.solvers import driver as _driver
 from repro.solvers.driver import (
+    CampaignPlan,
     FailureCampaign,
     FailureEvent,
     FailurePlan,
     SolveConfig,
     SolveReport,
+    UnsurvivableCampaignError,
+    plan_campaign,
 )
 from repro.solvers.registry import SOLVERS, make_backend, make_solver
 
@@ -55,6 +58,9 @@ __all__ = [
     "BackendCapabilities",
     "PersistenceBackend",
     "UnrecoverableFailure",
+    "CampaignPlan",
+    "UnsurvivableCampaignError",
+    "plan_campaign",
     "FailureCampaign",
     "FailureEvent",
     "FailurePlan",
@@ -127,15 +133,20 @@ class ResilienceSpec:
 
     ``backend`` is a registry name or composable spec string
     (``"nvm-prd"``, ``"replicated(nvm-prd x2)"``,
-    ``"tiered(nvm-homogeneous)"``), an already-built
-    :class:`~repro.nvm.backend.PersistenceBackend`, or None for an
-    unprotected run.  ``persist_mode`` picks the pipeline ("sync" or
-    "overlap", DESIGN.md §6); ``period`` the ESRP persistence period.
-    ``options`` are forwarded to the backend factory."""
+    ``"erasure(nvm-prd x4+p)"``, ``"tiered(nvm-homogeneous)"``), an
+    already-built :class:`~repro.nvm.backend.PersistenceBackend`, or
+    None for an unprotected run.  ``persist_mode`` picks the pipeline
+    ("sync" or "overlap", DESIGN.md §6); ``period`` the ESRP
+    persistence period.  ``plan_campaigns`` keeps the pre-flight
+    campaign planner on (:func:`plan_campaign`, DESIGN.md §8): a
+    campaign the backend's capabilities provably cannot survive is
+    rejected with :class:`UnsurvivableCampaignError` before iteration
+    0.  ``options`` are forwarded to the backend factory."""
 
     backend: Union[str, PersistenceBackend, None] = "nvm-prd"
     persist_mode: str = "sync"
     period: int = 1
+    plan_campaigns: bool = True
     dtype: Any = np.float64
     options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -210,6 +221,7 @@ def solve(
         maxiter=solver.maxiter,
         persistence_period=resilience.period,
         persist_mode=resilience.persist_mode,
+        plan_campaign=resilience.plan_campaigns,
     )
     state, report, captured = _driver.solve(
         built_solver, problem.op, problem.b, problem.precond,

@@ -136,25 +136,45 @@ def solve_report_table(reports) -> str:
 # Backend capability reporting (DESIGN.md §7): what each backend in the
 # registry *declares* — rendered by examples and the docs surface.
 # ----------------------------------------------------------------------
-def capability_rows(name: str, backend) -> Dict[str, str]:
+def storage_values(backend) -> int:
+    """Total redundancy footprint of a backend in *values* (RAM overhead
+    + persistent-tier residency) — the quantity the paper's Fig. 2/8
+    memory-overhead argument compares."""
+    return backend.memory_overhead_values() + backend.nvm_values()
+
+
+def capability_rows(name: str, backend,
+                    baseline_values: Optional[int] = None) -> Dict[str, str]:
     """One backend's :class:`repro.nvm.backend.BackendCapabilities` as
-    printable columns."""
+    printable columns.  ``baseline_values`` (typically a single
+    unreplicated backend's :func:`storage_values`) turns the storage
+    column into an overhead factor — 2.00x for a mirror pair, 1.25x for
+    a 4+p erasure stripe."""
     caps = backend.capabilities
     tol = caps.max_block_failures
-    return {
+    row = {
         "backend": name,
         "durability": caps.durability,
         "node loss": "survives" if caps.survives_node_loss else "fatal",
         "PRD loss": "survives" if caps.survives_prd_loss else "fatal",
+        "storage losses": str(caps.max_storage_failures),
         "overlap": caps.overlap,
         "max failures": "unbounded" if tol is None else str(tol),
     }
+    values = storage_values(backend)
+    if baseline_values:
+        row["storage"] = f"{values / baseline_values:.2f}x"
+    else:
+        row["storage"] = f"{values} values"
+    return row
 
 
-def capability_matrix_table(named_backends) -> str:
+def capability_matrix_table(named_backends,
+                            baseline_values: Optional[int] = None) -> str:
     """Markdown capability matrix over ``(name, backend)`` pairs."""
-    return _markdown_table([capability_rows(n, b) for n, b in named_backends],
-                           "(no backends)")
+    return _markdown_table(
+        [capability_rows(n, b, baseline_values) for n, b in named_backends],
+        "(no backends)")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,7 @@ from repro.nvm.windows import Window, EpochError  # noqa: F401
 from repro.nvm.prd import PRDNode  # noqa: F401
 from repro.nvm.backend import (  # noqa: F401
     BackendCapabilities,
+    ErasureCodedBackend,
     PersistenceBackend,
     PersistSession,
     ReplicatedBackend,

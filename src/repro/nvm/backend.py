@@ -20,14 +20,18 @@ this module makes the contract explicit:
   (the PRD / persistence-service node itself).
 - composite backends: :class:`ReplicatedBackend` (RAID-1-style
   mirroring across N children with quorum fetch — PRD redundancy as a
-  *composition*, not a fourth hand-written backend) and
+  *composition*, not a fourth hand-written backend),
+  :class:`ErasureCodedBackend` (RAID-4/5-style XOR parity striping
+  across K data children + 1 parity child — the same single-node-loss
+  guarantee as a 2x mirror at ~(1+1/K)x footprint, DESIGN.md §8), and
   :class:`TieredBackend` (a volatile RAM front staging into any child;
   this tier is also what gives non-pipelined backends overlap support,
   absorbing the old driver-side staging path).
 - the single backend registry (:func:`register_backend`,
   :func:`create_backend`, :func:`backend_names`) with composable spec
-  strings — ``"replicated(nvm-prd x2)"`` — replacing the
-  ``core.nvm_esr.BACKENDS`` dict and the registry special-casing.
+  strings — ``"replicated(nvm-prd x2)"``, ``"erasure(nvm-prd x4+p)"``
+  — replacing the ``core.nvm_esr.BACKENDS`` dict and the registry
+  special-casing.
 - shims that route the two legacy entry points through the new
   protocol with a :class:`DeprecationWarning`: pre-zoo duck-typed
   backends (``persist(k, beta, p)`` / ``recover(blocks, k)``) and
@@ -99,6 +103,13 @@ class BackendCapabilities:
     - ``max_block_failures`` — largest set of concurrently failed
       blocks a fetch can serve; ``None`` means unbounded (any number
       of compute blocks may fail simultaneously).
+    - ``max_storage_failures`` — how many persistence-service (PRD /
+      pool / storage) node losses committed data remains fetchable
+      through: 0 for the base architectures, ``N-1`` for an N-way
+      mirror, 1 for a K+parity erasure stripe.  Must agree with
+      ``survives_prd_loss`` (which is this field viewed as a boolean);
+      the campaign planner (:func:`repro.solvers.driver.plan_campaign`)
+      budgets ``FailureEvent(prd=True)`` events against it.
     """
 
     durability: str
@@ -106,6 +117,7 @@ class BackendCapabilities:
     survives_prd_loss: bool
     overlap: str
     max_block_failures: Optional[int] = None
+    max_storage_failures: int = 0
 
     def __post_init__(self):
         if self.overlap not in (OVERLAP_NATIVE, OVERLAP_DRIVER_STAGED):
@@ -114,6 +126,17 @@ class BackendCapabilities:
                 f"{OVERLAP_DRIVER_STAGED!r}, got {self.overlap!r}")
         if not self.durability:
             raise ValueError("durability tier must be a non-empty string")
+        if not isinstance(self.max_storage_failures, int) \
+                or self.max_storage_failures < 0:
+            raise ValueError(
+                f"max_storage_failures must be an int >= 0, got "
+                f"{self.max_storage_failures!r}")
+        if self.survives_prd_loss != (self.max_storage_failures > 0):
+            raise ValueError(
+                f"incoherent capabilities: survives_prd_loss="
+                f"{self.survives_prd_loss} but max_storage_failures="
+                f"{self.max_storage_failures}; a backend survives PRD "
+                f"loss exactly when it tolerates >= 1 storage failure")
 
 
 class PersistSession(abc.ABC):
@@ -624,6 +647,10 @@ class ReplicatedBackend(PersistenceBackend):
                      else OVERLAP_DRIVER_STAGED),
             max_block_failures=(None if all(m is None for m in maxes)
                                 else min(m for m in maxes if m is not None)),
+            # every mirror may absorb its own tolerance and then die;
+            # only the last surviving mirror must stay reachable
+            max_storage_failures=(
+                sum(c.max_storage_failures + 1 for c in caps) - 1),
         )
 
     def open_session(self, schema=None, partition=None) -> PersistSession:
@@ -707,6 +734,7 @@ class TieredBackend(PersistenceBackend):
             survives_prd_loss=c.survives_prd_loss,
             overlap=OVERLAP_NATIVE,
             max_block_failures=c.max_block_failures,
+            max_storage_failures=c.max_storage_failures,
         )
 
     def open_session(self, schema=None, partition=None) -> PersistSession:
@@ -720,12 +748,292 @@ class TieredBackend(PersistenceBackend):
 
 
 # ----------------------------------------------------------------------
+# Erasure-coded composition (RAID-4/5-style parity, DESIGN.md §8)
+# ----------------------------------------------------------------------
+def _xor_arrays(arrays, dtype) -> np.ndarray:
+    """Bitwise XOR of same-shape arrays, on their raw bytes (parity is a
+    bit-level code: XOR of float payloads is not float arithmetic)."""
+    acc = np.ascontiguousarray(arrays[0]).view(np.uint8).copy()
+    for a in arrays[1:]:
+        acc ^= np.ascontiguousarray(a).view(np.uint8)
+    return acc.view(dtype)
+
+
+class ErasureSession(PersistSession):
+    """Stripe every event across K data children + 1 parity child.
+
+    Write path: each slot vector is split block-wise into K equal chunks
+    (zero-padded when K does not divide the block size); data child ``j``
+    persists chunk ``j`` of every block, the parity child persists the
+    bytewise XOR of all K chunks.  Chunks and parity are computed from
+    the same staged payload and handed to the children in one lockstep
+    ``begin`` (and committed in one lockstep ``commit``), so a failure
+    between driver calls can never leave a stripe whose parity
+    disagrees with its data: either the whole stripe's staged events
+    are aborted together, or the whole stripe committed.  Scalars are
+    tiny and replicated to every child unchanged.
+
+    Read path: with all children live, the stripe is reassembled from
+    the K data chunks (the parity is not read).  With exactly one child
+    lost — data or parity — ``fetch`` runs in **degraded mode**: a lost
+    data child's chunk is reconstructed as the XOR of the parity and
+    the K-1 surviving chunks; a lost parity child costs nothing.  Two
+    lost children exceed the code's distance and raise
+    :class:`UnrecoverableFailure` with a per-child diagnosis.
+
+    Degraded *writes* keep working too: parity is computed from the
+    full payload the session holds, so events persisted after a child
+    loss remain exactly reconstructible.
+    """
+
+    def __init__(self, backend: "ErasureCodedBackend", schema, partition):
+        super().__init__(schema)
+        self._backend = backend
+        # children[:-1] are the K data nodes, children[-1] the parity node
+        self._children = [open_persist_session(c, schema, None)
+                          for c in backend.children]
+
+    # -- stripe geometry ------------------------------------------------
+    def _shards(self, vectors) -> List[Dict[str, np.ndarray]]:
+        """Split full vectors into K per-child chunk vectors + parity.
+
+        Chunking happens on the *stored* dtype so the parity covers
+        exactly the bits the data children persist.
+        """
+        be = self._backend
+        k_data, nb, bs, chunk = be.k_data, be.nblocks, be.block_size, be.chunk
+        out: List[Dict[str, np.ndarray]] = [dict() for _ in range(k_data + 1)]
+        for name in self.schema.vectors:
+            v = np.asarray(vectors[name], be.dtype).reshape(nb, bs)
+            padded = np.zeros((nb, k_data * chunk), be.dtype)
+            padded[:, :bs] = v
+            chunks = [np.ascontiguousarray(padded[:, j * chunk:(j + 1) * chunk]
+                                           ).reshape(-1)
+                      for j in range(k_data)]
+            for j in range(k_data):
+                out[j][name] = chunks[j]
+            out[k_data][name] = _xor_arrays(chunks, be.dtype)
+        return out
+
+    def _live(self) -> List[PersistSession]:
+        return [s for s in self._children if not s._storage_down]
+
+    def _fan_out(self, method: str, k, scalars, vectors) -> float:
+        """One lockstep stripe write (begin or persist): data chunks and
+        parity leave the same origin NIC back to back, so the modeled
+        origin-visible cost is the sum over children — each carrying
+        ~1/K of the payload bytes."""
+        shards = self._shards(vectors)
+        return sum(getattr(s, method)(k, scalars, shards[j])
+                   for j, s in enumerate(self._children))
+
+    # -- pipeline -------------------------------------------------------
+    def begin(self, k, scalars, vectors) -> float:
+        if self._storage_down:
+            return 0.0  # the stripe is gone; the event is lost
+        return self._fan_out("begin", k, scalars, vectors)
+
+    def commit(self) -> float:
+        return sum(s.commit() for s in self._children)
+
+    def drain(self) -> float:
+        return sum(s.drain() for s in self._children)
+
+    def abort(self) -> None:
+        for s in self._children:
+            s.abort()
+
+    def persist(self, k, scalars, vectors) -> float:
+        if self._storage_down:
+            return 0.0
+        return self._fan_out("persist", k, scalars, vectors)
+
+    # -- failure + recovery ---------------------------------------------
+    def fail(self, blocks: Sequence[int]) -> None:
+        for s in self._children:
+            s.fail(blocks)
+
+    def fail_storage(self) -> None:
+        """One stripe node crashes (ordered, like mirrors: the first
+        storage-loss event takes data child 0, the next data child 1,
+        ..., finally the parity node).  The stripe serves degraded
+        fetches while at most one child is lost."""
+        for s in self._children:
+            if not s._storage_down:
+                s.fail_storage()
+                break
+        if len(self._live()) < self._backend.k_data:
+            self._storage_down = True  # > 1 loss: beyond the code distance
+
+    def fetch(self, failed_blocks, ks) -> List[RecoverySet]:
+        be = self._backend
+        k_data = be.k_data
+        per_child: List[Optional[List[RecoverySet]]] = []
+        errors: List[str] = []
+        for j, s in enumerate(self._children):
+            tag = f"data {j}" if j < k_data else "parity"
+            if s._storage_down:
+                per_child.append(None)
+                errors.append(f"{tag}: storage lost")
+                continue
+            try:
+                per_child.append(s.fetch(failed_blocks, ks))
+            except (UnrecoverableFailure, RuntimeError) as e:
+                per_child.append(None)
+                errors.append(f"{tag}: {e}")
+        missing = [j for j, r in enumerate(per_child) if r is None]
+        if len(missing) > 1:
+            raise UnrecoverableFailure(
+                f"erasure stripe lost {len(missing)} of {k_data + 1} "
+                f"children — XOR parity reconstructs at most one — for "
+                f"iterations {tuple(ks)} over blocks "
+                f"{tuple(failed_blocks)}: " + "; ".join(errors))
+        return [self._assemble(per_child, i, kk, tuple(failed_blocks))
+                for i, kk in enumerate(ks)]
+
+    def _assemble(self, per_child, i: int, kk: int,
+                  failed: Tuple[int, ...]) -> RecoverySet:
+        """Reassemble one iteration's union set from the stripe chunks,
+        reconstructing the (at most one) missing child's chunk from
+        parity."""
+        from repro.core.state import RecoverySet
+
+        be = self._backend
+        k_data, chunk, bs = be.k_data, be.chunk, be.block_size
+        nf = len(failed)
+        sets = [None if r is None else r[i] for r in per_child]
+        donor = next(s for s in sets if s is not None)
+        if any(s is not None and s.k != kk for s in sets):
+            raise UnrecoverableFailure(
+                f"erasure stripe children disagree on iteration {kk}")
+        vectors = {}
+        for name in self.schema.vectors:
+            chunks = [None if s is None else
+                      np.asarray(s.vectors[name], be.dtype) for s in sets]
+            if chunks[-1] is None:       # parity lost: data is complete
+                data = chunks[:k_data]
+            else:
+                present = [c for c in chunks if c is not None]
+                if len(present) == k_data + 1:
+                    data = chunks[:k_data]
+                else:                    # degraded: rebuild the lost chunk
+                    rebuilt = _xor_arrays(present, be.dtype)
+                    data = [rebuilt if c is None else c
+                            for c in chunks[:k_data]]
+            stacked = np.stack([c.reshape(nf, chunk) for c in data], axis=1)
+            vectors[name] = np.ascontiguousarray(
+                stacked.reshape(nf, k_data * chunk)[:, :bs]).reshape(-1)
+        return RecoverySet(kk, dict(donor.scalars), vectors)
+
+    def durable_run(self) -> Optional[int]:
+        if self._storage_down:
+            return None
+        runs = [s.durable_run() for s in self._live()]
+        if not runs or any(r is None for r in runs):
+            return None
+        # live children write in lockstep; min is the conservative join
+        return min(runs)
+
+
+class ErasureCodedBackend(PersistenceBackend):
+    """K+1 erasure coding (XOR parity) over K data children + 1 parity.
+
+    The footprint counterpart of :class:`ReplicatedBackend`: both
+    survive the loss of a whole persistence-service node, but the
+    mirror pays 2x storage while the stripe pays ~(K+1)/K — the paper's
+    memory-footprint argument applied to the redundancy layer itself
+    (cf. Pachajoa et al. on multi-node-failure PCG and EasyCrash on
+    NVM crash consistency).  Spec string: ``"erasure(nvm-prd x4+p)"``
+    = 4 data PRD nodes + 1 parity PRD node.
+    """
+
+    name = "erasure"
+
+    def __init__(self, data_children: Sequence[PersistenceBackend],
+                 parity_child: PersistenceBackend, block_size: int):
+        if len(data_children) < 2:
+            raise ValueError(
+                f"erasure coding needs >= 2 data children, got "
+                f"{len(data_children)} — with one data child the parity "
+                f"is a mirror; use replicated(...)")
+        self.data_children = list(data_children)
+        self.parity_child = parity_child
+        self.children = self.data_children + [self.parity_child]
+        if len({id(c) for c in self.children}) != len(self.children):
+            # An aliased child is one storage node wearing two stripe
+            # hats: its second (e.g. parity) write silently lands on the
+            # first's slots, and a "survivable" single loss then serves
+            # corrupted degraded fetches.  Refuse at composition time.
+            raise ValueError(
+                "stripe children must be distinct backend instances — "
+                "the same object appears twice (pass distinct backends, "
+                "or spec strings so the factory builds one per role)")
+        schemas = {getattr(c, "schema", None) for c in self.children}
+        if len(schemas) != 1:
+            raise ValueError("all stripe children must persist the same schema")
+        self.schema = self.children[0].schema
+        nblocks = {c.nblocks for c in self.children}
+        if len(nblocks) != 1:
+            raise ValueError("all stripe children must cover the same blocks")
+        self.nblocks = nblocks.pop()
+        self.k_data = len(self.data_children)
+        self.block_size = int(block_size)
+        self.chunk = -(-self.block_size // self.k_data)  # ceil
+        self.dtype = np.dtype(getattr(self.children[0], "dtype", np.float64))
+        bad = [c.block_size for c in self.children
+               if getattr(c, "block_size", self.chunk) != self.chunk]
+        if bad:
+            raise ValueError(
+                f"stripe children must be sized for chunk {self.chunk} "
+                f"(= ceil({self.block_size}/{self.k_data})), got {bad}")
+
+    @property
+    def capabilities(self) -> BackendCapabilities:
+        caps = [c.capabilities for c in self.children]
+        maxes = [c.max_block_failures for c in caps]
+        return BackendCapabilities(
+            durability=_join_tiers(self.children),
+            survives_node_loss=all(c.survives_node_loss for c in caps),
+            # the stripe's guarantee: any single child (data or parity)
+            # may be lost and every committed event remains exact
+            survives_prd_loss=True,
+            overlap=(OVERLAP_NATIVE
+                     if all(c.overlap == OVERLAP_NATIVE for c in caps)
+                     else OVERLAP_DRIVER_STAGED),
+            max_block_failures=(None if all(m is None for m in maxes)
+                                else min(m for m in maxes if m is not None)),
+            max_storage_failures=1,  # XOR parity: distance 2, exactly one
+        )
+
+    def open_session(self, schema=None, partition=None) -> PersistSession:
+        schema = _validate_schema(self, schema)
+        if partition is not None:
+            if getattr(partition, "nblocks", self.nblocks) != self.nblocks:
+                raise ValueError(
+                    f"stripe sized for {self.nblocks} blocks but the "
+                    f"partition has {partition.nblocks}")
+            if getattr(partition, "block_size",
+                       self.block_size) != self.block_size:
+                raise ValueError(
+                    f"stripe sized for block_size {self.block_size} but "
+                    f"the partition has {partition.block_size}")
+        return ErasureSession(self, schema, partition)
+
+    def memory_overhead_values(self) -> int:
+        return sum(c.memory_overhead_values() for c in self.children)
+
+    def nvm_values(self) -> int:
+        return sum(c.nvm_values() for c in self.children)
+
+
+# ----------------------------------------------------------------------
 # The single backend registry
 # ----------------------------------------------------------------------
 # name -> factory(nblocks, block_size, dtype, schema=..., **opts)
 _REGISTRY: Dict[str, Callable] = {}
 _SPEC_RE = re.compile(r"^(?P<name>[\w.-]+)\s*(?:\((?P<args>[^()]*)\))?$")
 _CHILD_RE = re.compile(r"^(?P<child>[\w.-]+)\s*[x×]\s*(?P<n>\d+)$")
+_STRIPE_RE = re.compile(r"^(?P<child>[\w.-]+)\s*[x×]\s*(?P<n>\d+)\s*\+\s*p$")
 
 
 def register_backend(name: str, factory: Callable) -> None:
@@ -783,6 +1091,7 @@ def parse_backend_spec(spec: str) -> Tuple[str, dict]:
         "replicated(nvm-prd x2)"       -> ("replicated", {"children": ("nvm-prd",)*2})
         "replicated(nvm-prd,nvm-homogeneous)"
         "tiered(nvm-homogeneous)"      -> ("tiered", {"child": "nvm-homogeneous"})
+        "erasure(nvm-prd x4+p)"        -> ("erasure", {"data": ("nvm-prd",)*4})
     """
     m = _SPEC_RE.match(spec.strip())
     if m is None:
@@ -791,6 +1100,14 @@ def parse_backend_spec(spec: str) -> Tuple[str, dict]:
     if args is None:
         return name, {}
     args = args.strip()
+    if name == "erasure":
+        stripe = _STRIPE_RE.match(args)
+        if stripe is None:
+            raise ValueError(
+                f"malformed erasure spec {spec!r}: expected "
+                f"'erasure(<child> xK+p)' (K data nodes + 1 parity), "
+                f"e.g. 'erasure(nvm-prd x4+p)'")
+        return name, {"data": (stripe.group("child"),) * int(stripe.group("n"))}
     if name == "replicated":
         xn = _CHILD_RE.match(args)
         if xn is not None:
@@ -841,8 +1158,33 @@ def _tiered_factory(nblocks, block_size, dtype, child="nvm-homogeneous",
     return TieredBackend(built)
 
 
+def _erasure_factory(nblocks, block_size, dtype,
+                     data: Sequence = ("nvm-prd",) * 4,
+                     parity: Optional[str] = None,
+                     schema=None, **opts) -> ErasureCodedBackend:
+    """Build the stripe: children are sized for the chunk (1/K of the
+    block, zero-padded), so the stripe's total footprint is ~(K+1)/K of
+    a single backend's — the measured storage-overhead claim."""
+    k_data = len(data)
+    if k_data < 2:
+        raise ValueError(
+            f"erasure coding needs >= 2 data children, got {k_data}")
+    chunk = -(-int(block_size) // k_data)  # ceil
+
+    def build(spec):
+        if isinstance(spec, PersistenceBackend):
+            return spec
+        return create_backend(spec, nblocks, chunk, dtype,
+                              schema=schema, **opts)
+
+    children = [build(c) for c in data]
+    parity_child = build(parity if parity is not None else data[0])
+    return ErasureCodedBackend(children, parity_child, block_size)
+
+
 register_backend("replicated", _replicated_factory)
 register_backend("tiered", _tiered_factory)
+register_backend("erasure", _erasure_factory)
 
 
 # ----------------------------------------------------------------------

@@ -192,8 +192,12 @@ class PRDNode:
         return sorted(found, key=lambda sp: -sp[0])
 
     def crash(self) -> None:
-        """PRD node power-fail (single point of failure unless RAIDed,
-        which the paper scopes out); unflushed epochs are lost."""
+        """PRD node power-fail; unflushed epochs are lost.  A single
+        PRD node is a single point of failure — the paper scopes the
+        RAID fix out; this repo composes it back in at the backend
+        layer: ``replicated(nvm-prd xN)`` mirrors whole nodes,
+        ``erasure(nvm-prd xK+p)`` stripes them with XOR parity
+        (DESIGN.md §7/§8)."""
         if self._drainer is not None:
             # the drainer dies with the node; whatever was not flushed is gone
             self._drainer = None

@@ -25,11 +25,15 @@ from repro.solvers.chebyshev import (  # noqa: F401
     spectral_bounds,
 )
 from repro.solvers.driver import (  # noqa: F401
+    CampaignPlan,
     FailureCampaign,
     FailureEvent,
     FailurePlan,
+    PlannedRecovery,
     SolveConfig,
     SolveReport,
+    UnsurvivableCampaignError,
+    plan_campaign,
     should_persist,
     solve,
 )

@@ -14,8 +14,17 @@ shares one implementation of the paper's runtime machinery:
   mid-burst falling back to the previous durable run, repeated failures
   of the same block, and ``prd=True`` events that crash the persistence
   service / PRD node itself),
+- campaign *planning* (:func:`plan_campaign`, DESIGN.md §8): before
+  iteration 0, every recovery the campaign will force is budgeted
+  against the backend's declared
+  :class:`~repro.nvm.backend.BackendCapabilities`; a campaign the
+  backend provably cannot survive is rejected with an
+  :class:`UnsurvivableCampaignError` naming the violating event,
 - the survivor-side snapshot at the last *durable* persistence run,
 - recovery (backend fetch + solver-specific exact reconstruction),
+  with a rollback-agreement cross-check: after every recovery fetch the
+  backend's own ``durable_run()`` must name the same iteration the
+  driver is about to reconstruct from,
 - convergence monitoring and reporting.
 
 The solver contributes only algorithm-specific pieces through the
@@ -37,7 +46,11 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.nvm.backend import open_persist_session
+from repro.nvm.backend import (
+    BackendCapabilities,
+    UnrecoverableFailure,
+    open_persist_session,
+)
 
 PERSIST_MODES = ("sync", "overlap")
 
@@ -50,6 +63,10 @@ class SolveConfig:
     local_solve: str = "auto"     # reconstruction local solver
     persist_mode: str = "sync"    # "sync": persist on the critical path;
     #                               "overlap": commit hides behind compute
+    plan_campaign: bool = True    # pre-flight plan_campaign() against the
+    #                               backend's declared capabilities; False
+    #                               runs unplanned (failures surface at the
+    #                               recovery fetch instead)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +140,120 @@ class FailureCampaign:
                 raise ValueError(
                     f"during_recovery_at={e.during_recovery_at} matches no "
                     f"at_iteration event in the campaign")
+
+
+class UnsurvivableCampaignError(UnrecoverableFailure):
+    """Raised by :func:`plan_campaign` *before iteration 0* for a
+    campaign the backend's declared capabilities provably cannot
+    survive.  Subclasses :class:`~repro.nvm.backend.UnrecoverableFailure`
+    because it reports the same fact — a recovery fetch that cannot be
+    served — just at plan time instead of mid-solve."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannedRecovery:
+    """One recovery the campaign will force: the iteration that triggers
+    it, the final failed-block union its fetch must serve (after all
+    overlapping events), how many persistence-service losses will have
+    accumulated by its last fetch, and how many stale-fetch restarts
+    overlapping events will cause."""
+
+    at_iteration: int
+    blocks: Tuple[int, ...]
+    storage_losses: int
+    restarts: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignPlan:
+    """The planner's verdict on a survivable campaign: the recoveries it
+    will force, in trigger order, and the total storage losses."""
+
+    recoveries: Tuple[PlannedRecovery, ...]
+    storage_losses: int
+
+
+def plan_campaign(campaign, capabilities: BackendCapabilities) -> CampaignPlan:
+    """Check a campaign against a backend's declared capabilities.
+
+    Walks the campaign exactly as the solve loop will execute it —
+    iteration-triggered events in order, each recovery absorbing its
+    ``during_recovery_at`` events one refetch at a time — and verifies
+    that every recovery *fetch* the campaign forces can be served:
+
+    - the failed-block union at each fetch must not exceed
+      ``capabilities.max_block_failures`` (peer-RAM copy placement),
+    - the persistence-service losses accumulated by each fetch must not
+      exceed ``capabilities.max_storage_failures`` (mirror / parity
+      budget) — a ``prd=True`` event *after* the last fetch is
+      survivable and accepted, matching the runtime semantics,
+    - any failed blocks at all require ``capabilities.survives_node_loss``.
+
+    Returns the :class:`CampaignPlan` for a survivable campaign; raises
+    :class:`UnsurvivableCampaignError` naming the violating
+    :class:`FailureEvent` otherwise.  ``campaign`` may be a
+    :class:`FailureCampaign` or any sequence :func:`solve` accepts.
+    """
+    campaign = _as_campaign(campaign)
+    max_storage = capabilities.max_storage_failures
+    max_blocks = capabilities.max_block_failures
+    during: Dict[int, List[FailureEvent]] = {}
+    ordered: List[FailureEvent] = []
+    for ev in campaign.events:
+        if ev.at_iteration is None:
+            during.setdefault(ev.during_recovery_at, []).append(ev)
+        else:
+            ordered.append(ev)
+    ordered.sort(key=lambda e: e.at_iteration)
+
+    losses = 0
+    fatal_loss: Optional[FailureEvent] = None  # the loss past the budget
+    recoveries: List[PlannedRecovery] = []
+    for ev in ordered:
+        if ev.prd:
+            losses += 1
+            if losses > max_storage and fatal_loss is None:
+                fatal_loss = ev
+        if not ev.blocks:
+            # Storage-only event: no compute state lost, no recovery
+            # fetch here; the loss is latent until a later fetch.
+            continue
+        queue = list(during.pop(ev.at_iteration, ()))
+        union: set = set()
+        cur, restarts = ev, 0
+        while True:
+            union |= set(cur.blocks)
+            if union and not capabilities.survives_node_loss:
+                raise UnsurvivableCampaignError(
+                    f"campaign rejected before iteration 0: {cur} fails "
+                    f"compute blocks but the backend declares "
+                    f"survives_node_loss=False")
+            if max_blocks is not None and len(union) > max_blocks:
+                raise UnsurvivableCampaignError(
+                    f"campaign rejected before iteration 0: the recovery "
+                    f"at iteration {ev.at_iteration} must fetch the "
+                    f"{len(union)}-block union {tuple(sorted(union))}, "
+                    f"beyond capabilities.max_block_failures={max_blocks}; "
+                    f"violating event: {cur}")
+            if losses > max_storage:
+                raise UnsurvivableCampaignError(
+                    f"campaign rejected before iteration 0: the recovery "
+                    f"at iteration {ev.at_iteration} fetches after "
+                    f"{losses} persistence-service (PRD) losses, beyond "
+                    f"capabilities.max_storage_failures={max_storage}; "
+                    f"violating event: {fatal_loss}")
+            if not queue:
+                break
+            cur = queue.pop(0)
+            restarts += 1
+            if cur.prd:
+                losses += 1
+                if losses > max_storage and fatal_loss is None:
+                    fatal_loss = cur
+        recoveries.append(PlannedRecovery(
+            at_iteration=ev.at_iteration, blocks=tuple(sorted(union)),
+            storage_losses=losses, restarts=restarts))
+    return CampaignPlan(tuple(recoveries), losses)
 
 
 @dataclasses.dataclass
@@ -268,13 +399,22 @@ def solve(
                                        getattr(op, "partition", None))
     history = schema.history
 
+    campaign = _as_campaign(failures)
+    if (config.plan_campaign and campaign.events and backend is not None):
+        caps = getattr(backend, "capabilities", None)
+        if isinstance(caps, BackendCapabilities):
+            # Pre-flight: reject a campaign the backend provably cannot
+            # survive before any iteration runs (duck-typed backends
+            # declare nothing, so nothing is provable — they run
+            # unplanned and fail at the fetch instead).
+            plan_campaign(campaign, caps)
+
     state = solver.init_state(op, precond, b, x0)
     step = solver.make_step(op, precond)
     bnorm = float(jnp.linalg.norm(b))
     report = SolveReport(solver=solver.name, persist_mode=config.persist_mode)
     captured: Dict[int, object] = {}
 
-    campaign = _as_campaign(failures)
     at_events: Dict[int, List[FailureEvent]] = {}
     during_events: Dict[int, List[FailureEvent]] = {}
     for ev in campaign.events:
@@ -390,6 +530,19 @@ def solve(
                 prd_hit = nxt.prd
                 report.recovery_restarts += 1
                 continue
+            # Rollback-agreement cross-check (DESIGN.md §8): the backend
+            # answers the rollback question from its own slots; it must
+            # name the same durable run the driver's snapshot ends at.
+            # (Sessions without slot knowledge answer None and are
+            # exempt — there is nothing to cross-check against.)
+            dr = session.durable_run()
+            if dr is not None and dr != k_rec:
+                raise RuntimeError(
+                    f"rollback-point disagreement after recovery: the "
+                    f"driver's durable snapshot ends at iteration {k_rec} "
+                    f"but the backend's durable_run() reports {dr}; "
+                    f"backend and driver must agree before reconstruction "
+                    f"(DESIGN.md §8)")
             st_new = solver.reconstruct(
                 op, precond, b,
                 snapshot=snapshot,

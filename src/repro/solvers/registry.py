@@ -66,7 +66,8 @@ def make_backend(
     ``solver``'s (or ``schema``'s) recovery set; defaults to PCG's.
 
     ``name`` may be any registry name or a composable spec string —
-    ``"replicated(nvm-prd x2)"``, ``"tiered(nvm-homogeneous)"``."""
+    ``"replicated(nvm-prd x2)"``, ``"erasure(nvm-prd x4+p)"``,
+    ``"tiered(nvm-homogeneous)"``."""
     if solver is not None:
         if schema is not None and schema != solver.schema:
             raise ValueError(

@@ -99,10 +99,20 @@ def test_capability_matrix_expectations():
     repl = make_backend("replicated(nvm-prd x2)", op)
     assert repl.capabilities.survives_prd_loss  # the composition's point
     assert repl.capabilities.durability == "nvm"
+    assert repl.capabilities.max_storage_failures == 1
+    assert make_backend("replicated(nvm-prd x3)",
+                        op).capabilities.max_storage_failures == 2
+
+    erasure = make_backend("erasure(nvm-prd x4+p)", op)
+    assert erasure.capabilities.survives_prd_loss
+    assert erasure.capabilities.max_storage_failures == 1  # code distance 2
+    assert erasure.capabilities.durability == "nvm"
+    assert erasure.capabilities.overlap == "native"
 
     tiered = make_backend("tiered(nvm-homogeneous)", op)
     assert tiered.capabilities.overlap == "native"
     assert not tiered.capabilities.survives_prd_loss  # child's guarantee
+    assert tiered.capabilities.max_storage_failures == 0
 
 
 def test_capabilities_validate_fields():
@@ -110,22 +120,38 @@ def test_capabilities_validate_fields():
         BackendCapabilities("nvm", True, False, overlap="sometimes")
     with pytest.raises(ValueError, match="durability"):
         BackendCapabilities("", True, False, overlap="native")
+    with pytest.raises(ValueError, match="max_storage_failures"):
+        BackendCapabilities("nvm", True, False, overlap="native",
+                            max_storage_failures=-1)
+    # survives_prd_loss is max_storage_failures viewed as a boolean;
+    # declaring one without the other is incoherent
+    with pytest.raises(ValueError, match="incoherent"):
+        BackendCapabilities("nvm", True, True, overlap="native")
+    with pytest.raises(ValueError, match="incoherent"):
+        BackendCapabilities("nvm", True, False, overlap="native",
+                            max_storage_failures=1)
 
 
 # ------------------------------------------------- capability enforcement
+@pytest.mark.parametrize("planned", [True, False],
+                         ids=["planner-reject", "runtime-raise"])
 @pytest.mark.parametrize("backend_name", ["esr", "nvm-homogeneous", "nvm-prd"])
-def test_prd_loss_without_mirror_raises_not_corrupts(backend_name):
+def test_prd_loss_without_mirror_raises_not_corrupts(backend_name, planned):
     """The satellite criterion: a backend whose capabilities forbid PRD
     loss must raise UnrecoverableFailure — not silently reconstruct from
-    unreachable or stale data — when a campaign kills its PRD node."""
+    unreachable or stale data — when a campaign kills its PRD node.
+    With the planner on the campaign is rejected before iteration 0;
+    unplanned, the same guarantee holds at the recovery fetch."""
     op, b, pre = _problem()
     solver = make_solver("pcg", op, pre)
     backend = make_backend(backend_name, op, solver=solver)
     assert not backend.capabilities.survives_prd_loss
+    assert backend.capabilities.max_storage_failures == 0
     campaign = FailureCampaign((
         FailureEvent(blocks=(1, 2), at_iteration=8, prd=True),))
     with pytest.raises(UnrecoverableFailure, match="PRD"):
-        solve(solver, op, b, pre, SolveConfig(tol=1e-10),
+        solve(solver, op, b, pre,
+              SolveConfig(tol=1e-10, plan_campaign=planned),
               backend=backend, failures=campaign)
 
 
@@ -159,7 +185,10 @@ def test_prd_only_event_is_survived_until_recovery_is_needed(persist_mode):
 
 def test_replicated_all_mirrors_lost_raises():
     """Redundancy is not magic: when every mirror's PRD dies, the fetch
-    refuses with a per-mirror diagnosis."""
+    refuses with a per-mirror diagnosis.  The campaign planner would
+    reject this campaign before iteration 0 (see
+    tests/test_erasure_planner.py); ``plan_campaign=False`` runs it
+    unplanned to exercise the runtime quorum path itself."""
     op, b, pre = _problem()
     solver = make_solver("pcg", op, pre)
     backend = make_backend("replicated(nvm-prd x2)", op, solver=solver)
@@ -168,7 +197,8 @@ def test_replicated_all_mirrors_lost_raises():
         FailureEvent(blocks=(1,), at_iteration=8, prd=True), # mirror 1 + block
     ))
     with pytest.raises(UnrecoverableFailure, match="no mirror"):
-        solve(solver, op, b, pre, SolveConfig(tol=1e-10),
+        solve(solver, op, b, pre,
+              SolveConfig(tol=1e-10, plan_campaign=False),
               backend=backend, failures=campaign)
 
 
@@ -273,7 +303,7 @@ def test_replicated_mirroring_costs_sum_over_children():
 def test_backend_registry_lists_composites():
     names = backend_names()
     for expected in ("esr", "nvm-homogeneous", "nvm-prd", "replicated",
-                     "tiered"):
+                     "tiered", "erasure"):
         assert expected in names
 
 
@@ -287,8 +317,14 @@ def test_parse_backend_spec():
         "replicated", {"children": ("nvm-prd", "nvm-homogeneous")})
     assert parse_backend_spec("tiered(nvm-prd)") == (
         "tiered", {"child": "nvm-prd"})
+    assert parse_backend_spec("erasure(nvm-prd x4+p)") == (
+        "erasure", {"data": ("nvm-prd",) * 4})
+    assert parse_backend_spec("erasure(nvm-homogeneous ×2 + p)") == (
+        "erasure", {"data": ("nvm-homogeneous",) * 2})
     with pytest.raises(ValueError, match="malformed"):
         parse_backend_spec("replicated(nvm-prd")
+    with pytest.raises(ValueError, match="xK\\+p"):
+        parse_backend_spec("erasure(nvm-prd x4)")
     with pytest.raises(ValueError, match="no spec arguments"):
         create_backend("esr(nvm-prd)", 4, 8)
 

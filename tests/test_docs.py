@@ -17,7 +17,8 @@ sys.path.insert(0, str(REPO / "tools"))
 
 from check_docs import python_blocks  # noqa: E402
 
-DOC_FILES = ["README.md", "docs/recovery-format.md", "docs/backend-api.md"]
+DOC_FILES = ["README.md", "docs/recovery-format.md", "docs/backend-api.md",
+             "docs/erasure-coding.md"]
 
 
 @pytest.mark.parametrize("doc", DOC_FILES)
@@ -36,9 +37,10 @@ def test_check_docs_cli_passes_on_repo_docs():
     out = subprocess.run(
         [sys.executable, str(REPO / "tools" / "check_docs.py"),
          "README.md", "DESIGN.md", "docs/recovery-format.md",
-         "docs/backend-api.md"],
+         "docs/backend-api.md", "docs/erasure-coding.md"],
         cwd=REPO, capture_output=True, text=True)
     assert out.returncode == 0, out.stdout + out.stderr
+    assert "backend matrix covers" in out.stdout
 
 
 def test_check_api_cli_passes_on_repo():
@@ -65,3 +67,32 @@ def test_check_docs_cli_flags_rot(tmp_path):
     assert out.returncode == 1
     assert "does not compile" in out.stderr
     assert "broken relative link" in out.stderr
+
+
+def test_check_docs_flags_undocumented_backend_family(tmp_path):
+    """The freshness gate (ISSUE 4 satellite): a README whose backend
+    matrix misses a registered spec family fails the docs job, so a
+    future backend cannot land undocumented."""
+    from check_docs import registered_backend_families
+
+    families = registered_backend_families(REPO / "src")
+    assert {"esr", "nvm-homogeneous", "nvm-prd", "replicated", "tiered",
+            "erasure"} <= families
+
+    stale = tmp_path / "README.md"
+    keep = sorted(families - {"erasure"})
+    stale.write_text("backends: " + " ".join(f"`{n}`" for n in keep) + "\n")
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"), str(stale)],
+        capture_output=True, text=True)
+    assert out.returncode == 1
+    assert "'erasure' is missing" in out.stderr
+
+    fresh = tmp_path / "ok" / "README.md"
+    fresh.parent.mkdir()
+    fresh.write_text("backends: "
+                     + " ".join(f"`{n}`" for n in sorted(families)) + "\n")
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"), str(fresh)],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr

@@ -1,0 +1,441 @@
+"""Erasure-coded persistence + campaign planning (ISSUE 4 tentpole).
+
+Covers:
+
+- the XOR-parity stripe (`ErasureCodedBackend`, DESIGN.md §8): healthy
+  and *degraded* fetches are bit-exact for every zoo solver's schema,
+  losing the parity node costs nothing, and losing two children raises
+  `UnrecoverableFailure` with a per-child diagnosis,
+- the acceptance criterion: `erasure(nvm-prd x4+p)` survives a
+  `FailureEvent(prd=True)` campaign with exact reconstruction for all
+  5 zoo solvers in both persist modes, at < 2x storage overhead,
+- the campaign planner (`plan_campaign`): provably-unsurvivable
+  campaigns are rejected before iteration 0 with an error naming the
+  violating `FailureEvent`; survivable ones return a `CampaignPlan`
+  that mirrors the runtime trajectory,
+- the `durable_run` rollback-agreement cross-check: a backend whose
+  slots disagree with the driver's snapshot is refused loudly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import JacobiPreconditioner, make_poisson_problem
+from repro.core.nvm_esr import NVMESRPRD
+from repro.core.state import PCG_SCHEMA, shard_vectors, typed_vectors
+from repro.nvm.backend import (
+    BackendCapabilities,
+    ErasureCodedBackend,
+    UnrecoverableFailure,
+    create_backend,
+)
+from repro.solvers import (
+    SOLVERS,
+    FailureCampaign,
+    FailureEvent,
+    SolveConfig,
+    UnsurvivableCampaignError,
+    make_backend,
+    make_solver,
+    plan_campaign,
+    solve,
+)
+
+# (fail_at, solver opts): gmres counts restart cycles, not iterations
+SOLVER_CASES = {
+    "pcg": (10, {}),
+    "jacobi": (10, {}),
+    "chebyshev": (10, {}),
+    "bicgstab": (10, {}),
+    "gmres": (3, {"m": 4}),
+}
+assert set(SOLVER_CASES) == set(SOLVERS)
+
+ERASURE = "erasure(nvm-prd x4+p)"
+
+
+def _problem(nblocks=4):
+    op, b = make_poisson_problem(8, 8, 8, nblocks=nblocks)
+    return op, b, JacobiPreconditioner(op)
+
+
+def _state_fields_close(got, want, rtol=1e-9, atol=1e-9):
+    for field in got._fields:
+        a, c = getattr(got, field), getattr(want, field)
+        if hasattr(a, "shape"):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                       rtol=rtol, atol=atol, err_msg=field)
+
+
+# ------------------------------------------------------------ the stripe
+def _synthetic_events(schema, n, history):
+    """Deterministic per-solver payload stream for the bit-exactness
+    sweeps (seeded by the schema so solvers differ)."""
+    rng = np.random.default_rng(abs(hash(schema.solver)) % 2**32)
+    events = []
+    for k in range(history):
+        scalars = {s: float(rng.standard_normal()) for s in schema.scalars}
+        vectors = {v: rng.standard_normal(n) for v in schema.vectors}
+        events.append((k, scalars, vectors))
+    return events
+
+
+@pytest.mark.parametrize("solver_name", sorted(SOLVERS))
+def test_degraded_fetch_bit_exact_sweep(solver_name):
+    """The satellite sweep: for every solver schema, a fetch served in
+    degraded mode (one data child lost, chunk rebuilt from parity) is
+    BIT-identical to the healthy fetch — np.array_equal, not allclose."""
+    op, _, pre = _problem()
+    solver = make_solver(solver_name, op, pre, **SOLVER_CASES[solver_name][1])
+    schema = solver.schema
+    failed, n, bs = (1, 3), op.n, op.partition.block_size
+
+    def run(kill_child):
+        be = make_backend(ERASURE, op, solver=solver)
+        session = be.open_session(schema)
+        for k, scalars, vectors in _synthetic_events(schema, n, schema.history):
+            session.persist(k, scalars, vectors)
+        if kill_child is not None:
+            session._children[kill_child].fail_storage()
+        return session.fetch(failed, tuple(range(schema.history)))
+
+    healthy = run(None)
+    for kill in (0, 2, -1):                   # two data children + parity
+        degraded = run(kill)
+        for h, d in zip(healthy, degraded):
+            assert d.k == h.k
+            assert d.scalars == h.scalars
+            for name in schema.vectors:
+                assert np.array_equal(d.vectors[name], h.vectors[name]), \
+                    (solver_name, kill, name)
+    # and the healthy fetch itself matches the persisted shards exactly
+    for (k, scalars, vectors), got in zip(
+            _synthetic_events(schema, n, schema.history), healthy):
+        typed = typed_vectors(schema, vectors, np.float64)
+        for name in schema.vectors:
+            want = np.concatenate(
+                [shard_vectors(schema, typed, b, bs)[name] for b in failed])
+            assert np.array_equal(got.vectors[name], want)
+
+
+def test_two_lost_children_raise_with_diagnosis():
+    op, _, _ = _problem()
+    be = make_backend(ERASURE, op)
+    session = be.open_session(PCG_SCHEMA)
+    session.persist(0, {"beta": 0.0}, {"p": np.zeros(op.n)})
+    session.persist(1, {"beta": 0.5}, {"p": np.ones(op.n)})
+    session.fail_storage()                       # data child 0
+    session.fetch((2,), (0, 1))                  # degraded: still served
+    session.fail_storage()                       # data child 1: distance 2
+    with pytest.raises(UnrecoverableFailure, match="lost 2 of 5"):
+        session.fetch((2,), (0, 1))
+    assert session.durable_run() is None
+
+
+def test_degraded_writes_stay_reconstructible():
+    """RAID degraded mode: events persisted AFTER a data child is lost
+    are still exact — parity is computed from the full payload, so the
+    dead child's chunk of new events is reconstructible too."""
+    op, _, _ = _problem()
+    be = make_backend(ERASURE, op)
+    session = be.open_session(PCG_SCHEMA)
+    session.persist(0, {"beta": 0.0}, {"p": np.zeros(op.n)})
+    session.fail_storage()                       # data child 0 dies ...
+    rng = np.random.default_rng(7)
+    p1 = rng.standard_normal(op.n)
+    session.persist(1, {"beta": 0.5}, {"p": p1})  # ... then k=1 lands
+    sets = session.fetch((0, 2), (0, 1))
+    bs = op.partition.block_size
+    want = np.concatenate([p1[:bs], p1[2 * bs:3 * bs]])
+    assert np.array_equal(sets[1].vectors["p"], want)
+    assert session.durable_run() == 1
+
+
+def test_erasure_footprint_beats_mirroring():
+    """The paper's footprint argument at the redundancy layer: the 4+p
+    stripe stores ~1.25x a single backend's values — strictly below the
+    2x mirror — while declaring the same single-PRD-loss survival."""
+    op, _, _ = _problem()
+    single = make_backend("nvm-prd", op)
+    stripe = make_backend(ERASURE, op)
+    mirror = make_backend("replicated(nvm-prd x2)", op)
+    ratio = stripe.nvm_values() / single.nvm_values()
+    assert ratio == pytest.approx(1.25)          # 128 % 4 == 0: no padding
+    assert ratio < mirror.nvm_values() / single.nvm_values() == 2.0
+    assert stripe.memory_overhead_values() == 0  # still zero RAM redundancy
+
+
+def test_erasure_validation():
+    op, _, _ = _problem()
+    with pytest.raises(ValueError, match=">= 2 data children"):
+        make_backend("erasure", op, data=("nvm-prd",))
+    pcg = create_backend("nvm-prd", 4, 32, np.float64, schema=PCG_SCHEMA)
+    from repro.solvers.bicgstab import BICGSTAB_SCHEMA
+
+    bicg = create_backend("nvm-prd", 4, 32, np.float64,
+                          schema=BICGSTAB_SCHEMA)
+    pcg2 = create_backend("nvm-prd", 4, 32, np.float64, schema=PCG_SCHEMA)
+    with pytest.raises(ValueError, match="same schema"):
+        ErasureCodedBackend([pcg, bicg], pcg2, block_size=64)
+    pcg3 = create_backend("nvm-prd", 4, 32, np.float64, schema=PCG_SCHEMA)
+    with pytest.raises(ValueError, match="chunk"):
+        ErasureCodedBackend([pcg, pcg2], pcg3, block_size=128)  # 128/2 != 32
+    # an aliased child silently drops its second write — refused up front
+    with pytest.raises(ValueError, match="distinct backend instances"):
+        ErasureCodedBackend([pcg, pcg2], pcg, block_size=64)
+    with pytest.raises(ValueError, match="distinct backend instances"):
+        ErasureCodedBackend([pcg, pcg], pcg3, block_size=64)
+    # the factory default parity spec would alias pre-built data children
+    from repro.nvm.backend import _erasure_factory
+
+    with pytest.raises(ValueError, match="distinct backend instances"):
+        _erasure_factory(4, 64, np.float64, data=(pcg, pcg2))
+
+
+# ------------------------------------- acceptance: the PRD-loss campaign
+_REF_CACHE = {}
+
+
+def _reference(solver_name):
+    if solver_name not in _REF_CACHE:
+        op, b, pre = _problem()
+        fail_at, opts = SOLVER_CASES[solver_name]
+        solver = make_solver(solver_name, op, pre, **opts)
+        _, rep, cap = solve(solver, op, b, pre,
+                            SolveConfig(tol=1e-10, maxiter=5000),
+                            capture_states_at=[fail_at - 1, fail_at])
+        assert rep.converged
+        _REF_CACHE[solver_name] = cap
+    return _REF_CACHE[solver_name]
+
+
+@pytest.mark.parametrize("persist_mode", ["sync", "overlap"])
+@pytest.mark.parametrize("solver_name", sorted(SOLVERS))
+def test_erasure_survives_prd_kill_exactly(solver_name, persist_mode):
+    """The acceptance criterion: a campaign event that crashes a stripe
+    node AND two compute blocks is recovered to machine precision by
+    the 4+p stripe, for every zoo solver, in both persist modes — with
+    the campaign planner accepting the campaign up front."""
+    op, b, pre = _problem()
+    fail_at, opts = SOLVER_CASES[solver_name]
+    ref_cap = _reference(solver_name)
+
+    solver = make_solver(solver_name, op, pre, **opts)
+    backend = make_backend(ERASURE, op, solver=solver)
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1, 2), at_iteration=fail_at, prd=True),))
+    plan = plan_campaign(campaign, backend.capabilities)
+    assert plan.recoveries[0].blocks == (1, 2)
+    assert plan.storage_losses == 1
+
+    state, rep, cap = solve(
+        solver, op, b, pre,
+        SolveConfig(tol=1e-10, maxiter=5000, persist_mode=persist_mode),
+        backend=backend, failures=campaign,
+        capture_states_at=[fail_at - 1, fail_at])
+
+    assert rep.failures_recovered == 1
+    assert rep.storage_failures == 1
+    assert rep.converged
+    assert rep.wasted_iterations == (1 if persist_mode == "overlap" else 0)
+    k_rec = fail_at - rep.wasted_iterations
+    _state_fields_close(cap[k_rec], ref_cap[k_rec])
+    res = float(np.linalg.norm(np.asarray(b - op.apply(state.x)))
+                / np.linalg.norm(np.asarray(b)))
+    assert res < 1e-9
+
+
+def test_stripe_node_dies_during_inflight_recovery():
+    """Overlapping campaign over the stripe: a data node dies while the
+    recovery of an earlier block failure is in flight — the refetch is
+    served degraded, from parity."""
+    op, b, pre = _problem()
+    solver = make_solver("pcg", op, pre)
+    backend = make_backend(ERASURE, op, solver=solver)
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1, 2), at_iteration=8),
+        FailureEvent(blocks=(), during_recovery_at=8, prd=True),
+    ))
+    state, rep, _ = solve(solver, op, b, pre,
+                          SolveConfig(tol=1e-10, persist_mode="overlap"),
+                          backend=backend, failures=campaign)
+    assert rep.converged
+    assert rep.recovery_restarts == 1
+    assert rep.storage_failures == 1
+    res = float(np.linalg.norm(np.asarray(b - op.apply(state.x)))
+                / np.linalg.norm(np.asarray(b)))
+    assert res < 1e-9
+
+
+# ----------------------------------------------------- campaign planning
+def test_planner_rejects_double_prd_loss_on_stripe_accepts_on_x3():
+    """The ISSUE's decision pair: two PRD losses feeding a recovery are
+    beyond the stripe's distance-2 parity (rejected up front, naming
+    the violating event) but inside a triple mirror's budget."""
+    op, b, pre = _problem()
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1,), at_iteration=8, prd=True),
+        FailureEvent(blocks=(2,), at_iteration=12, prd=True),
+    ))
+
+    solver = make_solver("pcg", op, pre)
+    stripe = make_backend(ERASURE, op, solver=solver)
+    with pytest.raises(UnsurvivableCampaignError,
+                       match=r"iteration 12 .* 2 persistence-service"):
+        solve(solver, op, b, pre, SolveConfig(tol=1e-10),
+              backend=stripe, failures=campaign)
+    # the error names the violating event precisely
+    with pytest.raises(UnsurvivableCampaignError, match="at_iteration=12"):
+        plan_campaign(campaign, stripe.capabilities)
+
+    mirror3 = make_backend("replicated(nvm-prd x3)", op, solver=solver)
+    plan = plan_campaign(campaign, mirror3.capabilities)
+    assert [r.storage_losses for r in plan.recoveries] == [1, 2]
+    state, rep, _ = solve(solver, op, b, pre, SolveConfig(tol=1e-10),
+                          backend=mirror3, failures=campaign)
+    assert rep.converged and rep.storage_failures == 2
+
+
+def test_planner_budgets_overlapping_prd_losses():
+    """A during-recovery PRD loss counts against the refetch it forces:
+    one at-event loss + one overlapping loss = 2 by the final fetch."""
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1,), at_iteration=8, prd=True),
+        FailureEvent(blocks=(2,), during_recovery_at=8, prd=True),
+    ))
+    stripe_caps = BackendCapabilities(
+        "nvm", True, True, overlap="native", max_storage_failures=1)
+    with pytest.raises(UnsurvivableCampaignError, match="during_recovery_at=8"):
+        plan_campaign(campaign, stripe_caps)
+    x3_caps = BackendCapabilities(
+        "nvm", True, True, overlap="native", max_storage_failures=2)
+    plan = plan_campaign(campaign, x3_caps)
+    assert plan.recoveries[0].blocks == (1, 2)
+    assert plan.recoveries[0].restarts == 1
+    assert plan.recoveries[0].storage_losses == 2
+
+
+def test_planner_rejects_block_union_beyond_copies():
+    """Peer-RAM ESR with c copies cannot fetch a (c+1)-block union; the
+    planner proves it from max_block_failures before iteration 0."""
+    op, b, pre = _problem()
+    solver = make_solver("pcg", op, pre)
+    backend = make_backend("esr", op, solver=solver, copies=1)
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1,), at_iteration=6),
+        FailureEvent(blocks=(3,), during_recovery_at=6),  # union {1, 3}
+    ))
+    with pytest.raises(UnsurvivableCampaignError,
+                       match=r"union \(1, 3\).*max_block_failures=1"):
+        solve(solver, op, b, pre, SolveConfig(tol=1e-10),
+              backend=backend, failures=campaign)
+    # two copies cover the same union
+    plan = plan_campaign(campaign,
+                         make_backend("esr", op, solver=solver,
+                                      copies=2).capabilities)
+    assert plan.recoveries[0].blocks == (1, 3)
+
+
+def test_planner_accepts_latent_storage_loss():
+    """A PRD loss with no later fetch is survivable (the solve just runs
+    unprotected from there) — the planner must NOT reject it."""
+    caps = BackendCapabilities("nvm", True, False, overlap="native")
+    plan = plan_campaign(
+        FailureCampaign((FailureEvent(blocks=(), at_iteration=5,
+                                      prd=True),)), caps)
+    assert plan.recoveries == () and plan.storage_losses == 1
+    # ... but the same loss followed by any recovery is provably fatal
+    with pytest.raises(UnsurvivableCampaignError, match="at_iteration=5"):
+        plan_campaign(FailureCampaign((
+            FailureEvent(blocks=(), at_iteration=5, prd=True),
+            FailureEvent(blocks=(1,), at_iteration=9),
+        )), caps)
+
+
+def test_planner_accepts_plain_sequences():
+    from repro.solvers import FailurePlan
+
+    caps = BackendCapabilities("nvm", True, False, overlap="native")
+    plan = plan_campaign([FailurePlan(4, (0, 2))], caps)
+    assert plan.recoveries[0].blocks == (0, 2)
+
+
+def test_plan_campaign_disabled_runs_runtime_path():
+    """plan_campaign=False runs the same campaign unplanned: the failure
+    surfaces at the recovery fetch as a runtime UnrecoverableFailure
+    (and NOT as the planner's subclass)."""
+    op, b, pre = _problem()
+    solver = make_solver("pcg", op, pre)
+    backend = make_backend("nvm-prd", op, solver=solver)
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1,), at_iteration=8, prd=True),))
+    with pytest.raises(UnrecoverableFailure) as exc:
+        solve(solver, op, b, pre,
+              SolveConfig(tol=1e-10, plan_campaign=False),
+              backend=backend, failures=campaign)
+    assert not isinstance(exc.value, UnsurvivableCampaignError)
+
+
+def test_api_facade_plans_campaigns():
+    from repro import api
+
+    problem = api.Problem.poisson(8, nblocks=4)
+    failures = [api.FailureEvent(blocks=(1,), at_iteration=8, prd=True)]
+    with pytest.raises(api.UnsurvivableCampaignError):
+        api.solve(problem, "pcg", "nvm-prd", failures=failures)
+    # the stripe spec string works end to end through the façade
+    result = api.solve(problem, "pcg",
+                       api.ResilienceSpec(ERASURE, persist_mode="overlap"),
+                       failures=failures)
+    assert result.converged and result.report.storage_failures == 1
+    assert result.capabilities.max_storage_failures == 1
+
+
+# ---------------------------------------- durable_run rollback agreement
+class _LyingPRD(NVMESRPRD):
+    """A backend whose slots claim a different durable run than the
+    driver's snapshot — the cross-check must refuse to reconstruct."""
+
+    def durable_run(self):
+        run = NVMESRPRD.durable_run(self)
+        return None if run is None else run + 1
+
+
+def test_durable_run_crosscheck_catches_disagreement():
+    op, b, pre = _problem()
+    solver = make_solver("pcg", op, pre)
+    backend = _LyingPRD(op.nblocks, op.partition.block_size, np.float64,
+                        schema=solver.schema)
+    with pytest.raises(RuntimeError, match="rollback-point disagreement"):
+        solve(solver, op, b, pre, SolveConfig(tol=1e-10),
+              backend=backend,
+              failures=FailureCampaign((
+                  FailureEvent(blocks=(1,), at_iteration=8),)))
+
+
+def test_durable_run_crosscheck_passes_on_honest_backends(monkeypatch):
+    """The cross-check is exercised (not skipped) on every recovery of
+    an honest backend: durable_run answers, and equals the snapshot —
+    here across a mid-burst ESRP rollback over the stripe."""
+    from repro.nvm.backend import ErasureSession
+
+    answered = []
+    orig = ErasureSession.durable_run
+
+    def spy(self):
+        run = orig(self)
+        answered.append(run)
+        return run
+
+    monkeypatch.setattr(ErasureSession, "durable_run", spy)
+    op, b, pre = _problem()
+    solver = make_solver("pcg", op, pre)
+    backend = make_backend(ERASURE, op, solver=solver)
+    state, rep, _ = solve(solver, op, b, pre,
+                          SolveConfig(tol=1e-10, persistence_period=5,
+                                      persist_mode="overlap"),
+                          backend=backend,
+                          failures=FailureCampaign((
+                              FailureEvent(blocks=(1, 2), at_iteration=6),)))
+    assert rep.converged and rep.failures_recovered == 1
+    # the mid-burst rollback point (k=1) was cross-checked and agreed
+    assert 1 in answered and None not in answered

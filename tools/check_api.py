@@ -9,8 +9,15 @@ Two invariants the docs CI job enforces on every push:
 2. **Capability completeness** — every backend in the single registry
    (``repro.nvm.backend``) constructs through its factory and declares
    a fully populated :class:`BackendCapabilities` record with sane
-   field types.  A backend that cannot state its guarantees cannot be
-   composed safely.
+   field types — including the storage-failure budget
+   (``max_storage_failures``) the campaign planner consumes, which
+   must cohere with ``survives_prd_loss``.  A backend that cannot
+   state its guarantees cannot be composed safely (or planned against).
+3. **Planner surface** — ``plan_campaign`` / ``UnsurvivableCampaignError``
+   / ``CampaignPlan`` and ``ErasureCodedBackend`` resolve from their
+   public homes, and a smoke plan confirms the planner rejects a
+   two-loss campaign on a distance-2 stripe while accepting it on a
+   triple mirror.
 
 Usage: ``PYTHONPATH=src python tools/check_api.py``
 Exit status is non-zero when anything is broken.  Requires jax+numpy
@@ -83,6 +90,13 @@ def check_backend_capabilities() -> list:
                 isinstance(caps.max_block_failures, int)
                 and caps.max_block_failures >= 1):
             problems.append("max_block_failures must be None or int >= 1")
+        if not (isinstance(caps.max_storage_failures, int)
+                and caps.max_storage_failures >= 0):
+            problems.append("max_storage_failures must be an int >= 0")
+        elif caps.survives_prd_loss != (caps.max_storage_failures > 0):
+            problems.append(
+                f"survives_prd_loss={caps.survives_prd_loss} incoherent "
+                f"with max_storage_failures={caps.max_storage_failures}")
         if problems:
             errors.append(f"backend {name!r}: incomplete capabilities: "
                           + "; ".join(problems))
@@ -91,8 +105,56 @@ def check_backend_capabilities() -> list:
     return errors
 
 
+def check_planner_surface() -> list:
+    """The ISSUE 4 exports resolve, and the planner's decision table
+    holds on its canonical pair: two PRD losses feeding a recovery are
+    rejected on a distance-2 stripe, accepted on a triple mirror."""
+    errors = []
+    try:
+        from repro.nvm.backend import ErasureCodedBackend  # noqa: F401
+        from repro.nvm import ErasureCodedBackend as _nvm_export  # noqa: F401
+        from repro.solvers import (
+            CampaignPlan,
+            FailureCampaign,
+            FailureEvent,
+            UnsurvivableCampaignError,
+            plan_campaign,
+        )
+    except Exception:
+        return [f"planner/erasure exports missing:\n{traceback.format_exc()}"]
+
+    from repro.nvm.backend import BackendCapabilities
+
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1,), at_iteration=4, prd=True),
+        FailureEvent(blocks=(2,), at_iteration=8, prd=True),
+    ))
+    stripe = BackendCapabilities("nvm", True, True, overlap="native",
+                                 max_storage_failures=1)
+    mirror3 = BackendCapabilities("nvm", True, True, overlap="native",
+                                  max_storage_failures=2)
+    try:
+        plan_campaign(campaign, stripe)
+        errors.append("plan_campaign accepted a 2-loss campaign on a "
+                      "distance-2 stripe")
+    except UnsurvivableCampaignError as e:
+        if "at_iteration=8" not in str(e):
+            errors.append(f"planner rejection does not name the violating "
+                          f"event: {e}")
+    try:
+        plan = plan_campaign(campaign, mirror3)
+        if not isinstance(plan, CampaignPlan) or plan.storage_losses != 2:
+            errors.append(f"unexpected plan on the triple mirror: {plan}")
+    except Exception as e:  # noqa: BLE001
+        errors.append(f"plan_campaign rejected a survivable campaign: {e!r}")
+    if not errors:
+        print("planner surface: plan_campaign decision pair holds")
+    return errors
+
+
 def main() -> int:
-    errors = check_api_surface() + check_backend_capabilities()
+    errors = (check_api_surface() + check_backend_capabilities()
+              + check_planner_surface())
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     return 1 if errors else 0

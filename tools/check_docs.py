@@ -11,6 +11,12 @@ without jax installed.  Two classes of rot it catches:
 2. **Link rot** — every relative markdown link / image target must exist
    in the repository (``[text](path)``; external ``http(s)://`` and
    ``#anchor`` links are skipped).
+3. **Matrix rot** (freshness, ISSUE 4) — every backend *spec family*
+   registered in the source tree (``register_backend("name", ...)`` /
+   ``register_backend_class("name", ...)``) must appear in the README's
+   backend matrix, so a new backend cannot land undocumented.  Found by
+   scanning ``src/`` textually — no runtime import needed.  Runs
+   whenever a README is among the checked files.
 
 Usage: ``python tools/check_docs.py README.md DESIGN.md docs/*.md``
 Exit status is non-zero when anything is broken.
@@ -23,6 +29,8 @@ from pathlib import Path
 
 FENCE_RE = re.compile(r"^```(\w*)\s*$")
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+REGISTER_RE = re.compile(
+    r"""register_backend(?:_class)?\(\s*["']([\w.-]+)["']""")
 
 
 def python_blocks(text: str):
@@ -48,6 +56,33 @@ def relative_links(text: str):
         if target.startswith(("http://", "https://", "mailto:", "#")):
             continue
         yield target.split("#")[0]
+
+
+def registered_backend_families(src_root: Path) -> set:
+    """Backend spec families registered anywhere under ``src/`` — the
+    textual counterpart of ``repro.nvm.backend.backend_names()``."""
+    names = set()
+    for py in sorted(src_root.rglob("*.py")):
+        names.update(REGISTER_RE.findall(py.read_text()))
+    return names
+
+
+def check_backend_matrix(readme: Path, repo_root: Path) -> list:
+    """Freshness gate: every registered backend family must be named in
+    the README (as `` `name` `` or `` `name(...)` `` in the matrix)."""
+    families = registered_backend_families(repo_root / "src")
+    if not families:
+        return [f"{readme}: no registered backend families found under "
+                f"{repo_root / 'src'} — is the tree intact?"]
+    text = readme.read_text()
+    missing = [name for name in sorted(families)
+               if not re.search(rf"`{re.escape(name)}[`(]", text)]
+    print(f"{readme}: backend matrix covers "
+          f"{len(families) - len(missing)}/{len(families)} registered "
+          f"spec families")
+    return [f"{readme}: registered backend family {name!r} is missing "
+            f"from the README backend matrix — document it (see the "
+            f"'Solver / backend matrix' section)" for name in missing]
 
 
 def check_file(path: Path, repo_root: Path) -> list:
@@ -85,6 +120,8 @@ def main(argv) -> int:
             errors.append(f"{name}: file not found")
             continue
         errors.extend(check_file(p, repo_root))
+        if p.name == "README.md":
+            errors.extend(check_backend_matrix(p, repo_root))
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     return 1 if errors else 0
