@@ -21,15 +21,17 @@ Two views the paper-era benchmarks don't cover:
    campaign whose event crashes one PRD node *itself* alongside two
    compute blocks (recovered from the surviving mirror).
 
-4. **Erasure-coded stripe** (ISSUE 4) — ``erasure(nvm-prd x4+p)`` vs
-   the single PRD node and the 2x mirror: the *storage* overhead of
-   XOR parity ((K+1)/K = 1.25x, strictly below the mirror's 2.0x — the
-   footprint-vs-resilience trade-off of the paper applied to the
-   redundancy layer), its persist-cost overhead in both pipelines, and
-   the same PRD-node-loss campaign recovered in degraded mode from
-   parity.  A planner row records that the campaign the stripe cannot
-   survive (two PRD losses feeding a recovery) is rejected before
-   iteration 0.
+4. **Erasure-coded stripes** (ISSUE 4/5) — the erasure section is
+   parameterized over ``(K, P)``: ``erasure(nvm-prd x4+p)`` (XOR,
+   distance 2) and ``erasure(nvm-prd x6+2p)`` (GF(256) Reed-Solomon
+   P+Q, distance 3) vs the single PRD node and the mirrors.  Reported
+   per stripe: the *storage* overhead ((K+P)/K, strictly below the
+   (P+1)x mirror buying the same loss budget), persist-cost overhead in
+   both pipelines, the rotating-parity write spread (max-min parity
+   writes per child; rotation keeps it <= 1), a campaign killing P
+   storage children recovered in degraded mode, and a planner row
+   recording that the campaign the stripe cannot survive (P+1 storage
+   losses feeding a recovery) is rejected before iteration 0.
 
 Smoke mode (``REPRO_BENCH_SMOKE=1`` or ``run.py --smoke``) shrinks the
 grid so the sweep doubles as a CI dry run (including the composite
@@ -38,6 +40,8 @@ backend path).
 from __future__ import annotations
 
 import os
+
+import numpy as np
 
 from repro.core import JacobiPreconditioner, make_poisson_problem
 from repro.solvers import (
@@ -148,67 +152,121 @@ def rows():
                 f"PRD node + 2 blocks crashed; storage_failures="
                 f"{rep.storage_failures} converged={rep.converged}"))
 
-    # ---- erasure stripe: footprint + cost vs the mirror (ISSUE 4) ----
-    er_name = "erasure(nvm-prd x4+p)"
-    solver = make_solver("pcg", op, pre)
-    single_be = make_backend("nvm-prd", op, solver=solver)
-    repl_be = make_backend(repl_name, op, solver=solver)
-    er_be = make_backend(er_name, op, solver=solver)
-    out.append(("erasure_x4p_storage_overhead",
-                er_be.nvm_values() / single_be.nvm_values(),
-                f"stripe values / single-PRD values; mirror pays "
-                f"{repl_be.nvm_values() / single_be.nvm_values():.2f}x for "
-                f"the same single-PRD-loss guarantee"))
-    er_reps = {}
-    for mode in ("sync", "overlap"):
-        reps = {}
-        for bname in ("nvm-prd", er_name):
-            solver = make_solver("pcg", op, pre)
-            be = make_backend(bname, op, solver=solver)
-            _, rep, _ = solve(solver, op, b, pre,
-                              SolveConfig(tol=tol, maxiter=20000,
-                                          persist_mode=mode),
-                              backend=be)
-            reps[bname] = rep
-        er_reps[mode] = reps[er_name]
-        out.append((f"erasure_x4p_{mode}_persist_overhead",
-                    reps[er_name].persist_cost_s
-                    / max(reps["nvm-prd"].persist_cost_s, 1e-30),
-                    "striped persist cost / single-PRD cost "
-                    "(K+1 smaller puts)"))
-        out.append((f"erasure_x4p_{mode}_exposed_us_per_event",
-                    reps[er_name].persist_exposed_s * 1e6
-                    / max(reps[er_name].persist_events, 1),
-                    "critical-path cost per event across the stripe"))
-    out.append(("erasure_x4p_hidden_fraction",
-                er_reps["overlap"].persist_hidden_fraction,
-                "share of the striped commit cost still hidden"))
+    # ---- erasure stripes: footprint + cost vs mirrors (ISSUE 4/5),
+    # parameterized over (K data children, P parity children) ----
+    for k_data, nparity in ((4, 1), (6, 2)):
+        suffix = "p" if nparity == 1 else f"{nparity}p"
+        er_name = f"erasure(nvm-prd x{k_data}+{suffix})"
+        tag = f"x{k_data}p" if nparity == 1 else f"x{k_data}p{nparity}"
+        # the mirror buying the same storage-loss budget: P+1 copies
+        mirror_name = f"replicated(nvm-prd x{nparity + 1})"
+        solver = make_solver("pcg", op, pre)
+        single_be = make_backend("nvm-prd", op, solver=solver)
+        mirror_be = make_backend(mirror_name, op, solver=solver)
+        er_be = make_backend(er_name, op, solver=solver)
+        out.append((f"erasure_{tag}_storage_overhead",
+                    er_be.nvm_values() / single_be.nvm_values(),
+                    f"stripe values / single-PRD values; {mirror_name} pays "
+                    f"{mirror_be.nvm_values() / single_be.nvm_values():.2f}x "
+                    f"for the same {nparity}-storage-loss budget"))
+        er_reps = {}
+        for mode in ("sync", "overlap"):
+            reps = {}
+            for bname in ("nvm-prd", er_name):
+                solver = make_solver("pcg", op, pre)
+                be = make_backend(bname, op, solver=solver)
+                _, rep, _ = solve(solver, op, b, pre,
+                                  SolveConfig(tol=tol, maxiter=20000,
+                                              persist_mode=mode),
+                                  backend=be)
+                reps[bname] = rep
+            er_reps[mode] = reps[er_name]
+            out.append((f"erasure_{tag}_{mode}_persist_overhead",
+                        reps[er_name].persist_cost_s
+                        / max(reps["nvm-prd"].persist_cost_s, 1e-30),
+                        "striped persist cost / single-PRD cost "
+                        f"(K+{nparity} smaller puts)"))
+            out.append((f"erasure_{tag}_{mode}_exposed_us_per_event",
+                        reps[er_name].persist_exposed_s * 1e6
+                        / max(reps[er_name].persist_events, 1),
+                        "critical-path cost per event across the stripe"))
+        out.append((f"erasure_{tag}_hidden_fraction",
+                    er_reps["overlap"].persist_hidden_fraction,
+                    "share of the striped commit cost still hidden"))
 
-    solver = make_solver("pcg", op, pre)
-    be = make_backend(er_name, op, solver=solver)
-    _, rep, _ = solve(solver, op, b, pre,
-                      SolveConfig(tol=tol, maxiter=20000,
-                                  persist_mode="overlap"),
-                      backend=be, failures=prd_campaign)
-    out.append(("erasure_x4p_prdloss_recovered", rep.failures_recovered,
-                f"stripe node + 2 blocks crashed; degraded fetch rebuilt "
-                f"the lost chunks from parity; storage_failures="
-                f"{rep.storage_failures} converged={rep.converged}"))
+        # rotating parity: per-child parity-write spread over a probe
+        # session (RAID-5/6 proper — rotation keeps max-min <= 1)
+        solver = make_solver("pcg", op, pre)
+        be = make_backend(er_name, op, solver=solver)
+        session = be.open_session(solver.schema)
+        zeros = {v: np.zeros(op.n) for v in solver.schema.vectors}
+        zscal = {s: 0.0 for s in solver.schema.scalars}
+        for k in range(4 * (k_data + nparity) + 3):
+            session.persist(k, zscal, zeros)
+        out.append((f"erasure_{tag}_parity_write_spread",
+                    max(session.parity_writes) - min(session.parity_writes),
+                    f"max-min parity writes per child over "
+                    f"{4 * (k_data + nparity) + 3} stripes "
+                    f"(counts: {session.parity_writes})"))
 
-    # planner: the campaign the stripe provably cannot survive (two PRD
-    # losses feeding recoveries) is rejected before iteration 0
+        # campaign: P storage children + 2 compute blocks crash; the
+        # stripe recovers in degraded mode from the surviving parity
+        loss_events = tuple(
+            FailureEvent(blocks=(), at_iteration=7 + i, prd=True)
+            for i in range(nparity - 1)) + (
+            FailureEvent(blocks=(1, 2), at_iteration=8, prd=True),)
+        solver = make_solver("pcg", op, pre)
+        be = make_backend(er_name, op, solver=solver)
+        _, rep, _ = solve(solver, op, b, pre,
+                          SolveConfig(tol=tol, maxiter=20000,
+                                      persist_mode="overlap"),
+                          backend=be, failures=FailureCampaign(loss_events))
+        out.append((f"erasure_{tag}_storage_loss_recovered",
+                    rep.failures_recovered,
+                    f"{nparity} stripe node(s) + 2 blocks crashed; degraded "
+                    f"fetch rebuilt the lost chunks from parity; "
+                    f"storage_failures={rep.storage_failures} "
+                    f"converged={rep.converged}"))
+
+        # planner: the campaign the stripe provably cannot survive
+        # (P+1 storage losses feeding recoveries) is rejected before
+        # iteration 0
+        over_budget = FailureCampaign(tuple(
+            FailureEvent(blocks=(1,), at_iteration=6 + 2 * i, prd=True)
+            for i in range(nparity + 1)))
+        solver = make_solver("pcg", op, pre)
+        be = make_backend(er_name, op, solver=solver)
+        try:
+            solve(solver, op, b, pre, SolveConfig(tol=tol, maxiter=20000),
+                  backend=be, failures=over_budget)
+            rejected = 0
+        except UnsurvivableCampaignError:
+            rejected = 1
+        out.append((f"erasure_{tag}_planner_rejects_"
+                    f"{nparity + 1}_prd_losses", rejected,
+                    "plan_campaign refused before iteration 0 "
+                    "(1 = rejected)"))
+
+    # ---- the cheapest-spec advisor (ISSUE 5): for the double-loss
+    # campaign, the K+2p stripe beats the triple mirror on footprint ----
+    from repro.solvers import advise_spec
+
     double_loss = FailureCampaign((
         FailureEvent(blocks=(1,), at_iteration=6, prd=True),
         FailureEvent(blocks=(2,), at_iteration=10, prd=True),
     ))
     solver = make_solver("pcg", op, pre)
-    be = make_backend(er_name, op, solver=solver)
-    try:
-        solve(solver, op, b, pre, SolveConfig(tol=tol, maxiter=20000),
-              backend=be, failures=double_loss)
-        rejected = 0
-    except UnsurvivableCampaignError:
-        rejected = 1
-    out.append(("erasure_x4p_planner_rejects_double_prd_loss", rejected,
-                "plan_campaign refused before iteration 0 (1 = rejected)"))
+    candidates = {
+        name: make_backend(name, op, solver=solver)
+        for name in ("nvm-prd", "replicated(nvm-prd x2)",
+                     "replicated(nvm-prd x3)", "erasure(nvm-prd x4+p)",
+                     "erasure(nvm-prd x6+2p)")
+    }
+    advice = advise_spec(double_loss, candidates, probe_values=op.n)
+    chosen = advice.ranked[0] if advice.ranked else None
+    out.append(("advisor_double_loss_picks_k2p_stripe",
+                int(advice.chosen == "erasure(nvm-prd x6+2p)"),
+                f"chosen={advice.chosen} "
+                f"(storage {chosen.storage_values if chosen else '-'} values "
+                f"vs survivors {[r.spec for r in advice.ranked]})"))
     return out

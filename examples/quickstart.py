@@ -50,6 +50,21 @@ def main() -> None:
     assert result.converged and result.relres < 1e-9
     assert rep.failures_recovered == 1 and rep.storage_failures == 1
 
+    # And instead of picking the spec by hand, ask the advisor: for a
+    # campaign that loses TWO storage nodes, the cheapest survivor is
+    # the Reed-Solomon stripe (1.33x storage), not the 3x triple mirror.
+    from repro.launch.report import spec_advice_table
+
+    double_loss = [
+        api.FailureEvent(blocks=(2,), at_iteration=20, prd=True),
+        api.FailureEvent(blocks=(5,), at_iteration=30, prd=True),
+    ]
+    advice = api.advise(problem, double_loss)
+    print()
+    print("advisor verdict for a double-storage-loss campaign:")
+    print(spec_advice_table(advice))
+    assert advice.chosen == "erasure(nvm-prd x6+2p)"
+
 
 if __name__ == "__main__":
     main()

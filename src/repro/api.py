@@ -42,7 +42,10 @@ from repro.solvers.driver import (
     FailurePlan,
     SolveConfig,
     SolveReport,
+    SpecAdvice,
+    SpecRanking,
     UnsurvivableCampaignError,
+    advise_spec,
     plan_campaign,
 )
 from repro.solvers.registry import SOLVERS, make_backend, make_solver
@@ -53,6 +56,8 @@ __all__ = [
     "ResilienceSpec",
     "SolveResult",
     "solve",
+    "advise",
+    "default_candidate_specs",
     "solver_names",
     "backend_names",
     "BackendCapabilities",
@@ -61,12 +66,59 @@ __all__ = [
     "CampaignPlan",
     "UnsurvivableCampaignError",
     "plan_campaign",
+    "advise_spec",
+    "SpecAdvice",
+    "SpecRanking",
     "FailureCampaign",
     "FailureEvent",
     "FailurePlan",
     "SolveConfig",
     "SolveReport",
 ]
+
+#: the composite spec families — they take arguments, so the default
+#: candidate list names one canonical instantiation of each
+_COMPOSITE_FAMILIES = ("replicated", "tiered", "erasure")
+
+
+def default_candidate_specs() -> Tuple[str, ...]:
+    """The advisor's default candidate list: every non-composite
+    registered backend by name, plus canonical instantiations of each
+    composite family across the footprint/distance trade-off."""
+    base = tuple(n for n in backend_names() if n not in _COMPOSITE_FAMILIES)
+    return base + (
+        "tiered(nvm-prd)",
+        "replicated(nvm-prd x2)",
+        "replicated(nvm-prd x3)",
+        "erasure(nvm-prd x4+p)",
+        "erasure(nvm-prd x6+2p)",
+    )
+
+
+def advise(
+    problem: Problem,
+    campaign,
+    candidates: Optional[Sequence[str]] = None,
+    solver: Union["SolverSpec", str] = "pcg",
+    dtype: Any = np.float64,
+) -> SpecAdvice:
+    """Rank candidate resilience specs against a campaign for this
+    problem: each spec is built (sized for the problem, persisting the
+    solver's schema), filtered through
+    :func:`~repro.solvers.driver.plan_campaign`, and the survivors
+    ranked by storage footprint with modeled persist cost as
+    tie-breaker (:func:`~repro.solvers.driver.advise_spec`).  The
+    returned :class:`~repro.solvers.driver.SpecAdvice` renders as a
+    table via :func:`repro.launch.report.spec_advice_table`."""
+    if isinstance(solver, str):
+        solver = SolverSpec(solver)
+    built_solver = solver.build(problem)
+    if candidates is None:
+        candidates = default_candidate_specs()
+    built = [(spec, make_backend(spec, problem.op, dtype=dtype,
+                                 solver=built_solver))
+             for spec in candidates]
+    return advise_spec(campaign, built, probe_values=problem.op.n)
 
 
 def solver_names() -> list:
@@ -155,6 +207,29 @@ class ResilienceSpec:
             return self.backend
         return make_backend(self.backend, problem.op, dtype=self.dtype,
                             solver=solver, **dict(self.options))
+
+    @classmethod
+    def advise(cls, problem: Problem, campaign,
+               candidates: Optional[Sequence[str]] = None,
+               solver: Union["SolverSpec", str] = "pcg",
+               **spec_kwargs) -> "ResilienceSpec":
+        """The cheapest-spec advisor (DESIGN.md §8): return a
+        :class:`ResilienceSpec` for the cheapest candidate whose
+        declared capabilities carry ``campaign`` — e.g. a
+        double-storage-loss campaign picks ``erasure(nvm-prd x6+2p)``
+        (1.33x storage) over ``replicated(nvm-prd x3)`` (3x) on
+        footprint grounds.  ``spec_kwargs`` (``persist_mode``,
+        ``period``, ...) are forwarded to the spec.  Raises
+        :class:`UnsurvivableCampaignError` when no candidate survives;
+        use :func:`advise` for the full ranking table."""
+        advice = advise(problem, campaign, candidates, solver=solver,
+                        dtype=spec_kwargs.get("dtype", np.float64))
+        if advice.chosen is None:
+            raise UnsurvivableCampaignError(
+                "no candidate spec survives the campaign: "
+                + "; ".join(f"[{r.spec}] {r.reason}"
+                            for r in advice.rejected))
+        return cls(advice.chosen, **spec_kwargs)
 
 
 @dataclasses.dataclass(frozen=True)

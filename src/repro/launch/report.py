@@ -177,6 +177,46 @@ def capability_matrix_table(named_backends,
         "(no backends)")
 
 
+# ----------------------------------------------------------------------
+# Advisor reporting (DESIGN.md §8): the cheapest-spec ranking a
+# `repro.solvers.driver.SpecAdvice` carries, as a readable table.
+# ----------------------------------------------------------------------
+def _advice_row(r, chosen: Optional[str],
+                baseline_values: Optional[int]) -> Dict[str, str]:
+    if r.survivable:
+        verdict = "chosen" if r.spec == chosen else "ok"
+        why = "-"
+    else:
+        verdict = "rejected"
+        # the planner's reason, compacted to the violating fact
+        why = r.reason.replace("campaign rejected before iteration 0: ", "")
+        if len(why) > 88:
+            why = why[:85] + "..."
+    if baseline_values:
+        storage = f"{r.storage_values / baseline_values:.2f}x"
+    else:
+        storage = f"{r.storage_values} values"
+    cost = ("-" if r.persist_cost_s != r.persist_cost_s  # NaN: not probed
+            else f"{r.persist_cost_s * 1e3:.3f}")
+    return {"spec": r.spec, "verdict": verdict, "storage": storage,
+            "persist ms/event": cost, "why not": why}
+
+
+def spec_advice_rows(advice, baseline_values: Optional[int] = None):
+    """One row per candidate: survivors cheapest-first (the chosen spec
+    marked), then the planner-rejected specs with their reason."""
+    return [_advice_row(r, advice.chosen, baseline_values)
+            for r in list(advice.ranked) + list(advice.rejected)]
+
+
+def spec_advice_table(advice, baseline_values: Optional[int] = None) -> str:
+    """Markdown table over a :class:`repro.solvers.driver.SpecAdvice`
+    (``baseline_values`` turns the storage column into overhead
+    factors, like :func:`capability_rows`)."""
+    return _markdown_table(spec_advice_rows(advice, baseline_values),
+                           "(no candidates)")
+
+
 if __name__ == "__main__":
     rows = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl")
     print(table(rows))

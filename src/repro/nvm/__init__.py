@@ -14,9 +14,11 @@ Layers
 - :mod:`repro.nvm.windows` — MPI one-sided-communication windows (PSCW /
   fence / passive-target epochs) with ``*_persist`` variants
 - :mod:`repro.nvm.prd`     — persistent-recovery-data (PRD) sub-cluster node
+- :mod:`repro.nvm.gf256`   — GF(2^8) tables + Reed-Solomon P/Q parity
+  (the byte-exact math under the erasure stripe) — DESIGN.md §8
 - :mod:`repro.nvm.backend` — the formal persistence-backend API
-  (capability protocol, sessions, composite replicated/tiered backends,
-  the single backend registry) — DESIGN.md §7
+  (capability protocol, sessions, composite replicated/tiered/erasure
+  backends, the single backend registry) — DESIGN.md §7/§8
 """
 from repro.nvm.store import (  # noqa: F401
     Tier,
@@ -35,10 +37,12 @@ from repro.nvm.backend import (  # noqa: F401
     PersistenceBackend,
     PersistSession,
     ReplicatedBackend,
+    STRIPE_ROT_SCALAR,
     TieredBackend,
     UnrecoverableFailure,
     backend_names,
     create_backend,
     open_persist_session,
     register_backend,
+    stripe_child_schema,
 )

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import abc
 import collections.abc
+import dataclasses
 import difflib
 import re
 import warnings
@@ -61,6 +62,7 @@ from typing import (
 
 import numpy as np
 
+from repro.nvm import gf256
 from repro.nvm.store import TIER_SPECS, CostModel, PersistStager, Tier
 
 if TYPE_CHECKING:
@@ -748,61 +750,92 @@ class TieredBackend(PersistenceBackend):
 
 
 # ----------------------------------------------------------------------
-# Erasure-coded composition (RAID-4/5-style parity, DESIGN.md §8)
+# Erasure-coded composition (RAID-5/6-style rotating parity, DESIGN.md §8)
 # ----------------------------------------------------------------------
-def _xor_arrays(arrays, dtype) -> np.ndarray:
-    """Bitwise XOR of same-shape arrays, on their raw bytes (parity is a
-    bit-level code: XOR of float payloads is not float arithmetic)."""
-    acc = np.ascontiguousarray(arrays[0]).view(np.uint8).copy()
-    for a in arrays[1:]:
-        acc ^= np.ascontiguousarray(a).view(np.uint8)
-    return acc.view(dtype)
+#: reserved scalar every stripe child persists alongside the solver's
+#: scalars: the stripe's parity-rotation offset, recorded durably so a
+#: degraded fetch can undo the rotation from any surviving child.
+STRIPE_ROT_SCALAR = "_stripe_rot"
+
+
+def stripe_child_schema(schema):
+    """The schema stripe children are bound to: the solver's schema plus
+    the reserved :data:`STRIPE_ROT_SCALAR` rotation scalar (appended
+    last, so the wire layout of the solver's own fields is unchanged).
+    Idempotent — a schema already carrying the scalar passes through."""
+    scalars = tuple(schema.scalars)
+    if scalars and scalars[-1] == STRIPE_ROT_SCALAR:
+        return schema
+    if STRIPE_ROT_SCALAR in scalars:
+        raise ValueError(
+            f"schema {schema.solver!r} already uses the reserved scalar "
+            f"{STRIPE_ROT_SCALAR!r} in a non-final position")
+    return dataclasses.replace(schema, scalars=scalars + (STRIPE_ROT_SCALAR,))
 
 
 class ErasureSession(PersistSession):
-    """Stripe every event across K data children + 1 parity child.
+    """Stripe every event across K data shards + P parity shards
+    (P ∈ {1, 2}) spread over K+P children with **rotating placement**.
 
     Write path: each slot vector is split block-wise into K equal chunks
-    (zero-padded when K does not divide the block size); data child ``j``
-    persists chunk ``j`` of every block, the parity child persists the
-    bytewise XOR of all K chunks.  Chunks and parity are computed from
-    the same staged payload and handed to the children in one lockstep
-    ``begin`` (and committed in one lockstep ``commit``), so a failure
-    between driver calls can never leave a stripe whose parity
-    disagrees with its data: either the whole stripe's staged events
-    are aborted together, or the whole stripe committed.  Scalars are
-    tiny and replicated to every child unchanged.
+    (zero-padded when K does not divide the block size); the P parity
+    shards are Reed-Solomon combinations of the K chunks computed on
+    the *stored bytes* (:mod:`repro.nvm.gf256`; P=1 degenerates to the
+    old XOR parity).  Shard-to-child placement rotates per stripe
+    (RAID-5/6 proper): for stripe sequence number ``s`` the rotation
+    offset ``r = (P·s) mod (K+P)`` maps logical shard ``j`` onto
+    physical child ``(j + r) mod (K+P)``, so parity writes round-robin
+    and no child is a write hot-spot.  ``r`` is recorded durably in
+    every child's slot (the :data:`STRIPE_ROT_SCALAR` scalar of the
+    stripe schema) — it is stripe *metadata*, not re-derived at read
+    time.  Chunks and parity are computed from the same staged payload
+    and handed to the children in one lockstep ``begin`` (committed in
+    one lockstep ``commit``), so a failure between driver calls can
+    never leave a stripe whose parity disagrees with its data.  The
+    solver's scalars are tiny and ride replicated in every child.
 
-    Read path: with all children live, the stripe is reassembled from
-    the K data chunks (the parity is not read).  With exactly one child
-    lost — data or parity — ``fetch`` runs in **degraded mode**: a lost
-    data child's chunk is reconstructed as the XOR of the parity and
-    the K-1 surviving chunks; a lost parity child costs nothing.  Two
+    Read path: ``fetch`` reads every live child, recovers the recorded
+    rotation from any surviving slot, un-rotates the shards, and — in
+    **degraded mode**, with up to P children lost — reconstructs the
+    missing data chunks through the surviving parity
+    (:func:`repro.nvm.gf256.rs_reconstruct`), bit-exactly.  More than P
     lost children exceed the code's distance and raise
     :class:`UnrecoverableFailure` with a per-child diagnosis.
 
-    Degraded *writes* keep working too: parity is computed from the
+    Degraded *writes* keep working too: shards are computed from the
     full payload the session holds, so events persisted after a child
-    loss remain exactly reconstructible.
+    loss remain exactly reconstructible while losses stay within P.
     """
 
     def __init__(self, backend: "ErasureCodedBackend", schema, partition):
         super().__init__(schema)
         self._backend = backend
-        # children[:-1] are the K data nodes, children[-1] the parity node
-        self._children = [open_persist_session(c, schema, None)
+        self._children = [open_persist_session(c, backend.child_schema, None)
                           for c in backend.children]
+        self._stripe_seq = 0
+        #: per-child count of parity-shard writes (the hot-spot metric:
+        #: rotation keeps max-min <= 1 over any write sequence)
+        self.parity_writes = [0] * len(self._children)
 
     # -- stripe geometry ------------------------------------------------
-    def _shards(self, vectors) -> List[Dict[str, np.ndarray]]:
-        """Split full vectors into K per-child chunk vectors + parity.
+    def _rotation(self) -> int:
+        """Allocate the next stripe's rotation offset.  Stepping by P
+        (not 1) tiles the parity role over the children so per-child
+        parity-write counts never differ by more than one stripe, even
+        mid-cycle and for odd K+P."""
+        be = self._backend
+        r = (be.nparity * self._stripe_seq) % len(self._children)
+        self._stripe_seq += 1
+        return r
 
-        Chunking happens on the *stored* dtype so the parity covers
-        exactly the bits the data children persist.
-        """
+    def _shards(self, vectors) -> List[Dict[str, np.ndarray]]:
+        """Split full vectors into K logical chunk vectors + P parity
+        shards.  Chunking happens on the *stored* dtype so the parity
+        covers exactly the bits the data children persist."""
         be = self._backend
         k_data, nb, bs, chunk = be.k_data, be.nblocks, be.block_size, be.chunk
-        out: List[Dict[str, np.ndarray]] = [dict() for _ in range(k_data + 1)]
+        nshards = k_data + be.nparity
+        out: List[Dict[str, np.ndarray]] = [dict() for _ in range(nshards)]
         for name in self.schema.vectors:
             v = np.asarray(vectors[name], be.dtype).reshape(nb, bs)
             padded = np.zeros((nb, k_data * chunk), be.dtype)
@@ -810,9 +843,12 @@ class ErasureSession(PersistSession):
             chunks = [np.ascontiguousarray(padded[:, j * chunk:(j + 1) * chunk]
                                            ).reshape(-1)
                       for j in range(k_data)]
+            parity = gf256.rs_encode([c.view(np.uint8) for c in chunks],
+                                     be.nparity)
             for j in range(k_data):
                 out[j][name] = chunks[j]
-            out[k_data][name] = _xor_arrays(chunks, be.dtype)
+            for i in range(be.nparity):
+                out[k_data + i][name] = parity[i].view(be.dtype)
         return out
 
     def _live(self) -> List[PersistSession]:
@@ -823,9 +859,20 @@ class ErasureSession(PersistSession):
         parity leave the same origin NIC back to back, so the modeled
         origin-visible cost is the sum over children — each carrying
         ~1/K of the payload bytes."""
+        be = self._backend
         shards = self._shards(vectors)
-        return sum(getattr(s, method)(k, scalars, shards[j])
-                   for j, s in enumerate(self._children))
+        rot = self._rotation()
+        scalars = dict(scalars)
+        scalars[STRIPE_ROT_SCALAR] = float(rot)
+        nchildren = len(self._children)
+        cost = 0.0
+        for j in range(nchildren):
+            child = (j + rot) % nchildren
+            if j >= be.k_data:
+                self.parity_writes[child] += 1
+            cost += getattr(self._children[child], method)(
+                k, scalars, shards[j])
+        return cost
 
     # -- pipeline -------------------------------------------------------
     def begin(self, k, scalars, vectors) -> float:
@@ -855,75 +902,88 @@ class ErasureSession(PersistSession):
 
     def fail_storage(self) -> None:
         """One stripe node crashes (ordered, like mirrors: the first
-        storage-loss event takes data child 0, the next data child 1,
-        ..., finally the parity node).  The stripe serves degraded
-        fetches while at most one child is lost."""
+        storage-loss event takes child 0, the next child 1, ...).  The
+        stripe serves degraded fetches while at most P children are
+        lost."""
         for s in self._children:
             if not s._storage_down:
                 s.fail_storage()
                 break
         if len(self._live()) < self._backend.k_data:
-            self._storage_down = True  # > 1 loss: beyond the code distance
+            self._storage_down = True  # > P losses: beyond the code distance
 
     def fetch(self, failed_blocks, ks) -> List[RecoverySet]:
         be = self._backend
-        k_data = be.k_data
+        nchildren = len(self._children)
         per_child: List[Optional[List[RecoverySet]]] = []
         errors: List[str] = []
         for j, s in enumerate(self._children):
-            tag = f"data {j}" if j < k_data else "parity"
             if s._storage_down:
                 per_child.append(None)
-                errors.append(f"{tag}: storage lost")
+                errors.append(f"child {j}: storage lost")
                 continue
             try:
                 per_child.append(s.fetch(failed_blocks, ks))
             except (UnrecoverableFailure, RuntimeError) as e:
                 per_child.append(None)
-                errors.append(f"{tag}: {e}")
+                errors.append(f"child {j}: {e}")
         missing = [j for j, r in enumerate(per_child) if r is None]
-        if len(missing) > 1:
+        if len(missing) > be.nparity:
             raise UnrecoverableFailure(
-                f"erasure stripe lost {len(missing)} of {k_data + 1} "
-                f"children — XOR parity reconstructs at most one — for "
-                f"iterations {tuple(ks)} over blocks "
-                f"{tuple(failed_blocks)}: " + "; ".join(errors))
+                f"erasure stripe lost {len(missing)} of {nchildren} "
+                f"children — {be.nparity}-parity Reed-Solomon "
+                f"reconstructs at most {be.nparity} — for iterations "
+                f"{tuple(ks)} over blocks {tuple(failed_blocks)}: "
+                + "; ".join(errors))
         return [self._assemble(per_child, i, kk, tuple(failed_blocks))
                 for i, kk in enumerate(ks)]
 
     def _assemble(self, per_child, i: int, kk: int,
                   failed: Tuple[int, ...]) -> RecoverySet:
-        """Reassemble one iteration's union set from the stripe chunks,
-        reconstructing the (at most one) missing child's chunk from
-        parity."""
+        """Reassemble one iteration's union set from the stripe shards:
+        recover the recorded rotation, un-rotate physical children back
+        to logical shard order, and rebuild up to P missing data chunks
+        through the surviving parity."""
         from repro.core.state import RecoverySet
 
         be = self._backend
         k_data, chunk, bs = be.k_data, be.chunk, be.block_size
+        nchildren = len(self._children)
         nf = len(failed)
         sets = [None if r is None else r[i] for r in per_child]
         donor = next(s for s in sets if s is not None)
         if any(s is not None and s.k != kk for s in sets):
             raise UnrecoverableFailure(
                 f"erasure stripe children disagree on iteration {kk}")
+        # The rotation is stripe metadata, persisted in every child's
+        # slot — read it back rather than re-deriving it, and insist the
+        # survivors agree (a disagreement means mixed stripes).
+        rots = {s.scalars[STRIPE_ROT_SCALAR] for s in sets if s is not None}
+        if len(rots) != 1:
+            raise UnrecoverableFailure(
+                f"erasure stripe children disagree on the parity rotation "
+                f"of iteration {kk}: {sorted(rots)}")
+        rot = int(rots.pop())
+        logical = [sets[(j + rot) % nchildren] for j in range(nchildren)]
         vectors = {}
         for name in self.schema.vectors:
-            chunks = [None if s is None else
-                      np.asarray(s.vectors[name], be.dtype) for s in sets]
-            if chunks[-1] is None:       # parity lost: data is complete
-                data = chunks[:k_data]
-            else:
-                present = [c for c in chunks if c is not None]
-                if len(present) == k_data + 1:
-                    data = chunks[:k_data]
-                else:                    # degraded: rebuild the lost chunk
-                    rebuilt = _xor_arrays(present, be.dtype)
-                    data = [rebuilt if c is None else c
-                            for c in chunks[:k_data]]
-            stacked = np.stack([c.reshape(nf, chunk) for c in data], axis=1)
+            shards = [None if s is None else np.ascontiguousarray(
+                          np.asarray(s.vectors[name], be.dtype)
+                      ).view(np.uint8)
+                      for s in logical]
+            try:
+                data = gf256.rs_reconstruct(shards, k_data)
+            except ValueError as e:
+                raise UnrecoverableFailure(
+                    f"erasure stripe cannot reconstruct iteration {kk}: "
+                    f"{e}") from None
+            data = [d.view(be.dtype) for d in data]
+            stacked = np.stack([d.reshape(nf, chunk) for d in data], axis=1)
             vectors[name] = np.ascontiguousarray(
                 stacked.reshape(nf, k_data * chunk)[:, :bs]).reshape(-1)
-        return RecoverySet(kk, dict(donor.scalars), vectors)
+        scalars = {n: v for n, v in donor.scalars.items()
+                   if n != STRIPE_ROT_SCALAR}
+        return RecoverySet(kk, scalars, vectors)
 
     def durable_run(self) -> Optional[int]:
         if self._storage_down:
@@ -936,29 +996,45 @@ class ErasureSession(PersistSession):
 
 
 class ErasureCodedBackend(PersistenceBackend):
-    """K+1 erasure coding (XOR parity) over K data children + 1 parity.
+    """K+P erasure coding (Reed-Solomon over GF(2^8), P ∈ {1, 2}) with
+    rotating parity placement over K+P children.
 
-    The footprint counterpart of :class:`ReplicatedBackend`: both
-    survive the loss of a whole persistence-service node, but the
-    mirror pays 2x storage while the stripe pays ~(K+1)/K — the paper's
-    memory-footprint argument applied to the redundancy layer itself
-    (cf. Pachajoa et al. on multi-node-failure PCG and EasyCrash on
-    NVM crash consistency).  Spec string: ``"erasure(nvm-prd x4+p)"``
-    = 4 data PRD nodes + 1 parity PRD node.
+    The footprint counterpart of :class:`ReplicatedBackend`: surviving
+    P simultaneous storage-node losses costs a (P+1)x mirror (P+1)x
+    storage, but the stripe only (K+P)/K — the paper's memory-footprint
+    argument applied to the redundancy layer itself (cf. Pachajoa et
+    al. on multi-node-failure PCG and EasyCrash on NVM crash
+    consistency).  Spec strings: ``"erasure(nvm-prd x4+p)"`` (4 data +
+    1 XOR parity, distance 2) and ``"erasure(nvm-prd x6+2p)"`` (6 data
+    + P/Q parity, distance 3, **any two** children may die).
+
+    Children are *roles rotated per stripe* (RAID-5/6), so no child is
+    a dedicated parity node; the ``data_children``/``parity_children``
+    split only sizes the pool.  All children must be bound to the
+    stripe schema (:func:`stripe_child_schema` — the solver's schema
+    plus the rotation-metadata scalar); the registry factory does this
+    automatically.
     """
 
     name = "erasure"
 
     def __init__(self, data_children: Sequence[PersistenceBackend],
-                 parity_child: PersistenceBackend, block_size: int):
+                 parity_children, block_size: int):
+        if isinstance(parity_children, PersistenceBackend):
+            parity_children = [parity_children]
         if len(data_children) < 2:
             raise ValueError(
                 f"erasure coding needs >= 2 data children, got "
                 f"{len(data_children)} — with one data child the parity "
                 f"is a mirror; use replicated(...)")
+        if not 1 <= len(parity_children) <= gf256.MAX_PARITY:
+            raise ValueError(
+                f"erasure coding supports 1 (xK+p) or 2 (xK+2p) parity "
+                f"children, got {len(parity_children)} — for more "
+                f"distance use replicated(...)")
         self.data_children = list(data_children)
-        self.parity_child = parity_child
-        self.children = self.data_children + [self.parity_child]
+        self.parity_children = list(parity_children)
+        self.children = self.data_children + self.parity_children
         if len({id(c) for c in self.children}) != len(self.children):
             # An aliased child is one storage node wearing two stripe
             # hats: its second (e.g. parity) write silently lands on the
@@ -971,12 +1047,12 @@ class ErasureCodedBackend(PersistenceBackend):
         schemas = {getattr(c, "schema", None) for c in self.children}
         if len(schemas) != 1:
             raise ValueError("all stripe children must persist the same schema")
-        self.schema = self.children[0].schema
         nblocks = {c.nblocks for c in self.children}
         if len(nblocks) != 1:
             raise ValueError("all stripe children must cover the same blocks")
         self.nblocks = nblocks.pop()
         self.k_data = len(self.data_children)
+        self.nparity = len(self.parity_children)
         self.block_size = int(block_size)
         self.chunk = -(-self.block_size // self.k_data)  # ceil
         self.dtype = np.dtype(getattr(self.children[0], "dtype", np.float64))
@@ -986,6 +1062,18 @@ class ErasureCodedBackend(PersistenceBackend):
             raise ValueError(
                 f"stripe children must be sized for chunk {self.chunk} "
                 f"(= ceil({self.block_size}/{self.k_data})), got {bad}")
+        self.child_schema = self.children[0].schema
+        child_scalars = tuple(self.child_schema.scalars)
+        if not child_scalars or child_scalars[-1] != STRIPE_ROT_SCALAR:
+            raise ValueError(
+                f"stripe children must persist the stripe schema — the "
+                f"solver's schema plus the trailing {STRIPE_ROT_SCALAR!r} "
+                f"rotation scalar; bind them with "
+                f"schema=stripe_child_schema(schema), or build the stripe "
+                f"through create_backend('erasure(...)') which does so")
+        # what the driver sees: the solver's own schema, rotation hidden
+        self.schema = dataclasses.replace(self.child_schema,
+                                          scalars=child_scalars[:-1])
 
     @property
     def capabilities(self) -> BackendCapabilities:
@@ -994,15 +1082,16 @@ class ErasureCodedBackend(PersistenceBackend):
         return BackendCapabilities(
             durability=_join_tiers(self.children),
             survives_node_loss=all(c.survives_node_loss for c in caps),
-            # the stripe's guarantee: any single child (data or parity)
-            # may be lost and every committed event remains exact
+            # the stripe's guarantee: any P children (whatever role the
+            # current rotation gives them) may be lost and every
+            # committed event remains exact
             survives_prd_loss=True,
             overlap=(OVERLAP_NATIVE
                      if all(c.overlap == OVERLAP_NATIVE for c in caps)
                      else OVERLAP_DRIVER_STAGED),
             max_block_failures=(None if all(m is None for m in maxes)
                                 else min(m for m in maxes if m is not None)),
-            max_storage_failures=1,  # XOR parity: distance 2, exactly one
+            max_storage_failures=self.nparity,  # P+Q: distance P+1
         )
 
     def open_session(self, schema=None, partition=None) -> PersistSession:
@@ -1033,7 +1122,8 @@ class ErasureCodedBackend(PersistenceBackend):
 _REGISTRY: Dict[str, Callable] = {}
 _SPEC_RE = re.compile(r"^(?P<name>[\w.-]+)\s*(?:\((?P<args>[^()]*)\))?$")
 _CHILD_RE = re.compile(r"^(?P<child>[\w.-]+)\s*[x×]\s*(?P<n>\d+)$")
-_STRIPE_RE = re.compile(r"^(?P<child>[\w.-]+)\s*[x×]\s*(?P<n>\d+)\s*\+\s*p$")
+_STRIPE_RE = re.compile(
+    r"^(?P<child>[\w.-]+)\s*[x×]\s*(?P<n>\d+)\s*\+\s*(?P<p>\d+)?p$")
 
 
 def register_backend(name: str, factory: Callable) -> None:
@@ -1091,7 +1181,10 @@ def parse_backend_spec(spec: str) -> Tuple[str, dict]:
         "replicated(nvm-prd x2)"       -> ("replicated", {"children": ("nvm-prd",)*2})
         "replicated(nvm-prd,nvm-homogeneous)"
         "tiered(nvm-homogeneous)"      -> ("tiered", {"child": "nvm-homogeneous"})
-        "erasure(nvm-prd x4+p)"        -> ("erasure", {"data": ("nvm-prd",)*4})
+        "erasure(nvm-prd x4+p)"        -> ("erasure", {"data": ("nvm-prd",)*4,
+                                                       "nparity": 1})
+        "erasure(nvm-prd x6+2p)"       -> ("erasure", {"data": ("nvm-prd",)*6,
+                                                       "nparity": 2})
     """
     m = _SPEC_RE.match(spec.strip())
     if m is None:
@@ -1105,9 +1198,11 @@ def parse_backend_spec(spec: str) -> Tuple[str, dict]:
         if stripe is None:
             raise ValueError(
                 f"malformed erasure spec {spec!r}: expected "
-                f"'erasure(<child> xK+p)' (K data nodes + 1 parity), "
-                f"e.g. 'erasure(nvm-prd x4+p)'")
-        return name, {"data": (stripe.group("child"),) * int(stripe.group("n"))}
+                f"'erasure(<child> xK+Pp)' (K data nodes + P parity, "
+                f"P in {{1, 2}}), e.g. 'erasure(nvm-prd x4+p)' or "
+                f"'erasure(nvm-prd x6+2p)'")
+        return name, {"data": (stripe.group("child"),) * int(stripe.group("n")),
+                      "nparity": int(stripe.group("p") or 1)}
     if name == "replicated":
         xn = _CHILD_RE.match(args)
         if xn is not None:
@@ -1161,25 +1256,39 @@ def _tiered_factory(nblocks, block_size, dtype, child="nvm-homogeneous",
 def _erasure_factory(nblocks, block_size, dtype,
                      data: Sequence = ("nvm-prd",) * 4,
                      parity: Optional[str] = None,
+                     nparity: int = 1,
                      schema=None, **opts) -> ErasureCodedBackend:
     """Build the stripe: children are sized for the chunk (1/K of the
-    block, zero-padded), so the stripe's total footprint is ~(K+1)/K of
-    a single backend's — the measured storage-overhead claim."""
+    block, zero-padded) and bound to the stripe schema (the solver's
+    schema + the rotation scalar), so the stripe's total footprint is
+    ~(K+P)/K of a single backend's — the measured storage-overhead
+    claim."""
     k_data = len(data)
     if k_data < 2:
         raise ValueError(
             f"erasure coding needs >= 2 data children, got {k_data}")
+    if not 1 <= int(nparity) <= gf256.MAX_PARITY:
+        raise ValueError(
+            f"erasure coding supports 1 (xK+p) or 2 (xK+2p) parity "
+            f"children, got nparity={nparity} — for more distance use "
+            f"replicated(...)")
     chunk = -(-int(block_size) // k_data)  # ceil
+    if schema is None:
+        from repro.core.state import PCG_SCHEMA
+
+        schema = PCG_SCHEMA  # the pre-zoo default every factory shares
+    child_schema = stripe_child_schema(schema)
 
     def build(spec):
         if isinstance(spec, PersistenceBackend):
             return spec
         return create_backend(spec, nblocks, chunk, dtype,
-                              schema=schema, **opts)
+                              schema=child_schema, **opts)
 
     children = [build(c) for c in data]
-    parity_child = build(parity if parity is not None else data[0])
-    return ErasureCodedBackend(children, parity_child, block_size)
+    parity_spec = parity if parity is not None else data[0]
+    parity_children = [build(parity_spec) for _ in range(int(nparity))]
+    return ErasureCodedBackend(children, parity_children, block_size)
 
 
 register_backend("replicated", _replicated_factory)

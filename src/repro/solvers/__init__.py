@@ -32,7 +32,10 @@ from repro.solvers.driver import (  # noqa: F401
     PlannedRecovery,
     SolveConfig,
     SolveReport,
+    SpecAdvice,
+    SpecRanking,
     UnsurvivableCampaignError,
+    advise_spec,
     plan_campaign,
     should_persist,
     solve,

@@ -40,11 +40,13 @@ object (``persist_set``/``recover_set``), or — deprecated — a pre-zoo
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.nvm.backend import (
     BackendCapabilities,
@@ -254,6 +256,108 @@ def plan_campaign(campaign, capabilities: BackendCapabilities) -> CampaignPlan:
             at_iteration=ev.at_iteration, blocks=tuple(sorted(union)),
             storage_losses=losses, restarts=restarts))
     return CampaignPlan(tuple(recoveries), losses)
+
+
+# ----------------------------------------------------------------------
+# The cheapest-spec advisor (DESIGN.md §8): plan_campaign as a filter,
+# declared footprint + modeled persist cost as the ranking.
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SpecRanking:
+    """One candidate's evaluation by :func:`advise_spec`.
+
+    - ``spec`` — the candidate's spec string (registry-composable).
+    - ``survivable`` — whether :func:`plan_campaign` accepted the
+      campaign against the candidate's declared capabilities.
+    - ``reason`` — the planner's rejection message ("" when survivable).
+    - ``storage_values`` — declared redundancy footprint in values (RAM
+      overhead + persistent-tier residency), the primary ranking key.
+    - ``persist_cost_s`` — modeled cost of one full persist event
+      through the candidate (the probe write), the tie-breaker; NaN
+      when no probe size was given.
+    """
+
+    spec: str
+    survivable: bool
+    reason: str
+    storage_values: int
+    persist_cost_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecAdvice:
+    """The advisor's verdict: the cheapest survivable spec (``chosen``,
+    None when nothing survives), every survivor cheapest-first
+    (``ranked``), and the rejected candidates with the planner's reason
+    (``rejected``)."""
+
+    chosen: Optional[str]
+    ranked: Tuple[SpecRanking, ...]
+    rejected: Tuple[SpecRanking, ...]
+
+
+def _probe_persist_cost(backend, nvalues: int) -> float:
+    """Modeled per-event cost of persisting one full durable run
+    (``schema.history`` synthetic zero events) through ``backend``.
+    The probe fills slots ``k=0..history-1``, so callers hand the
+    advisor disposable, freshly built candidates — it also settles
+    residency-based footprint accounting (the in-memory backend counts
+    *resident* values, which are zero before anything is persisted)."""
+    schema = backend.schema
+    session = backend.open_session(schema)
+    scalars = {s: 0.0 for s in schema.scalars}
+    vectors = {v: np.zeros(nvalues) for v in schema.vectors}
+    costs = [session.persist(k, scalars, vectors)
+             for k in range(schema.history)]
+    return float(sum(costs) / len(costs))
+
+
+def advise_spec(campaign, candidates,
+                probe_values: Optional[int] = None) -> SpecAdvice:
+    """Pick the cheapest candidate spec whose declared capabilities
+    carry ``campaign``.
+
+    ``candidates`` maps spec strings to *freshly built* backends (a
+    mapping or a ``(spec, backend)`` sequence — build them with
+    :func:`repro.solvers.registry.make_backend`; ``repro.api.advise``
+    does this from a :class:`~repro.api.Problem`).  Each candidate is
+    filtered through :func:`plan_campaign` against its
+    :class:`~repro.nvm.backend.BackendCapabilities`, then the survivors
+    are ranked by declared storage footprint
+    (``memory_overhead_values() + nvm_values()``, the paper's Fig. 2/8
+    quantity) with the modeled per-event persist cost as tie-breaker —
+    probed with one synthetic event of ``probe_values`` values when
+    given (candidates are disposable: the probe writes their slot 0).
+
+    Returns a :class:`SpecAdvice`; ``advice.chosen`` is None when no
+    candidate survives (callers decide whether that is an error — the
+    :meth:`repro.api.ResilienceSpec.advise` surface raises
+    :class:`UnsurvivableCampaignError`).
+    """
+    items = (list(candidates.items()) if hasattr(candidates, "items")
+             else list(candidates))
+    ranked: List[SpecRanking] = []
+    rejected: List[SpecRanking] = []
+    for spec, backend in items:
+        try:
+            plan_campaign(campaign, backend.capabilities)
+        except UnsurvivableCampaignError as e:
+            storage = int(backend.memory_overhead_values()
+                          + backend.nvm_values())
+            rejected.append(SpecRanking(spec, False, str(e), storage,
+                                        float("nan")))
+            continue
+        cost = (float("nan") if probe_values is None
+                else _probe_persist_cost(backend, probe_values))
+        # footprint measured after the probe, so residency-based
+        # accounting (peer-RAM ESR) reflects a persisted run too
+        storage = int(backend.memory_overhead_values() + backend.nvm_values())
+        ranked.append(SpecRanking(spec, True, "", storage, cost))
+    ranked.sort(key=lambda r: (r.storage_values,
+                               math.inf if math.isnan(r.persist_cost_s)
+                               else r.persist_cost_s))
+    return SpecAdvice(chosen=ranked[0].spec if ranked else None,
+                      ranked=tuple(ranked), rejected=tuple(rejected))
 
 
 @dataclasses.dataclass

@@ -318,12 +318,14 @@ def test_parse_backend_spec():
     assert parse_backend_spec("tiered(nvm-prd)") == (
         "tiered", {"child": "nvm-prd"})
     assert parse_backend_spec("erasure(nvm-prd x4+p)") == (
-        "erasure", {"data": ("nvm-prd",) * 4})
+        "erasure", {"data": ("nvm-prd",) * 4, "nparity": 1})
+    assert parse_backend_spec("erasure(nvm-prd x6+2p)") == (
+        "erasure", {"data": ("nvm-prd",) * 6, "nparity": 2})
     assert parse_backend_spec("erasure(nvm-homogeneous ×2 + p)") == (
-        "erasure", {"data": ("nvm-homogeneous",) * 2})
+        "erasure", {"data": ("nvm-homogeneous",) * 2, "nparity": 1})
     with pytest.raises(ValueError, match="malformed"):
         parse_backend_spec("replicated(nvm-prd")
-    with pytest.raises(ValueError, match="xK\\+p"):
+    with pytest.raises(ValueError, match="xK\\+Pp"):
         parse_backend_spec("erasure(nvm-prd x4)")
     with pytest.raises(ValueError, match="no spec arguments"):
         create_backend("esr(nvm-prd)", 4, 8)

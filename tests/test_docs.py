@@ -91,8 +91,30 @@ def test_check_docs_flags_undocumented_backend_family(tmp_path):
     fresh = tmp_path / "ok" / "README.md"
     fresh.parent.mkdir()
     fresh.write_text("backends: "
-                     + " ".join(f"`{n}`" for n in sorted(families)) + "\n")
+                     + " ".join(f"`{n}`" for n in sorted(families))
+                     + " `erasure(c x4+p)` `erasure(c x6+2p)`\n")
     out = subprocess.run(
         [sys.executable, str(REPO / "tools" / "check_docs.py"), str(fresh)],
         capture_output=True, text=True)
     assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_check_docs_flags_undocumented_erasure_arity(tmp_path):
+    """The ISSUE 5 freshness extension: naming the erasure family is
+    not enough — every supported parity arity (+p, +2p) needs a row,
+    so a wider code cannot land with only distance 2 documented."""
+    from check_docs import registered_backend_families, \
+        supported_erasure_arities
+
+    families = registered_backend_families(REPO / "src")
+    assert supported_erasure_arities(REPO / "src") == ["+p", "+2p"]
+
+    stale = tmp_path / "README.md"
+    stale.write_text("backends: "
+                     + " ".join(f"`{n}`" for n in sorted(families))
+                     + " `erasure(c x4+p)`\n")       # +2p row missing
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"), str(stale)],
+        capture_output=True, text=True)
+    assert out.returncode == 1
+    assert "'+2p' missing" in out.stderr

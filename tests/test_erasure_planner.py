@@ -51,6 +51,7 @@ SOLVER_CASES = {
 assert set(SOLVER_CASES) == set(SOLVERS)
 
 ERASURE = "erasure(nvm-prd x4+p)"
+ERASURE2 = "erasure(nvm-prd x6+2p)"
 
 
 def _problem(nblocks=4):
@@ -162,6 +163,134 @@ def test_erasure_footprint_beats_mirroring():
     assert ratio == pytest.approx(1.25)          # 128 % 4 == 0: no padding
     assert ratio < mirror.nvm_values() / single.nvm_values() == 2.0
     assert stripe.memory_overhead_values() == 0  # still zero RAM redundancy
+
+
+@pytest.mark.parametrize("solver_name", sorted(SOLVERS))
+def test_x6_2p_any_two_losses_bit_exact_sweep(solver_name):
+    """The ISSUE 5 acceptance sweep: for every solver schema, the
+    x6+2p Reed-Solomon stripe serves a BIT-identical fetch after ANY
+    two simultaneous storage-child losses — all C(8,2)=28 pairs, plus
+    every single loss — np.array_equal, not allclose."""
+    import itertools
+
+    op, _, pre = _problem()
+    solver = make_solver(solver_name, op, pre, **SOLVER_CASES[solver_name][1])
+    schema = solver.schema
+    failed, n = (1, 3), op.n
+
+    def run(kill):
+        be = make_backend(ERASURE2, op, solver=solver)
+        session = be.open_session(schema)
+        for k, scalars, vectors in _synthetic_events(schema, n, schema.history):
+            session.persist(k, scalars, vectors)
+        for child in kill:
+            session._children[child].fail_storage()
+        return session.fetch(failed, tuple(range(schema.history)))
+
+    healthy = run(())
+    kills = ([(c,) for c in range(8)]
+             + list(itertools.combinations(range(8), 2)))
+    for kill in kills:
+        degraded = run(kill)
+        for h, d in zip(healthy, degraded):
+            assert d.k == h.k and d.scalars == h.scalars
+            for name in schema.vectors:
+                assert np.array_equal(d.vectors[name], h.vectors[name]), \
+                    (solver_name, kill, name)
+
+
+def test_x6_2p_three_losses_raise_with_diagnosis():
+    op, _, _ = _problem()
+    be = make_backend(ERASURE2, op)
+    session = be.open_session(PCG_SCHEMA)
+    session.persist(0, {"beta": 0.0}, {"p": np.zeros(op.n)})
+    session.persist(1, {"beta": 0.5}, {"p": np.ones(op.n)})
+    session.fail_storage()
+    session.fail_storage()                       # two losses: degraded
+    session.fetch((2,), (0, 1))
+    session.fail_storage()                       # third: distance 3 exceeded
+    with pytest.raises(UnrecoverableFailure, match="lost 3 of 8"):
+        session.fetch((2,), (0, 1))
+    assert session.durable_run() is None
+
+
+@pytest.mark.parametrize("persist_mode", ["sync", "overlap"])
+@pytest.mark.parametrize("solver_name", sorted(SOLVERS))
+def test_x6_2p_survives_double_prd_kill_exactly(solver_name, persist_mode):
+    """The ISSUE 5 acceptance criterion at the solve level: a campaign
+    whose single recovery fetches after TWO simultaneous storage-child
+    losses is planned as survivable on the x6+2p stripe and recovered
+    to machine precision, for every zoo solver, in both persist
+    modes."""
+    op, b, pre = _problem()
+    fail_at, opts = SOLVER_CASES[solver_name]
+    ref_cap = _reference(solver_name)
+
+    solver = make_solver(solver_name, op, pre, **opts)
+    backend = make_backend(ERASURE2, op, solver=solver)
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(), at_iteration=max(2, fail_at - 1), prd=True),
+        FailureEvent(blocks=(1, 2), at_iteration=fail_at, prd=True),
+    ))
+    plan = plan_campaign(campaign, backend.capabilities)
+    assert plan.storage_losses == 2
+    assert plan.recoveries[-1].storage_losses == 2
+
+    state, rep, cap = solve(
+        solver, op, b, pre,
+        SolveConfig(tol=1e-10, maxiter=5000, persist_mode=persist_mode),
+        backend=backend, failures=campaign,
+        capture_states_at=[fail_at - 1, fail_at])
+
+    assert rep.storage_failures == 2
+    assert rep.failures_recovered == 1
+    assert rep.converged
+    k_rec = fail_at - rep.wasted_iterations
+    _state_fields_close(cap[k_rec], ref_cap[k_rec])
+    res = float(np.linalg.norm(np.asarray(b - op.apply(state.x)))
+                / np.linalg.norm(np.asarray(b)))
+    assert res < 1e-9
+
+
+def test_erasure_k2p_validation():
+    """ISSUE 5 satellite: the wide-code composition refuses K < 2,
+    P outside {1, 2}, aliased children, and plain-schema children —
+    at composition time, with actionable errors."""
+    from repro.nvm.backend import stripe_child_schema
+
+    op, _, _ = _problem()
+    with pytest.raises(ValueError, match=">= 2 data children"):
+        make_backend("erasure(nvm-prd x1+2p)", op)
+    with pytest.raises(ValueError, match=">= 2 data children"):
+        make_backend("erasure", op, data=("nvm-prd",), nparity=2)
+    with pytest.raises(ValueError, match=r"1 \(xK\+p\) or 2 \(xK\+2p\)"):
+        make_backend("erasure", op, nparity=3)
+    with pytest.raises(ValueError, match=r"1 \(xK\+p\) or 2 \(xK\+2p\)"):
+        make_backend("erasure", op, nparity=0)
+
+    stripe_schema = stripe_child_schema(PCG_SCHEMA)
+    kids = [create_backend("nvm-prd", 4, 32, np.float64,
+                           schema=stripe_schema) for _ in range(4)]
+    # an aliased parity pair: one node wearing both parity hats
+    with pytest.raises(ValueError, match="distinct backend instances"):
+        ErasureCodedBackend(kids[:2], [kids[2], kids[2]], block_size=64)
+    # a data child doubling as parity
+    with pytest.raises(ValueError, match="distinct backend instances"):
+        ErasureCodedBackend(kids[:2], [kids[1], kids[3]], block_size=64)
+    # three parity children: beyond the P+Q construction
+    with pytest.raises(ValueError, match=r"1 \(xK\+p\) or 2 \(xK\+2p\)"):
+        ErasureCodedBackend(kids[:2], [kids[2], kids[3], kids[0]] + [
+            create_backend("nvm-prd", 4, 32, np.float64,
+                           schema=stripe_schema)], block_size=64)
+    # children bound to the bare solver schema cannot record rotation
+    plain = [create_backend("nvm-prd", 4, 32, np.float64,
+                            schema=PCG_SCHEMA) for _ in range(3)]
+    with pytest.raises(ValueError, match="stripe_child_schema"):
+        ErasureCodedBackend(plain[:2], plain[2], block_size=64)
+    # the x6+2p spec string composes cleanly end to end
+    be = make_backend(ERASURE2, op)
+    assert be.capabilities.max_storage_failures == 2
+    assert be.nparity == 2 and be.k_data == 6
 
 
 def test_erasure_validation():

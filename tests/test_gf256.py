@@ -1,0 +1,219 @@
+"""GF(2^8) + Reed-Solomon unit tests (ISSUE 5 satellite).
+
+Covers the field tables (mul/div/pow consistency against the axioms),
+the P/Q Vandermonde (row 0 == XOR, MDS refusal beyond 2 parities), the
+encode -> drop-any-<=2 -> decode roundtrip — byte-identical across
+chunk shapes including ragged tails — and the stripe's rotation
+metadata roundtrip (recorded durably per stripe, read back by fetch,
+never leaked into the solver-facing recovery sets).
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+from repro.nvm import gf256
+from repro.nvm.backend import (
+    STRIPE_ROT_SCALAR,
+    create_backend,
+    stripe_child_schema,
+)
+
+
+# ------------------------------------------------------------ the field
+def test_exp_log_tables_are_inverse():
+    for a in range(1, 256):
+        assert int(gf256.EXP[int(gf256.LOG[a])]) == a
+    for i in range(255):
+        assert int(gf256.LOG[int(gf256.EXP[i])]) == i
+    # the doubled half lets gf_mul skip one modulo
+    assert np.array_equal(gf256.EXP[255:510], gf256.EXP[0:255])
+    # EXP[0..254] enumerates the whole multiplicative group
+    assert len(set(gf256.EXP[:255].tolist())) == 255
+
+
+def test_mul_axioms():
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 256, 512, dtype=np.uint8)
+    b = rng.integers(0, 256, 512, dtype=np.uint8)
+    c = rng.integers(0, 256, 512, dtype=np.uint8)
+    assert np.array_equal(gf256.gf_mul(a, b), gf256.gf_mul(b, a))
+    assert np.array_equal(gf256.gf_mul(gf256.gf_mul(a, b), c),
+                          gf256.gf_mul(a, gf256.gf_mul(b, c)))
+    # distributive over the field's addition (XOR)
+    assert np.array_equal(gf256.gf_mul(a, b ^ c),
+                          gf256.gf_mul(a, b) ^ gf256.gf_mul(a, c))
+    assert np.array_equal(gf256.gf_mul(a, np.uint8(1)), a)
+    assert not gf256.gf_mul(a, np.uint8(0)).any()
+
+
+def test_div_inverts_mul_and_refuses_zero():
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, 256, 512, dtype=np.uint8)
+    b = rng.integers(1, 256, 512, dtype=np.uint8)
+    assert np.array_equal(gf256.gf_div(gf256.gf_mul(a, b), b), a)
+    with pytest.raises(ZeroDivisionError):
+        gf256.gf_div(a, np.uint8(0))
+    with pytest.raises(ZeroDivisionError):
+        gf256.gf_inv(0)
+    for x in (1, 2, 37, 255):
+        assert int(gf256.gf_mul(x, gf256.gf_inv(x))) == 1
+
+
+def test_pow_consistency():
+    for a in (0, 1, 2, 7, 255):
+        acc = 1
+        for n in range(9):
+            assert gf256.gf_pow(a, n) == acc
+            acc = int(gf256.gf_mul(acc, a))
+    assert gf256.gf_pow(0, 0) == 1 and gf256.gf_pow(0, 5) == 0
+
+
+def test_vandermonde_rows():
+    v = gf256.vandermonde(2, 6)
+    assert np.array_equal(v[0], np.ones(6, np.uint8))       # P row == XOR
+    assert np.array_equal(
+        v[1], np.array([gf256.gf_pow(gf256.GENERATOR, j) for j in range(6)],
+                       np.uint8))
+    assert len(set(v[1].tolist())) == 6                     # Q weights distinct
+    with pytest.raises(ValueError, match="MDS"):
+        gf256.vandermonde(3, 4)                             # beyond P+Q
+    with pytest.raises(ValueError, match="k_data"):
+        gf256.vandermonde(1, 0)
+
+
+# --------------------------------------------------------- Reed-Solomon
+def test_p1_parity_is_xor():
+    rng = np.random.default_rng(3)
+    data = [rng.integers(0, 256, 33, dtype=np.uint8) for _ in range(4)]
+    (parity,) = gf256.rs_encode(data, 1)
+    xor = np.zeros(33, np.uint8)
+    for d in data:
+        xor ^= d
+    assert np.array_equal(parity, xor)
+
+
+@pytest.mark.parametrize("k_data", [2, 3, 6])
+@pytest.mark.parametrize("nparity", [1, 2])
+@pytest.mark.parametrize("length", [1, 7, 16, 33])
+def test_encode_drop_any_decode_roundtrip(k_data, nparity, length):
+    """The satellite roundtrip: drop ANY combination of up to `nparity`
+    shards (data-data, data-parity, parity-parity) and reconstruction
+    is byte-identical — np.array_equal, not allclose — across shard
+    lengths including ragged tails."""
+    rng = np.random.default_rng(1000 * k_data + 10 * nparity + length)
+    data = [rng.integers(0, 256, length, dtype=np.uint8)
+            for _ in range(k_data)]
+    stripe = data + gf256.rs_encode(data, nparity)
+    for ndrop in range(nparity + 1):
+        for kill in itertools.combinations(range(k_data + nparity), ndrop):
+            shards = [None if i in kill else stripe[i]
+                      for i in range(k_data + nparity)]
+            rec = gf256.rs_reconstruct(shards, k_data)
+            for j in range(k_data):
+                assert np.array_equal(rec[j], data[j]), (kill, j)
+
+
+def test_reconstruct_refuses_beyond_distance():
+    rng = np.random.default_rng(4)
+    data = [rng.integers(0, 256, 8, dtype=np.uint8) for _ in range(4)]
+    stripe = data + gf256.rs_encode(data, 2)
+    # three losses on a distance-3 code
+    shards = [None, None, data[2], data[3], None, stripe[5]]
+    with pytest.raises(ValueError, match="beyond the code's remaining"):
+        gf256.rs_reconstruct(shards, 4)
+    # two data losses with only ONE surviving parity
+    shards = [None, None, data[2], data[3], stripe[4], None]
+    with pytest.raises(ValueError, match="beyond the code's remaining"):
+        gf256.rs_reconstruct(shards, 4)
+    # a stripe with no parity at all is malformed
+    with pytest.raises(ValueError, match="no parity"):
+        gf256.rs_reconstruct(data, 4)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=0, max_value=10**9))
+def test_roundtrip_property(seed):
+    """Property variant of the roundtrip sweep (skips without
+    hypothesis; the deterministic sweep above always runs)."""
+    rng = np.random.default_rng(seed)
+    k_data = int(rng.integers(2, 9))
+    nparity = int(rng.integers(1, 3))
+    length = int(rng.integers(1, 64))
+    data = [rng.integers(0, 256, length, dtype=np.uint8)
+            for _ in range(k_data)]
+    stripe = data + gf256.rs_encode(data, nparity)
+    kill = rng.choice(k_data + nparity, size=nparity, replace=False)
+    shards = [None if i in kill else stripe[i]
+              for i in range(k_data + nparity)]
+    rec = gf256.rs_reconstruct(shards, k_data)
+    for j in range(k_data):
+        assert np.array_equal(rec[j], data[j])
+
+
+# ------------------------------------------------- rotation metadata
+def _pcg_stripe(k_data=6, nparity=2, nblocks=4, block_size=22):
+    """A stripe over a ragged chunk (block_size not divisible by K)."""
+    from repro.core.state import PCG_SCHEMA
+
+    spec = f"erasure(nvm-prd x{k_data}+{nparity}p)" if nparity > 1 \
+        else f"erasure(nvm-prd x{k_data}+p)"
+    return create_backend(spec, nblocks, block_size, np.float64,
+                          schema=PCG_SCHEMA), PCG_SCHEMA
+
+
+def test_rotation_metadata_roundtrips():
+    """The rotation offset is *recorded* per stripe in every child's
+    slot scalars, read back by fetch (not re-derived), balanced
+    round-robin, and stripped from the solver-facing recovery sets."""
+    be, schema = _pcg_stripe()
+    nchildren = be.k_data + be.nparity
+    session = be.open_session(schema)
+    rng = np.random.default_rng(5)
+    n = be.nblocks * be.block_size
+    blocks = (0, 2)
+    vecs = [rng.standard_normal(n) for _ in range(nchildren + 3)]
+    for k, v in enumerate(vecs):
+        session.persist(k, {"beta": 0.25 * k}, {"p": v})
+        # recorded metadata: each child slot carries the stripe's
+        # offset, advancing by P per stripe (the balanced RAID-6
+        # rotation) — probed while the slot is still in the ring
+        raw = session._children[0].fetch(blocks, (k,))[0]
+        assert raw.scalars[STRIPE_ROT_SCALAR] == float(
+            (be.nparity * k) % nchildren)
+
+    # parity-write balance: counts differ by <= 1 stripe at any prefix
+    assert max(session.parity_writes) - min(session.parity_writes) <= 1
+
+    # the roundtrip: healthy and any-2-children-degraded fetches agree
+    # bit-for-bit, and the rotation scalar never leaks upward
+    ks = (len(vecs) - 2, len(vecs) - 1)   # the newest durable pair
+    healthy = session.fetch(blocks, ks)
+    for got, kk in zip(healthy, ks):
+        bs = be.block_size
+        want = np.concatenate(
+            [vecs[kk][b * bs:(b + 1) * bs] for b in blocks])
+        assert np.array_equal(got.vectors["p"], want)
+        assert set(got.scalars) == set(schema.scalars)
+    session.fail_storage()
+    session.fail_storage()
+    degraded = session.fetch(blocks, ks)
+    for h, d in zip(healthy, degraded):
+        assert d.k == h.k and d.scalars == h.scalars
+        assert np.array_equal(d.vectors["p"], h.vectors["p"])
+
+
+def test_stripe_child_schema_is_idempotent_and_reserved():
+    from repro.core.state import PCG_SCHEMA
+
+    extended = stripe_child_schema(PCG_SCHEMA)
+    assert extended.scalars == ("beta", STRIPE_ROT_SCALAR)
+    assert stripe_child_schema(extended) == extended
+    assert PCG_SCHEMA.scalars == ("beta",)  # the original is untouched
+    import dataclasses
+
+    hijacked = dataclasses.replace(
+        PCG_SCHEMA, scalars=(STRIPE_ROT_SCALAR, "beta"))
+    with pytest.raises(ValueError, match="reserved scalar"):
+        stripe_child_schema(hijacked)

@@ -18,6 +18,14 @@ Two invariants the docs CI job enforces on every push:
    public homes, and a smoke plan confirms the planner rejects a
    two-loss campaign on a distance-2 stripe while accepting it on a
    triple mirror.
+4. **Erasure parity coherence** (ISSUE 5) — for every supported parity
+   arity, ``erasure(... xK+Pp)`` must declare
+   ``max_storage_failures == P`` (and a parity arity the GF(256) P/Q
+   construction cannot honor must be refused at composition time).
+5. **Advisor surface** — ``advise_spec`` / ``SpecAdvice`` resolve from
+   ``repro.solvers`` and ``repro.api``, and a smoke advise confirms
+   the double-loss campaign picks the K+2p stripe over the triple
+   mirror on footprint grounds.
 
 Usage: ``PYTHONPATH=src python tools/check_api.py``
 Exit status is non-zero when anything is broken.  Requires jax+numpy
@@ -152,9 +160,97 @@ def check_planner_surface() -> list:
     return errors
 
 
+def check_erasure_parity_coherence() -> list:
+    """The ISSUE 5 capability rule: an erasure spec's declared storage
+    budget must equal its parity arity (``max_storage_failures == P``),
+    for every supported P — and unsupported arities must be refused."""
+    import numpy as np
+
+    from repro.core.state import PCG_SCHEMA
+    from repro.nvm.backend import create_backend
+
+    errors = []
+    for spec, p in (("erasure(nvm-prd x4+p)", 1),
+                    ("erasure(nvm-prd x6+2p)", 2),
+                    ("erasure(nvm-prd x4+1p)", 1),
+                    ("erasure(nvm-prd x3+2p)", 2)):
+        try:
+            be = create_backend(spec, nblocks=4, block_size=12,
+                                dtype=np.float64, schema=PCG_SCHEMA)
+        except Exception as e:  # noqa: BLE001
+            errors.append(f"{spec}: factory failed: {e!r}")
+            continue
+        caps = be.capabilities
+        if caps.max_storage_failures != p:
+            errors.append(
+                f"{spec}: declares max_storage_failures="
+                f"{caps.max_storage_failures}, must equal P={p}")
+        if not caps.survives_prd_loss:
+            errors.append(f"{spec}: must declare survives_prd_loss")
+    try:
+        create_backend("erasure(nvm-prd x4+3p)", nblocks=4, block_size=12,
+                       dtype=np.float64, schema=PCG_SCHEMA)
+        errors.append("erasure(... x4+3p) was not refused — the GF(256) "
+                      "P/Q rows are not MDS beyond P=2")
+    except ValueError:
+        pass
+    if not errors:
+        print("erasure parity coherence: max_storage_failures == P for "
+              "P in {1, 2}; P=3 refused")
+    return errors
+
+
+def check_advisor_surface() -> list:
+    """The advisor exports resolve and the canonical footprint decision
+    holds: a double-storage-loss campaign picks the K+2p stripe over
+    the 3x triple mirror."""
+    import numpy as np
+
+    errors = []
+    try:
+        from repro import api  # noqa: F401
+        from repro.api import advise  # noqa: F401
+        from repro.core.state import PCG_SCHEMA
+        from repro.nvm.backend import create_backend
+        from repro.solvers import (
+            FailureCampaign,
+            FailureEvent,
+            SpecAdvice,
+            advise_spec,
+        )
+    except Exception:
+        return [f"advisor exports missing:\n{traceback.format_exc()}"]
+
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1,), at_iteration=4, prd=True),
+        FailureEvent(blocks=(2,), at_iteration=8, prd=True),
+    ))
+    candidates = {
+        spec: create_backend(spec, nblocks=4, block_size=12,
+                             dtype=np.float64, schema=PCG_SCHEMA)
+        for spec in ("nvm-prd", "replicated(nvm-prd x3)",
+                     "erasure(nvm-prd x6+2p)")
+    }
+    advice = advise_spec(campaign, candidates, probe_values=48)
+    if not isinstance(advice, SpecAdvice):
+        errors.append(f"advise_spec returned {type(advice).__name__}")
+    elif advice.chosen != "erasure(nvm-prd x6+2p)":
+        errors.append(f"advisor chose {advice.chosen!r} for the "
+                      f"double-loss campaign, expected the K+2p stripe "
+                      f"on footprint grounds")
+    elif {r.spec for r in advice.rejected} != {"nvm-prd"}:
+        errors.append(f"advisor rejections wrong: "
+                      f"{[r.spec for r in advice.rejected]}")
+    if not errors:
+        print("advisor surface: double-loss campaign picks the K+2p "
+              "stripe over the triple mirror")
+    return errors
+
+
 def main() -> int:
     errors = (check_api_surface() + check_backend_capabilities()
-              + check_planner_surface())
+              + check_planner_surface() + check_erasure_parity_coherence()
+              + check_advisor_surface())
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     return 1 if errors else 0

@@ -11,12 +11,15 @@ without jax installed.  Two classes of rot it catches:
 2. **Link rot** — every relative markdown link / image target must exist
    in the repository (``[text](path)``; external ``http(s)://`` and
    ``#anchor`` links are skipped).
-3. **Matrix rot** (freshness, ISSUE 4) — every backend *spec family*
+3. **Matrix rot** (freshness, ISSUE 4/5) — every backend *spec family*
    registered in the source tree (``register_backend("name", ...)`` /
    ``register_backend_class("name", ...)``) must appear in the README's
    backend matrix, so a new backend cannot land undocumented.  Found by
    scanning ``src/`` textually — no runtime import needed.  Runs
-   whenever a README is among the checked files.
+   whenever a README is among the checked files.  For the ``erasure``
+   family, every parity arity the stripe grammar supports (scanned
+   from ``MAX_PARITY`` usage: ``+p`` and ``+2p``) must be named too —
+   a wider code cannot land with only the distance-2 row documented.
 
 Usage: ``python tools/check_docs.py README.md DESIGN.md docs/*.md``
 Exit status is non-zero when anything is broken.
@@ -80,9 +83,38 @@ def check_backend_matrix(readme: Path, repo_root: Path) -> list:
     print(f"{readme}: backend matrix covers "
           f"{len(families) - len(missing)}/{len(families)} registered "
           f"spec families")
-    return [f"{readme}: registered backend family {name!r} is missing "
-            f"from the README backend matrix — document it (see the "
-            f"'Solver / backend matrix' section)" for name in missing]
+    errors = [f"{readme}: registered backend family {name!r} is missing "
+              f"from the README backend matrix — document it (see the "
+              f"'Solver / backend matrix' section)" for name in missing]
+    if "erasure" in families:
+        arities = supported_erasure_arities(repo_root / "src")
+        undocumented = [a for a in arities if a not in text]
+        if undocumented:
+            errors.append(
+                f"{readme}: erasure parity arity(ies) "
+                f"{', '.join(repr(a) for a in undocumented)} missing from "
+                f"the README — every supported 'xK{undocumented[0]}'-style "
+                f"spec form needs a matrix row")
+        else:
+            print(f"{readme}: erasure matrix names all supported parity "
+                  f"arities ({', '.join(arities)})")
+    return errors
+
+
+_MAX_PARITY_RE = re.compile(r"^MAX_PARITY\s*=\s*(\d+)", re.MULTILINE)
+
+
+def supported_erasure_arities(src_root: Path) -> list:
+    """The ``+p`` / ``+2p`` / ... spec suffixes the stripe grammar
+    accepts, derived textually from ``MAX_PARITY`` in the GF(2^8)
+    module (default 2 when the scan finds nothing)."""
+    max_parity = 2
+    gf = src_root / "repro" / "nvm" / "gf256.py"
+    if gf.exists():
+        m = _MAX_PARITY_RE.search(gf.read_text())
+        if m:
+            max_parity = int(m.group(1))
+    return ["+p"] + [f"+{p}p" for p in range(2, max_parity + 1)]
 
 
 def check_file(path: Path, repo_root: Path) -> list:
