@@ -29,23 +29,24 @@ from repro.nvm.windows import Window
 LOCAL_N = 176_400  # fp64 entries per process (paper Fig. 9 setting)
 
 
-def _payload(nprocs):
-    rng = np.random.default_rng(0)
+def _payload(nprocs, seed: int = 0):
+    rng = np.random.default_rng(seed)
     return rng.standard_normal(nprocs * LOCAL_N)
 
 
-def esr_inmemory_cost(nprocs: int) -> float:
+def esr_inmemory_cost(nprocs: int, seed: int = 0) -> float:
     """Full-fault-tolerance redundancy iteration (modeled)."""
     nprocs = max(nprocs, 2)  # redundancy needs at least one peer
     be = InMemoryESR(nprocs, LOCAL_N, np.float64)
-    cost = be.persist_set(1, {"beta": 0.5}, {"p": _payload(nprocs)})
+    cost = be.persist_set(1, {"beta": 0.5}, {"p": _payload(nprocs, seed)})
     return cost / nprocs  # per-process view
 
 
-def nvm_homog_cost(nprocs: int, tier: Tier) -> float:
+def nvm_homog_cost(nprocs: int, tier: Tier, seed: int = 0) -> float:
     be = NVMESRHomogeneous(min(nprocs, 4), LOCAL_N, np.float64, tier=tier)
     # wall cost is the max over blocks (parallel nodes): measure 4, it's flat
-    return be.persist_set(1, {"beta": 0.5}, {"p": _payload(min(nprocs, 4))})
+    return be.persist_set(1, {"beta": 0.5},
+                          {"p": _payload(min(nprocs, 4), seed)})
 
 
 def local_window_cost(nprocs: int) -> float:
@@ -59,25 +60,25 @@ def local_window_cost(nprocs: int) -> float:
     return c
 
 
-def rows():
+def rows(seed: int = 0):
     out = []
     bytes_per_proc = LOCAL_N * 8
     for nprocs in (1, 4, 16, 32, 64, 128):
-        esr = esr_inmemory_cost(nprocs)
+        esr = esr_inmemory_cost(nprocs, seed)
         out.append((f"fig9_esr_inmemory_p{nprocs}", esr * 1e6, "per-proc modeled us"))
     for name, tier in (("pmdk_nvm", Tier.NVM), ("pmfs_nvm", Tier.NVM),
                        ("local_ssd", Tier.SSD)):
         t0 = time.perf_counter()
-        c = nvm_homog_cost(4, tier)
+        c = nvm_homog_cost(4, tier, seed)
         wall = time.perf_counter() - t0
         out.append((f"fig9_nvmesr_{name}", c * 1e6,
                     f"modeled us, flat in nprocs; sim wall {wall*1e3:.1f}ms"))
     out.append(("fig9_nvmesr_local_window", local_window_cost(1) * 1e6,
                 "modeled us (put+fence_persist)"))
     # sanity derivations the paper asserts
-    nvm = nvm_homog_cost(4, Tier.NVM)
-    ssd = nvm_homog_cost(4, Tier.SSD)
-    esr128 = esr_inmemory_cost(128)
+    nvm = nvm_homog_cost(4, Tier.NVM, seed)
+    ssd = nvm_homog_cost(4, Tier.SSD, seed)
+    esr128 = esr_inmemory_cost(128, seed)
     out.append(("fig9_claim_nvm_faster_than_ssd", ssd / nvm, "x speedup (>1)"))
     out.append(("fig9_claim_esr128_slower_than_nvm", esr128 / nvm, "x (>1)"))
     return out

@@ -21,22 +21,22 @@ from repro.nvm.store import Tier
 LOCAL_N = 176_400
 
 
-def prd_costs(nprocs: int, tier: Tier, network: str):
+def prd_costs(nprocs: int, tier: Tier, network: str, seed: int = 0):
     be = NVMESRPRD(nprocs, LOCAL_N, np.float64, tier=tier, network=network,
                    async_drain=True)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     p = rng.standard_normal(nprocs * LOCAL_N)
     origin = be.persist_set(1, {"beta": 0.5}, {"p": p})
     target = be.drain()
     return origin, target
 
 
-def rows():
+def rows(seed: int = 0):
     out = []
     for nprocs in (1, 8, 32, 64, 128, 256):
-        o_nvm, t_nvm = prd_costs(nprocs, Tier.NVM, "rdma")
-        o_ram, _ = prd_costs(nprocs, Tier.DRAM, "rdma")
-        o_ssd, t_ssd = prd_costs(nprocs, Tier.SSD, "sshfs")
+        o_nvm, t_nvm = prd_costs(nprocs, Tier.NVM, "rdma", seed)
+        o_ram, _ = prd_costs(nprocs, Tier.DRAM, "rdma", seed)
+        o_ssd, t_ssd = prd_costs(nprocs, Tier.SSD, "sshfs", seed)
         esr = InMemoryESR(max(nprocs, 2), LOCAL_N, np.float64)
         e = esr.persist_set(1, {"beta": 0.5},
                             {"p": np.zeros(max(nprocs, 2) * LOCAL_N)}) / max(nprocs, 2)
@@ -47,9 +47,9 @@ def rows():
         out.append((f"fig10_prd_sshfs_ssd_p{nprocs}", o_ssd * 1e6, "origin us"))
         out.append((f"fig10_esr_inmemory_p{nprocs}", e * 1e6, "per-proc us"))
     # headline claims
-    o_nvm, _ = prd_costs(128, Tier.NVM, "rdma")
-    o_ssd, _ = prd_costs(128, Tier.SSD, "sshfs")
-    o_ram, _ = prd_costs(128, Tier.DRAM, "rdma")
+    o_nvm, _ = prd_costs(128, Tier.NVM, "rdma", seed)
+    o_ssd, _ = prd_costs(128, Tier.SSD, "sshfs", seed)
+    o_ram, _ = prd_costs(128, Tier.DRAM, "rdma", seed)
     out.append(("fig10_claim_nvm_vs_remote_ssd_128p", o_ssd / o_nvm, "x faster (>1)"))
     out.append(("fig10_claim_persist_overhead_vs_ram", o_nvm / o_ram,
                 "x (persistence cost is small, ~1)"))

@@ -101,6 +101,7 @@ def advise(
     candidates: Optional[Sequence[str]] = None,
     solver: Union["SolverSpec", str] = "pcg",
     dtype: Any = np.float64,
+    tracer=None,
 ) -> SpecAdvice:
     """Rank candidate resilience specs against a campaign for this
     problem: each spec is built (sized for the problem, persisting the
@@ -109,7 +110,9 @@ def advise(
     ranked by storage footprint with modeled persist cost as
     tie-breaker (:func:`~repro.solvers.driver.advise_spec`).  The
     returned :class:`~repro.solvers.driver.SpecAdvice` renders as a
-    table via :func:`repro.launch.report.spec_advice_table`."""
+    table via :func:`repro.launch.report.spec_advice_table`.  A
+    ``tracer`` (repro.obs) records per-candidate ``advise.candidate``
+    events and the ``advise.chosen`` verdict."""
     if isinstance(solver, str):
         solver = SolverSpec(solver)
     built_solver = solver.build(problem)
@@ -118,7 +121,8 @@ def advise(
     built = [(spec, make_backend(spec, problem.op, dtype=dtype,
                                  solver=built_solver))
              for spec in candidates]
-    return advise_spec(campaign, built, probe_values=problem.op.n)
+    return advise_spec(campaign, built, probe_values=problem.op.n,
+                       tracer=tracer)
 
 
 def solver_names() -> list:
@@ -272,6 +276,7 @@ def solve(
     failures: Union[FailureCampaign, Sequence, Tuple] = (),
     x0=None,
     capture_states_at: Sequence[int] = (),
+    tracer=None,
 ) -> SolveResult:
     """Build the solver and backend from their specs and run the
     recoverable solve.
@@ -281,6 +286,10 @@ def solve(
     ``"replicated(nvm-prd x2)"`` ==
     ``ResilienceSpec("replicated(nvm-prd x2)")``); ``resilience=None``
     runs unprotected (and refuses injected failures, like the driver).
+    ``tracer`` (a :class:`repro.obs.Tracer`) records spans and events
+    through the driver, the persistence sessions, and the stager —
+    export with ``tracer.to_chrome(...)`` for Perfetto
+    (docs/observability.md); omitted, the hot path stays a strict no-op.
     """
     if isinstance(solver, str):
         solver = SolverSpec(solver)
@@ -297,6 +306,7 @@ def solve(
         persistence_period=resilience.period,
         persist_mode=resilience.persist_mode,
         plan_campaign=resilience.plan_campaigns,
+        tracer=tracer,
     )
     state, report, captured = _driver.solve(
         built_solver, problem.op, problem.b, problem.precond,

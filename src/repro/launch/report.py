@@ -111,6 +111,10 @@ def solve_report_rows(r) -> Dict[str, str]:
         "hidden %": f"{r.persist_hidden_fraction * 100:.1f}",
         "stage ms": f"{r.persist_stage_s * 1e3:.3f}",
         "drain ms": f"{r.persist_drain_s * 1e3:.3f}",
+        # trailing column (ISSUE 6): the paper's time-overhead quantity
+        # normalized per iteration; appended last so the columns before
+        # it stay byte-stable for existing tables
+        "exposed/iter us": f"{r.persist_exposed_per_iteration * 1e6:.3f}",
     }
 
 
@@ -130,6 +134,47 @@ def solve_report_table(reports) -> str:
     """Markdown table over solver runs (benchmarks/examples print this)."""
     return _markdown_table([solve_report_rows(r) for r in reports],
                            "(no solver reports)")
+
+
+# ----------------------------------------------------------------------
+# Metrics-registry reporting (DESIGN.md §9): the labeled instruments a
+# solve's `report.metrics` carries, as a per-phase summary table.
+# ----------------------------------------------------------------------
+def metrics_rows(registry):
+    """One row per instrument in a :class:`repro.obs.MetricsRegistry`
+    (sorted by name then labels, like ``registry.snapshot()``).
+    Histograms render their per-phase summary (count/total/mean/p50/
+    p95/max); counters and gauges render their value with the summary
+    columns dashed."""
+    rows = []
+    base = set(registry.base_labels)
+    for inst in registry:
+        labels = ", ".join(f"{k}={v}" for k, v in inst.labels
+                           if k not in base)
+        row = {"metric": inst.name, "kind": inst.kind,
+               "labels": labels or "-"}
+        if inst.kind == "histogram":
+            s = inst.summary()
+            row["count"] = str(s["count"])
+            row["total"] = f"{s['total']:.3e}"
+            for col in ("mean", "p50", "p95", "max"):
+                row[col] = (f"{s[col]:.3e}" if s["count"] else "-")
+        else:
+            row["count"] = "-"
+            row["total"] = (str(inst.value) if inst.kind == "counter"
+                            else f"{inst.value:g}")
+            for col in ("mean", "p50", "p95", "max"):
+                row[col] = "-"
+        rows.append(row)
+    return rows
+
+
+def metrics_table(registry) -> str:
+    """Markdown table over a solve's metrics registry
+    (``result.report.metrics``); empty registries render a placeholder."""
+    if registry is None or not len(registry):
+        return "(no metrics)"
+    return _markdown_table(metrics_rows(registry), "(no metrics)")
 
 
 # ----------------------------------------------------------------------

@@ -157,6 +157,17 @@ class PersistSession(abc.ABC):
     def __init__(self, schema: RecoverySchema):
         self.schema = schema
         self._storage_down = False
+        self._trace = None
+
+    # -- observability (DESIGN.md §9) -----------------------------------
+    def set_tracer(self, tracer) -> None:
+        """Attach a ``repro.obs`` tracer (detach with None or any falsy
+        tracer).  The driver calls this once per solve when tracing is
+        enabled; composite sessions propagate it to their children, so
+        one call instruments the whole storage tree.  Sessions guard
+        every record site with ``if self._trace is not None`` — with no
+        tracer attached the session runs zero tracer callables."""
+        self._trace = tracer or None
 
     # -- overlapped pipeline (DESIGN.md §6) -----------------------------
     @abc.abstractmethod
@@ -361,6 +372,16 @@ class CoreBackendSession(PersistSession):
         self._native = hasattr(backend, "persist_begin")
         self._front = None if self._native else RAMFront(backend.persist_set)
 
+    def set_tracer(self, tracer) -> None:
+        super().set_tracer(tracer)
+        # stage/drain attribution comes from the stager itself — the
+        # driver-side front's, or the native backend's internal one
+        if self._front is not None:
+            self._front._stager.tracer = self._trace
+        stager = getattr(self._backend, "_stager", None)
+        if stager is not None:
+            stager.tracer = self._trace
+
     # -- pipeline -------------------------------------------------------
     def begin(self, k, scalars, vectors) -> float:
         if self._storage_down:
@@ -399,7 +420,11 @@ class CoreBackendSession(PersistSession):
     def persist(self, k, scalars, vectors) -> float:
         if self._storage_down:
             return 0.0
-        return self._backend.persist_set(k, scalars, vectors)
+        cost = self._backend.persist_set(k, scalars, vectors)
+        if self._trace is not None:
+            self._trace.event("backend.write", k=k, cost_s=cost,
+                              backend=type(self._backend).__name__)
+        return cost
 
     # -- failure + recovery ---------------------------------------------
     def fail(self, blocks: Sequence[int]) -> None:
@@ -445,6 +470,10 @@ class LegacyBackendSession(PersistSession):
         super().__init__(schema)
         self._backend = backend
         self._front = RAMFront(self._flush)
+
+    def set_tracer(self, tracer) -> None:
+        super().set_tracer(tracer)
+        self._front._stager.tracer = self._trace
 
     def _flush(self, k, scalars, vectors) -> float:
         return self._backend.persist(k, scalars["beta"], vectors["p"])
@@ -553,6 +582,11 @@ class ReplicatedSession(PersistSession):
         self._children = [open_persist_session(c, schema, partition)
                           for c in backend.children]
 
+    def set_tracer(self, tracer) -> None:
+        super().set_tracer(tracer)
+        for s in self._children:
+            s.set_tracer(tracer)
+
     def _live(self) -> List[PersistSession]:
         return [s for s in self._children if not s._storage_down]
 
@@ -564,7 +598,16 @@ class ReplicatedSession(PersistSession):
         return sum(s.begin(k, scalars, vectors) for s in self._live())
 
     def commit(self) -> float:
-        return sum(s.commit() for s in self._live())
+        if self._trace is None:
+            return sum(s.commit() for s in self._live())
+        cost = 0.0
+        for i, s in enumerate(self._children):
+            if s._storage_down:
+                continue
+            c = s.commit()
+            self._trace.event("mirror.commit", mirror=i, cost_s=c)
+            cost += c
+        return cost
 
     def drain(self) -> float:
         return sum(s.drain() for s in self._live())
@@ -598,9 +641,17 @@ class ReplicatedSession(PersistSession):
                 errors.append(f"mirror {i}: storage lost")
                 continue
             try:
-                return s.fetch(failed_blocks, ks)
+                sets = s.fetch(failed_blocks, ks)
             except (UnrecoverableFailure, RuntimeError) as e:
                 errors.append(f"mirror {i}: {e}")
+                if self._trace is not None:
+                    self._trace.event("mirror.fetch", mirror=i, served=False,
+                                      skipped=len(errors) - 1)
+                continue
+            if self._trace is not None:
+                self._trace.event("mirror.fetch", mirror=i, served=True,
+                                  skipped=len(errors))
+            return sets
         raise UnrecoverableFailure(
             f"no mirror of {len(self._children)} can serve iterations "
             f"{tuple(ks)} for blocks {tuple(failed_blocks)}: "
@@ -673,6 +724,11 @@ class TieredSession(PersistSession):
         super().__init__(schema)
         self._child = open_persist_session(backend.child, schema, partition)
         self._front = RAMFront(self._child.persist, tier=backend.front_tier)
+
+    def set_tracer(self, tracer) -> None:
+        super().set_tracer(tracer)
+        self._front._stager.tracer = self._trace
+        self._child.set_tracer(tracer)
 
     def begin(self, k, scalars, vectors) -> float:
         return self._front.begin(k, scalars, vectors)
@@ -817,6 +873,11 @@ class ErasureSession(PersistSession):
         #: rotation keeps max-min <= 1 over any write sequence)
         self.parity_writes = [0] * len(self._children)
 
+    def set_tracer(self, tracer) -> None:
+        super().set_tracer(tracer)
+        for s in self._children:
+            s.set_tracer(tracer)
+
     # -- stripe geometry ------------------------------------------------
     def _rotation(self) -> int:
         """Allocate the next stripe's rotation offset.  Stepping by P
@@ -843,8 +904,14 @@ class ErasureSession(PersistSession):
             chunks = [np.ascontiguousarray(padded[:, j * chunk:(j + 1) * chunk]
                                            ).reshape(-1)
                       for j in range(k_data)]
-            parity = gf256.rs_encode([c.view(np.uint8) for c in chunks],
-                                     be.nparity)
+            if self._trace is None:
+                parity = gf256.rs_encode([c.view(np.uint8) for c in chunks],
+                                         be.nparity)
+            else:
+                with self._trace.span("gf256.rs_encode", vector=name,
+                                      k_data=k_data, nparity=be.nparity):
+                    parity = gf256.rs_encode(
+                        [c.view(np.uint8) for c in chunks], be.nparity)
             for j in range(k_data):
                 out[j][name] = chunks[j]
             for i in range(be.nparity):
@@ -870,8 +937,11 @@ class ErasureSession(PersistSession):
             child = (j + rot) % nchildren
             if j >= be.k_data:
                 self.parity_writes[child] += 1
-            cost += getattr(self._children[child], method)(
-                k, scalars, shards[j])
+            c = getattr(self._children[child], method)(k, scalars, shards[j])
+            if self._trace is not None:
+                self._trace.event("stripe.write", child=child, shard=j,
+                                  parity=j >= be.k_data, rot=rot, cost_s=c)
+            cost += c
         return cost
 
     # -- pipeline -------------------------------------------------------
@@ -928,6 +998,9 @@ class ErasureSession(PersistSession):
                 per_child.append(None)
                 errors.append(f"child {j}: {e}")
         missing = [j for j, r in enumerate(per_child) if r is None]
+        if missing and len(missing) <= be.nparity and self._trace is not None:
+            self._trace.event("stripe.degraded", missing=tuple(missing),
+                              nparity=be.nparity)
         if len(missing) > be.nparity:
             raise UnrecoverableFailure(
                 f"erasure stripe lost {len(missing)} of {nchildren} "
@@ -972,7 +1045,14 @@ class ErasureSession(PersistSession):
                       ).view(np.uint8)
                       for s in logical]
             try:
-                data = gf256.rs_reconstruct(shards, k_data)
+                if self._trace is None:
+                    data = gf256.rs_reconstruct(shards, k_data)
+                else:
+                    with self._trace.span("gf256.rs_decode", vector=name,
+                                          k=kk, missing=tuple(
+                                              j for j, s in enumerate(shards)
+                                              if s is None)):
+                        data = gf256.rs_reconstruct(shards, k_data)
             except ValueError as e:
                 raise UnrecoverableFailure(
                     f"erasure stripe cannot reconstruct iteration {kk}: "

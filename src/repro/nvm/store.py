@@ -254,6 +254,9 @@ class PersistStager:
         self._staged: deque = deque()
         self.cost = cost_model if cost_model is not None else CostModel()
         self._dram = TIER_SPECS[Tier.DRAM]
+        #: a repro.obs tracer (set through PersistSession.set_tracer);
+        #: None keeps every stager operation tracer-callable-free
+        self.tracer = None
 
     @property
     def pending(self) -> int:
@@ -272,18 +275,31 @@ class PersistStager:
         vecs = {name: np.array(v) for name, v in vectors.items()}
         nbytes = 8 + 8 * len(scalars) + sum(v.nbytes for v in vecs.values())
         self._staged.append((int(k), dict(scalars), vecs))
-        return self.cost.add("stage", self._dram.write_cost(nbytes))
+        cost = self.cost.add("stage", self._dram.write_cost(nbytes))
+        if self.tracer is not None:
+            # The staging copy is the exposed part of an overlapped
+            # event; the flush below is the hidden part (DESIGN.md §6).
+            self.tracer.event("stage.copy", k=int(k), nbytes=nbytes,
+                              cost_s=cost, exposed=True)
+        return cost
 
     def commit(self) -> float:
         if not self._staged:
             return 0.0
         k, scalars, vectors = self._staged.popleft()
-        return self._flush(k, scalars, vectors)
+        cost = self._flush(k, scalars, vectors)
+        if self.tracer is not None:
+            self.tracer.event("stage.flush", k=int(k), cost_s=cost,
+                              exposed=False)
+        return cost
 
     def drain(self) -> float:
         total = 0.0
+        drained = len(self._staged)
         while self._staged:
             total += self.commit()
+        if self.tracer is not None and drained:
+            self.tracer.event("stage.drain", events=drained, cost_s=total)
         return total
 
     def abort(self) -> int:

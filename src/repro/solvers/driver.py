@@ -53,6 +53,7 @@ from repro.nvm.backend import (
     UnrecoverableFailure,
     open_persist_session,
 )
+from repro.obs.metrics import MetricsRegistry
 
 PERSIST_MODES = ("sync", "overlap")
 
@@ -69,6 +70,12 @@ class SolveConfig:
     #                               backend's declared capabilities; False
     #                               runs unplanned (failures surface at the
     #                               recovery fetch instead)
+    tracer: Optional[object] = None  # a repro.obs.Tracer records spans /
+    #                               events through the whole pipeline
+    #                               (DESIGN.md §9); None (or any falsy
+    #                               tracer) keeps the hot path a strict
+    #                               no-op — zero tracer callables per
+    #                               iteration, enforced by the obs tests
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,7 +182,8 @@ class CampaignPlan:
     storage_losses: int
 
 
-def plan_campaign(campaign, capabilities: BackendCapabilities) -> CampaignPlan:
+def plan_campaign(campaign, capabilities: BackendCapabilities,
+                  tracer=None) -> CampaignPlan:
     """Check a campaign against a backend's declared capabilities.
 
     Walks the campaign exactly as the solve loop will execute it —
@@ -195,7 +203,24 @@ def plan_campaign(campaign, capabilities: BackendCapabilities) -> CampaignPlan:
     :class:`UnsurvivableCampaignError` naming the violating
     :class:`FailureEvent` otherwise.  ``campaign`` may be a
     :class:`FailureCampaign` or any sequence :func:`solve` accepts.
+    A ``tracer`` (repro.obs) records the verdict as a ``plan.accept``
+    or ``plan.reject`` event.
     """
+    trace = tracer or None
+    try:
+        plan = _plan_campaign_walk(campaign, capabilities)
+    except UnsurvivableCampaignError as e:
+        if trace is not None:
+            trace.event("plan.reject", reason=str(e))
+        raise
+    if trace is not None:
+        trace.event("plan.accept", recoveries=len(plan.recoveries),
+                    storage_losses=plan.storage_losses)
+    return plan
+
+
+def _plan_campaign_walk(campaign,
+                        capabilities: BackendCapabilities) -> CampaignPlan:
     campaign = _as_campaign(campaign)
     max_storage = capabilities.max_storage_failures
     max_blocks = capabilities.max_block_failures
@@ -313,7 +338,8 @@ def _probe_persist_cost(backend, nvalues: int) -> float:
 
 
 def advise_spec(campaign, candidates,
-                probe_values: Optional[int] = None) -> SpecAdvice:
+                probe_values: Optional[int] = None,
+                tracer=None) -> SpecAdvice:
     """Pick the cheapest candidate spec whose declared capabilities
     carry ``campaign``.
 
@@ -332,8 +358,11 @@ def advise_spec(campaign, candidates,
     Returns a :class:`SpecAdvice`; ``advice.chosen`` is None when no
     candidate survives (callers decide whether that is an error — the
     :meth:`repro.api.ResilienceSpec.advise` surface raises
-    :class:`UnsurvivableCampaignError`).
+    :class:`UnsurvivableCampaignError`).  A ``tracer`` (repro.obs)
+    records one ``advise.candidate`` event per candidate and a final
+    ``advise.chosen`` verdict.
     """
+    trace = tracer or None
     items = (list(candidates.items()) if hasattr(candidates, "items")
              else list(candidates))
     ranked: List[SpecRanking] = []
@@ -346,6 +375,9 @@ def advise_spec(campaign, candidates,
                           + backend.nvm_values())
             rejected.append(SpecRanking(spec, False, str(e), storage,
                                         float("nan")))
+            if trace is not None:
+                trace.event("advise.candidate", spec=spec, survivable=False,
+                            storage_values=storage)
             continue
         cost = (float("nan") if probe_values is None
                 else _probe_persist_cost(backend, probe_values))
@@ -353,10 +385,17 @@ def advise_spec(campaign, candidates,
         # accounting (peer-RAM ESR) reflects a persisted run too
         storage = int(backend.memory_overhead_values() + backend.nvm_values())
         ranked.append(SpecRanking(spec, True, "", storage, cost))
+        if trace is not None:
+            trace.event("advise.candidate", spec=spec, survivable=True,
+                        storage_values=storage, persist_cost_s=cost)
     ranked.sort(key=lambda r: (r.storage_values,
                                math.inf if math.isnan(r.persist_cost_s)
                                else r.persist_cost_s))
-    return SpecAdvice(chosen=ranked[0].spec if ranked else None,
+    chosen = ranked[0].spec if ranked else None
+    if trace is not None:
+        trace.event("advise.chosen", spec=chosen,
+                    survivors=len(ranked), rejected=len(rejected))
+    return SpecAdvice(chosen=chosen,
                       ranked=tuple(ranked), rejected=tuple(rejected))
 
 
@@ -411,6 +450,17 @@ class SolveReport:
     ``persist_hidden_fraction`` is the derived headline metric:
     ``persist_hidden_s / persist_cost_s`` (0.0 for a sync run or when
     nothing was persisted).
+
+    Observability (DESIGN.md §9):
+
+    - ``persist_aborts`` — staged-but-uncommitted persist events dropped
+      because the staging nodes died before the commit window.
+    - ``metrics`` — the :class:`~repro.obs.MetricsRegistry` the solve
+      loop incremented; every numeric counter above is a *derived view*
+      of it (read back out at exit), so
+      :func:`repro.obs.check_report_consistency` can re-verify the
+      derivation and :func:`repro.obs.check_trace_report` can close the
+      triangle against a tracer's event counts.
     """
 
     iterations: int = 0
@@ -426,15 +476,26 @@ class SolveReport:
     persist_exposed_s: float = 0.0
     persist_drain_s: float = 0.0
     persist_events: int = 0
+    persist_aborts: int = 0
     persist_mode: str = "sync"
     residual_history: List[float] = dataclasses.field(default_factory=list)
     solver: str = ""
+    metrics: Optional[MetricsRegistry] = None
 
     @property
     def persist_hidden_fraction(self) -> float:
         if self.persist_cost_s <= 0.0:
             return 0.0
         return self.persist_hidden_s / self.persist_cost_s
+
+    @property
+    def persist_exposed_per_iteration(self) -> float:
+        """Exposed persist seconds per completed iteration — the
+        paper's time-overhead quantity normalized to solver progress
+        (0.0 before any iteration completes)."""
+        if self.iterations <= 0:
+            return 0.0
+        return self.persist_exposed_s / self.iterations
 
 
 def should_persist(k: int, period: int, history: int = 2) -> bool:
@@ -497,10 +558,17 @@ def solve(
             f"persist_mode must be one of {PERSIST_MODES}, "
             f"got {config.persist_mode!r}")
     overlap = config.persist_mode == "overlap"
+    # Normalize the tracer ONCE: a falsy tracer (None, NULL_TRACER)
+    # becomes None here, and every instrumentation site below guards
+    # with an identity check — so with tracing disabled the loop
+    # executes zero tracer callables per iteration (the obs guard test).
+    trace = config.tracer or None
     session = None
     if backend is not None:
         session = open_persist_session(backend, schema,
                                        getattr(op, "partition", None))
+        if trace is not None:
+            session.set_tracer(trace)
     history = schema.history
 
     campaign = _as_campaign(failures)
@@ -511,13 +579,21 @@ def solve(
             # survive before any iteration runs (duck-typed backends
             # declare nothing, so nothing is provable — they run
             # unplanned and fail at the fetch instead).
-            plan_campaign(campaign, caps)
+            plan_campaign(campaign, caps, tracer=trace)
 
     state = solver.init_state(op, precond, b, x0)
     step = solver.make_step(op, precond)
     bnorm = float(jnp.linalg.norm(b))
-    report = SolveReport(solver=solver.name, persist_mode=config.persist_mode)
+    # The solve loop increments this registry at every accounting site;
+    # the report's numeric counters are read back OUT of it at exit
+    # (derived views, DESIGN.md §9) so registry and report cannot drift.
+    metrics = MetricsRegistry(solver=solver.name, mode=config.persist_mode)
+    report = SolveReport(solver=solver.name, persist_mode=config.persist_mode,
+                         metrics=metrics)
     captured: Dict[int, object] = {}
+    if trace is not None:
+        trace.event("solve.begin", solver=solver.name,
+                    mode=config.persist_mode, maxiter=config.maxiter)
 
     at_events: Dict[int, List[FailureEvent]] = {}
     during_events: Dict[int, List[FailureEvent]] = {}
@@ -540,11 +616,15 @@ def solve(
 
     def _note_committed(st, cost: float, window_s: float) -> None:
         nonlocal snapshot, last_persisted_k, consecutive
-        report.persist_cost_s += cost
-        report.persist_events += 1
+        metrics.histogram("persist.commit_s", phase="persist").observe(cost)
+        metrics.counter("persist.commit").inc()
         hidden = min(cost, window_s)
-        report.persist_hidden_s += hidden
-        report.persist_exposed_s += cost - hidden
+        metrics.histogram("persist.hidden_s", phase="persist").observe(hidden)
+        metrics.histogram("persist.exposed_s",
+                          phase="persist").observe(cost - hidden)
+        if trace is not None:
+            trace.event("persist.commit", k=int(st.k), cost_s=cost,
+                        hidden_s=hidden, exposed_s=cost - hidden)
         k_c = int(st.k)
         consecutive = consecutive + 1 if last_persisted_k == k_c - 1 else 1
         last_persisted_k = k_c
@@ -560,8 +640,11 @@ def solve(
     def persist_begin(st) -> None:
         nonlocal staged_state
         rset = solver.recovery_set(st)
-        report.persist_stage_s += session.begin(
-            rset.k, rset.scalars, rset.vectors)
+        stage_cost = session.begin(rset.k, rset.scalars, rset.vectors)
+        metrics.histogram("persist.stage_s",
+                          phase="persist").observe(stage_cost)
+        if trace is not None:
+            trace.event("persist.begin", k=rset.k, stage_s=stage_cost)
         staged_state = st
 
     def persist_commit(window_s: float = 0.0) -> None:
@@ -575,8 +658,12 @@ def solve(
     def persist_abort() -> None:
         # The session side is aborted by session.fail() / fail_storage();
         # here we only drop the driver-side bookkeeping so the dead event
-        # is never counted or committed.
+        # is never counted or committed (it does count as an abort).
         nonlocal staged_state
+        if staged_state is not None:
+            metrics.counter("persist.abort").inc()
+            if trace is not None:
+                trace.event("persist.abort", k=int(staged_state.k))
         staged_state = None
 
     def persist_point(st) -> None:
@@ -609,9 +696,15 @@ def solve(
         st_wiped = st
         while True:
             events_handled += 1
+            metrics.counter("recovery.absorbed").inc()
+            if trace is not None:
+                trace.event("recovery.absorbed", blocks=tuple(new),
+                            prd=prd_hit)
             if prd_hit:
                 session.fail_storage()
-                report.storage_failures += 1
+                metrics.counter("storage.kill").inc()
+                if trace is not None:
+                    trace.event("storage.kill", k=k)
                 prd_hit = False
             failed = sorted(set(failed) | set(new))
             if new:
@@ -619,12 +712,21 @@ def solve(
                 session.fail(tuple(new))
             # Drain barrier: outstanding persistence settles (or is torn
             # away) before the durable recovery point is read.
-            report.persist_drain_s += session.drain()
+            drain_cost = session.drain()
+            metrics.histogram("persist.drain_s",
+                              phase="recovery").observe(drain_cost)
+            if trace is not None:
+                trace.event("persist.drain", cost_s=drain_cost)
             assert snapshot is not None, \
                 "no completed persistence run before failure"
             k_rec = int(snapshot.k)
             ks = tuple(range(k_rec - history + 1, k_rec + 1))
-            sets = session.fetch(tuple(failed), ks)
+            if trace is None:
+                sets = session.fetch(tuple(failed), ks)
+            else:
+                with trace.span("recovery.fetch", blocks=tuple(failed),
+                                runs=ks):
+                    sets = session.fetch(tuple(failed), ks)
             if overlap_queue:
                 # A second failure lands while this recovery is in
                 # flight: the fetch above is stale, restart with the
@@ -632,7 +734,12 @@ def solve(
                 nxt = overlap_queue.pop(0)
                 new = list(nxt.blocks)
                 prd_hit = nxt.prd
-                report.recovery_restarts += 1
+                metrics.counter("recovery.restart").inc()
+                if trace is not None:
+                    trace.event("failure.inject", k=k,
+                                blocks=tuple(nxt.blocks), prd=nxt.prd,
+                                overlapping=True)
+                    trace.event("recovery.restart", blocks=tuple(nxt.blocks))
                 continue
             # Rollback-agreement cross-check (DESIGN.md §8): the backend
             # answers the rollback question from its own slots; it must
@@ -647,15 +754,28 @@ def solve(
                     f"but the backend's durable_run() reports {dr}; "
                     f"backend and driver must agree before reconstruction "
                     f"(DESIGN.md §8)")
-            st_new = solver.reconstruct(
-                op, precond, b,
-                snapshot=snapshot,
-                failed_blocks=list(failed),
-                sets=sets,
-                local_method=config.local_solve,
-            )
-            report.wasted_iterations += k - k_rec
-            report.failures_recovered += events_handled
+            if trace is None:
+                st_new = solver.reconstruct(
+                    op, precond, b,
+                    snapshot=snapshot,
+                    failed_blocks=list(failed),
+                    sets=sets,
+                    local_method=config.local_solve,
+                )
+            else:
+                with trace.span("recovery.reconstruct",
+                                blocks=tuple(failed), k_rec=k_rec):
+                    st_new = solver.reconstruct(
+                        op, precond, b,
+                        snapshot=snapshot,
+                        failed_blocks=list(failed),
+                        sets=sets,
+                        local_method=config.local_solve,
+                    )
+            metrics.counter("solve.wasted_iterations").inc(k - k_rec)
+            if trace is not None:
+                trace.event("recovery.rollback", from_k=k, to_k=k_rec,
+                            wasted=k - k_rec)
             return st_new
 
     # Iteration 0 counts as persisted so the first run completes early.
@@ -682,13 +802,18 @@ def solve(
             if session is None:
                 raise RuntimeError(
                     "failure injected but no recovery backend configured")
+            if trace is not None:
+                trace.event("failure.inject", k=k, blocks=tuple(ev.blocks),
+                            prd=ev.prd, overlapping=False)
             if not ev.blocks:
                 # Storage-only event: the PRD node dies but no compute
                 # state is lost, so the solve continues.  The loss
                 # surfaces — loudly — at the next recovery fetch unless
                 # the backend's capabilities cover it.
                 session.fail_storage()
-                report.storage_failures += 1
+                metrics.counter("storage.kill").inc()
+                if trace is not None:
+                    trace.event("storage.kill", k=k)
                 continue
             state = run_recovery(ev, state, k)
             if int(state.k) in capture_states_at:
@@ -696,7 +821,11 @@ def solve(
             continue
 
         t0 = time.perf_counter()
-        state = step(state)
+        if trace is None:          # identity guard: the disabled hot path
+            state = step(state)    # runs zero tracer callables
+        else:
+            with trace.span("iteration.step", k=k):
+                state = step(state)
         if staged_state is not None:
             # Overlap window: the commit of iteration k's payload rides
             # behind iteration k+1's compute.
@@ -714,4 +843,30 @@ def solve(
     report.iterations = int(state.k)
     report.final_relres = solver.residual_norm(state) / bnorm
     report.converged = report.converged or report.final_relres < config.tol
+    # Derived views (DESIGN.md §9): the report's numeric accounting is
+    # read back out of the registry the loop incremented, so registry
+    # and report agree by construction (check_report_consistency
+    # re-verifies; check_trace_report closes the triangle to the trace).
+    report.wasted_iterations = metrics.counter_value("solve.wasted_iterations")
+    report.failures_recovered = metrics.counter_value("recovery.absorbed")
+    report.recovery_restarts = metrics.counter_value("recovery.restart")
+    report.storage_failures = metrics.counter_value("storage.kill")
+    report.persist_events = metrics.counter_value("persist.commit")
+    report.persist_aborts = metrics.counter_value("persist.abort")
+    report.persist_cost_s = metrics.histogram_total("persist.commit_s",
+                                                    phase="persist")
+    report.persist_stage_s = metrics.histogram_total("persist.stage_s",
+                                                     phase="persist")
+    report.persist_hidden_s = metrics.histogram_total("persist.hidden_s",
+                                                      phase="persist")
+    report.persist_exposed_s = metrics.histogram_total("persist.exposed_s",
+                                                       phase="persist")
+    report.persist_drain_s = metrics.histogram_total("persist.drain_s",
+                                                     phase="recovery")
+    metrics.gauge("solve.iterations").set(report.iterations)
+    metrics.gauge("solve.converged").set(1.0 if report.converged else 0.0)
+    if trace is not None:
+        trace.event("solve.end", iterations=report.iterations,
+                    converged=report.converged,
+                    final_relres=report.final_relres)
     return state, report, captured

@@ -31,6 +31,7 @@ import pytest
 from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
 from repro.core import JacobiPreconditioner, make_poisson_problem
 from repro.nvm.backend import UnrecoverableFailure, backend_names
+from repro.obs import Tracer, check_trace_report
 from repro.solvers import (
     FailureCampaign,
     FailureEvent,
@@ -169,15 +170,23 @@ def check_verdict_matches_runtime(spec: str, seed: int) -> str:
         return "rejected"
 
     # --- accepted: the solve must recover onto the reference trajectory
+    # (traced: the obs cross-check below locks trace == report == plan
+    # for every accepted campaign in the sweep)
     ref = _reference()
-    state, rep, cap = solve(solver, op, b, pre, config, backend=backend,
-                            failures=campaign,
+    tracer = Tracer()
+    state, rep, cap = solve(solver, op, b, pre,
+                            dataclasses_replace(config, tracer=tracer),
+                            backend=backend, failures=campaign,
                             capture_states_at=[CHECK_K])
     assert rep.converged, (spec, seed)
     assert rep.failures_recovered == sum(1 + r.restarts
                                          for r in plan.recoveries)
     assert rep.recovery_restarts == sum(r.restarts for r in plan.recoveries)
     assert rep.storage_failures == plan.storage_losses
+    # trace-event counts == report counters == registry (ISSUE 6): the
+    # tracer saw every failure, recovery, restart, commit, and abort
+    # the report claims, for this spec family too.
+    check_trace_report(tracer, rep)
     _state_fields_close(cap[CHECK_K], ref["cap"])
     x = np.asarray(state.x)
     assert float(np.linalg.norm(x - ref["x"])

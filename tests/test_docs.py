@@ -18,7 +18,7 @@ sys.path.insert(0, str(REPO / "tools"))
 from check_docs import python_blocks  # noqa: E402
 
 DOC_FILES = ["README.md", "docs/recovery-format.md", "docs/backend-api.md",
-             "docs/erasure-coding.md"]
+             "docs/erasure-coding.md", "docs/observability.md"]
 
 
 @pytest.mark.parametrize("doc", DOC_FILES)
@@ -37,10 +37,12 @@ def test_check_docs_cli_passes_on_repo_docs():
     out = subprocess.run(
         [sys.executable, str(REPO / "tools" / "check_docs.py"),
          "README.md", "DESIGN.md", "docs/recovery-format.md",
-         "docs/backend-api.md", "docs/erasure-coding.md"],
+         "docs/backend-api.md", "docs/erasure-coding.md",
+         "docs/observability.md"],
         cwd=REPO, capture_output=True, text=True)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "backend matrix covers" in out.stdout
+    assert "span taxonomy covers" in out.stdout
 
 
 def test_check_api_cli_passes_on_repo():
@@ -93,6 +95,36 @@ def test_check_docs_flags_undocumented_backend_family(tmp_path):
     fresh.write_text("backends: "
                      + " ".join(f"`{n}`" for n in sorted(families))
                      + " `erasure(c x4+p)` `erasure(c x6+2p)`\n")
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"), str(fresh)],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_check_docs_flags_undocumented_span_name(tmp_path):
+    """The ISSUE 6 freshness gate: an observability doc missing an
+    emitted span/event name fails the docs job, so new instrumentation
+    cannot land undocumented (names are string literals at call sites,
+    which is what makes the textual scan complete)."""
+    from check_docs import emitted_span_names
+
+    names = emitted_span_names(REPO / "src")
+    assert {"iteration.step", "persist.commit", "recovery.fetch",
+            "stripe.degraded", "gf256.rs_decode"} <= names
+
+    stale = tmp_path / "observability.md"
+    keep = sorted(names - {"stripe.degraded"})
+    stale.write_text("spans: " + " ".join(f"`{n}`" for n in keep) + "\n")
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"), str(stale)],
+        capture_output=True, text=True)
+    assert out.returncode == 1
+    assert "'stripe.degraded' is missing" in out.stderr
+
+    fresh = tmp_path / "ok" / "observability.md"
+    fresh.parent.mkdir()
+    fresh.write_text("spans: " + " ".join(f"`{n}`" for n in sorted(names))
+                     + "\n")
     out = subprocess.run(
         [sys.executable, str(REPO / "tools" / "check_docs.py"), str(fresh)],
         capture_output=True, text=True)

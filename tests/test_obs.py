@@ -1,0 +1,308 @@
+"""Unit tests for ``repro.obs`` (ISSUE 6): the tracer's record model
+and exports, and the metrics registry's instrument semantics — no
+solver in the loop (the pipeline-level contracts live in
+``tests/test_obs_pipeline.py``)."""
+import json
+import math
+
+import pytest
+
+from repro.obs import (
+    NULL_TRACER,
+    MetricsRegistry,
+    NullTracer,
+    Tracer,
+    check_report_consistency,
+    check_trace_report,
+    from_jsonl,
+)
+
+
+def _fake_clock(start=100.0, step=0.5):
+    """A deterministic monotonic clock: 100.0, 100.5, 101.0, ..."""
+    t = [start - step]
+
+    def clock():
+        t[0] += step
+        return t[0]
+
+    return clock
+
+
+# ----------------------------------------------------------------------
+# Tracer: spans, events, nesting
+# ----------------------------------------------------------------------
+def test_span_nesting_and_ordering():
+    tr = Tracer(clock=_fake_clock())
+    with tr.span("outer", level=1):
+        tr.event("mark", at="inside")
+        with tr.span("inner", level=2):
+            pass
+    tr.event("mark", at="after")
+
+    # spans record at close: child before parent, events at their instant
+    assert [r["name"] for r in tr.records] == ["mark", "inner", "outer",
+                                               "mark"]
+    outer = next(r for r in tr.records if r["name"] == "outer")
+    inner = next(r for r in tr.records if r["name"] == "inner")
+    assert outer["depth"] == 0 and inner["depth"] == 1
+    # the child opens after and closes before its parent
+    assert inner["ts"] >= outer["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"]
+    # the mid-span event carries the nesting depth at its instant
+    mark_inside, mark_after = [r for r in tr.records if r["name"] == "mark"]
+    assert mark_inside["depth"] == 1 and mark_after["depth"] == 0
+    assert tr.names() == ["mark", "inner", "outer"]
+    assert tr.counts() == {"mark": 2, "inner": 1, "outer": 1}
+
+
+def test_span_records_on_exception():
+    tr = Tracer()
+    with pytest.raises(RuntimeError):
+        with tr.span("doomed"):
+            raise RuntimeError("boom")
+    assert [r["name"] for r in tr.records] == ["doomed"]
+    assert tr._depth == 0  # depth restored, tracer reusable
+
+
+def test_timestamps_are_relative_and_monotonic():
+    tr = Tracer(clock=_fake_clock(start=50.0, step=0.25))
+    tr.event("a")
+    tr.event("b")
+    a, b = tr.records
+    assert a["ts"] >= 0 and b["ts"] > a["ts"]
+
+
+# ----------------------------------------------------------------------
+# Label sanitization (the JSON-safety contract)
+# ----------------------------------------------------------------------
+def test_label_escaping_and_json_safety():
+    class Weird:
+        def __repr__(self):
+            return 'Weird("quote\\n")'
+
+    tr = Tracer()
+    tr.event("labels",
+             s='a "quoted"\nline',
+             nan=float("nan"),
+             inf=float("-inf"),
+             ok=1.5,
+             seq=(1, 2.0, "x"),
+             mapping={"k": float("inf"), 7: "v"},
+             obj=Weird())
+    rec = tr.records[0]
+    # strict JSON round-trip (allow_nan=False is what the exports use)
+    blob = json.dumps(rec, allow_nan=False)
+    assert json.loads(blob) == rec
+    args = rec["args"]
+    assert args["s"] == 'a "quoted"\nline'
+    assert args["nan"] == "nan" and args["inf"] == "-inf"
+    assert args["ok"] == 1.5
+    assert args["seq"] == [1, 2.0, "x"]
+    assert args["mapping"] == {"k": "inf", "7": "v"}
+    assert args["obj"] == 'Weird("quote\\n")'
+
+
+# ----------------------------------------------------------------------
+# Exports: JSONL round-trip, Chrome structure
+# ----------------------------------------------------------------------
+def test_jsonl_round_trip(tmp_path):
+    tr = Tracer(clock=_fake_clock())
+    with tr.span("s", k=3):
+        tr.event("e", blocks=(1, 2))
+    path = tmp_path / "trace.jsonl"
+    assert tr.to_jsonl(path) == 2
+    assert from_jsonl(path) == tr.records
+
+
+def test_chrome_export_structure(tmp_path):
+    tr = Tracer(clock=_fake_clock(step=0.001))
+    with tr.span("s", k=3):
+        tr.event("e")
+    path = tmp_path / "trace.json"
+    assert tr.to_chrome(path) == 2
+    doc = json.loads(path.read_text())
+    events = doc["traceEvents"]
+    assert len(events) == 2
+    span = next(e for e in events if e["ph"] == "X")
+    inst = next(e for e in events if e["ph"] == "i")
+    # microseconds, as the trace-event format requires
+    span_rec = next(r for r in tr.records if r["type"] == "span")
+    assert span["dur"] == pytest.approx(span_rec["dur"] * 1e6)
+    assert span["ts"] == pytest.approx(span_rec["ts"] * 1e6)
+    assert inst["s"] == "t"
+    for e in events:
+        assert e["cat"] == "repro" and "ts" in e and "args" in e
+
+
+# ----------------------------------------------------------------------
+# The disabled path
+# ----------------------------------------------------------------------
+def test_null_tracer_is_falsy_noop_singleton():
+    assert not NULL_TRACER and not NullTracer()
+    assert bool(Tracer())
+    s1 = NULL_TRACER.span("x", k=1)
+    s2 = NULL_TRACER.span("y")
+    assert s1 is s2  # one cached context manager: no allocations
+    with s1:
+        pass
+    assert NULL_TRACER.event("z") is None
+    assert NULL_TRACER.records == []
+    assert NULL_TRACER.counts() == {} and NULL_TRACER.names() == []
+
+
+# ----------------------------------------------------------------------
+# Metrics: instruments
+# ----------------------------------------------------------------------
+def test_counter_monotone():
+    reg = MetricsRegistry()
+    c = reg.counter("n")
+    c.inc()
+    c.inc(3)
+    assert c.value == 4
+    with pytest.raises(ValueError, match="cannot decrease"):
+        c.inc(-1)
+    assert reg.counter_value("n") == 4
+    assert reg.counter_value("never") == 0
+
+
+def test_gauge_last_write_wins():
+    reg = MetricsRegistry()
+    g = reg.gauge("g")
+    g.set(2.5)
+    g.set(1.0)
+    assert g.value == 1.0
+
+
+def test_histogram_totals_and_percentiles():
+    reg = MetricsRegistry()
+    h = reg.histogram("h")
+    for v in (3.0, 1.0, 2.0, 4.0):
+        h.observe(v)
+    assert h.count == 4
+    assert h.total == pytest.approx(10.0)
+    assert h.mean == pytest.approx(2.5)
+    assert h.percentile(50) == 2.0   # nearest-rank
+    assert h.percentile(95) == 4.0
+    assert h.percentile(0) == 1.0
+    s = h.summary()
+    assert s["min"] == 1.0 and s["max"] == 4.0 and s["count"] == 4
+    assert reg.histogram_total("h") == pytest.approx(10.0)
+    assert reg.histogram_total("absent") == 0.0
+
+
+def test_empty_histogram_summary():
+    h = MetricsRegistry().histogram("h")
+    assert h.summary() == {"count": 0, "total": 0.0}
+    assert math.isnan(h.mean) and math.isnan(h.percentile(50))
+
+
+def test_histogram_total_matches_plus_equals_accumulation():
+    """The derived-view guarantee: Histogram.total accumulates in
+    observation order, so report totals derived from the registry are
+    bit-identical to the old ``+=`` bookkeeping."""
+    import random
+
+    rng = random.Random(0)
+    values = [rng.random() * 10 ** rng.randint(-8, 2) for _ in range(500)]
+    h = MetricsRegistry().histogram("h")
+    acc = 0.0
+    for v in values:
+        h.observe(v)
+        acc += v
+    assert h.total == acc  # exact equality, not approx
+
+
+# ----------------------------------------------------------------------
+# Metrics: registry semantics
+# ----------------------------------------------------------------------
+def test_registry_base_labels_merge_and_identity():
+    reg = MetricsRegistry(solver="pcg", mode="overlap")
+    a = reg.histogram("persist.commit_s", phase="persist")
+    b = reg.histogram("persist.commit_s", phase="persist")
+    c = reg.histogram("persist.commit_s", phase="recovery")
+    assert a is b and a is not c
+    assert dict(a.labels) == {"solver": "pcg", "mode": "overlap",
+                              "phase": "persist"}
+    # label-qualified reads
+    a.observe(1.0)
+    c.observe(2.0)
+    assert reg.histogram_total("persist.commit_s",
+                               phase="persist") == pytest.approx(1.0)
+    assert reg.histogram_total("persist.commit_s",
+                               phase="recovery") == pytest.approx(2.0)
+
+
+def test_registry_refuses_kind_conflict():
+    reg = MetricsRegistry()
+    reg.counter("n")
+    with pytest.raises(ValueError, match="already registered as a counter"):
+        reg.gauge("n")
+
+
+def test_registry_iteration_and_snapshot():
+    reg = MetricsRegistry(solver="pcg")
+    reg.counter("b").inc(2)
+    reg.gauge("a").set(1.5)
+    reg.histogram("c").observe(0.5)
+    assert len(reg) == 3
+    assert [i.name for i in reg] == ["a", "b", "c"]  # sorted view
+    snap = reg.snapshot()
+    assert json.loads(json.dumps(snap)) == snap  # JSON-ready
+    by_name = {e["name"]: e for e in snap}
+    assert by_name["b"]["value"] == 2
+    assert by_name["a"]["value"] == 1.5
+    assert by_name["c"]["count"] == 1
+    assert all(e["labels"]["solver"] == "pcg" for e in snap)
+
+
+# ----------------------------------------------------------------------
+# Cross-checks
+# ----------------------------------------------------------------------
+class _FakeReport:
+    def __init__(self, metrics=None, **counts):
+        self.metrics = metrics
+        self.failures_recovered = counts.get("failures_recovered", 0)
+        self.recovery_restarts = counts.get("recovery_restarts", 0)
+        self.storage_failures = counts.get("storage_failures", 0)
+        self.persist_events = counts.get("persist_events", 0)
+        self.persist_aborts = counts.get("persist_aborts", 0)
+
+
+def test_check_report_consistency():
+    reg = MetricsRegistry()
+    reg.counter("persist.commit").inc(5)
+    ok = _FakeReport(metrics=reg, persist_events=5)
+    check_report_consistency(ok)
+    check_report_consistency(_FakeReport(metrics=None, persist_events=9))
+    bad = _FakeReport(metrics=reg, persist_events=4)
+    with pytest.raises(ValueError, match="metrics/report disagreement"):
+        check_report_consistency(bad)
+
+
+def test_check_trace_report():
+    tr = Tracer()
+    tr.event("persist.commit")
+    tr.event("persist.commit")
+    tr.event("recovery.absorbed")
+    rep = _FakeReport(persist_events=2, failures_recovered=1)
+    compared = check_trace_report(tr, rep)
+    assert compared["persist_events"] == 2
+    assert compared["failures_recovered"] == 1
+    with pytest.raises(ValueError, match="trace/report disagreement"):
+        check_trace_report(tr, _FakeReport(persist_events=3,
+                                           failures_recovered=1))
+
+
+def test_metrics_table_rendering():
+    from repro.launch.report import metrics_table
+
+    assert metrics_table(None) == "(no metrics)"
+    assert metrics_table(MetricsRegistry()) == "(no metrics)"
+    reg = MetricsRegistry(solver="pcg", mode="sync")
+    reg.counter("persist.commit").inc(3)
+    reg.histogram("persist.commit_s", phase="persist").observe(1e-3)
+    table = metrics_table(reg)
+    assert "persist.commit" in table and "phase=persist" in table
+    # base labels are factored out of the labels column
+    assert "solver=pcg" not in table

@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Gate on the BENCH_solver.json perf trajectory (ISSUE 6).
+
+Dependency-free (stdlib json only), so CI can run it before any heavy
+imports.  Two modes:
+
+  python tools/check_bench.py BENCH_solver.json
+      Validate the schema: version string, top-level keys, non-empty
+      specs, and per-spec ``modeled`` / ``counts`` / ``wall`` subtrees
+      with the required numeric keys.
+
+  python tools/check_bench.py A.json B.json
+      Validate both, then assert the determinism contract: the two
+      documents must be identical after stripping every ``wall``
+      subtree (and any ``generated`` stamp) — the bench promises that
+      everything else is a pure function of ``(seed, smoke)``.
+
+Exit status 0 on success; 1 with a diagnostic on the first violation.
+Schema: docs/observability.md §4.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+SCHEMA_VERSION = "repro-bench/v1"
+
+TOP_KEYS = ("schema", "bench", "seed", "smoke", "solver", "problem", "specs")
+MODELED_KEYS = ("persist_s_per_event", "persist_s_per_iter",
+                "exposed_persist_s_per_iter", "drain_s",
+                "storage_overhead_x")
+COUNT_KEYS = ("iterations", "converged", "persist_events", "persist_aborts",
+              "failures_recovered", "recovery_restarts", "storage_failures",
+              "wasted_iterations")
+WALL_KEYS = ("hidden_fraction", "exposed_persist_s_per_iter",
+             "iterations_per_s", "recovery_latency_s")
+
+
+class BenchError(Exception):
+    pass
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise BenchError(msg)
+
+
+def _numeric(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def validate(doc: dict, path: str = "<doc>") -> None:
+    """Raise :class:`BenchError` on the first schema violation."""
+    _require(isinstance(doc, dict), f"{path}: document must be an object")
+    for k in TOP_KEYS:
+        _require(k in doc, f"{path}: missing top-level key {k!r}")
+    _require(doc["schema"] == SCHEMA_VERSION,
+             f"{path}: schema {doc['schema']!r} != {SCHEMA_VERSION!r}")
+    _require(doc["bench"] == "solver",
+             f"{path}: bench {doc['bench']!r} != 'solver'")
+    _require(isinstance(doc["seed"], int) and not isinstance(doc["seed"], bool),
+             f"{path}: seed must be an int")
+    _require(isinstance(doc["smoke"], bool), f"{path}: smoke must be a bool")
+    _require(isinstance(doc["specs"], dict) and doc["specs"],
+             f"{path}: specs must be a non-empty object")
+    for spec, entry in doc["specs"].items():
+        where = f"{path}: specs[{spec!r}]"
+        _require(isinstance(entry, dict), f"{where} must be an object")
+        _require(isinstance(entry.get("family"), str) and entry["family"],
+                 f"{where}.family must be a non-empty string")
+        _require(spec.split("(")[0] == entry["family"],
+                 f"{where}.family {entry['family']!r} does not prefix the spec")
+        for sub, keys, numeric in (("modeled", MODELED_KEYS, MODELED_KEYS),
+                                   ("counts", COUNT_KEYS,
+                                    tuple(k for k in COUNT_KEYS
+                                          if k != "converged")),
+                                   ("wall", WALL_KEYS, WALL_KEYS)):
+            tree = entry.get(sub)
+            _require(isinstance(tree, dict), f"{where}.{sub} must be an object")
+            for k in keys:
+                _require(k in tree, f"{where}.{sub} missing key {k!r}")
+            for k in numeric:
+                _require(_numeric(tree[k]),
+                         f"{where}.{sub}.{k} must be numeric, got "
+                         f"{type(tree[k]).__name__}")
+        _require(isinstance(entry["counts"]["converged"], bool),
+                 f"{where}.counts.converged must be a bool")
+
+
+def strip_nondeterministic(doc: dict) -> dict:
+    """The determinism view: the document minus every ``wall`` subtree
+    and any top-level ``generated`` stamp."""
+    out = {k: v for k, v in doc.items() if k != "generated"}
+    out["specs"] = {spec: {k: v for k, v in entry.items() if k != "wall"}
+                    for spec, entry in doc["specs"].items()}
+    return out
+
+
+def _diff(a, b, path: str = "$") -> str:
+    """First divergence between two stripped documents, as a path."""
+    if isinstance(a, dict) and isinstance(b, dict):
+        for k in sorted(set(a) | set(b)):
+            if k not in a:
+                return f"{path}.{k}: only in second"
+            if k not in b:
+                return f"{path}.{k}: only in first"
+            d = _diff(a[k], b[k], f"{path}.{k}")
+            if d:
+                return d
+        return ""
+    if a != b:
+        return f"{path}: {a!r} != {b!r}"
+    return ""
+
+
+def check_deterministic(doc_a: dict, doc_b: dict) -> None:
+    """Raise :class:`BenchError` if the two documents differ outside
+    their ``wall`` subtrees."""
+    a, b = strip_nondeterministic(doc_a), strip_nondeterministic(doc_b)
+    d = _diff(a, b)
+    _require(not d, f"determinism violation (outside 'wall'): {d}")
+
+
+def main(argv) -> int:
+    if len(argv) not in (1, 2):
+        print("usage: check_bench.py BENCH.json [SECOND_RUN.json]",
+              file=sys.stderr)
+        return 2
+    docs = []
+    try:
+        for path in argv:
+            with open(path) as f:
+                docs.append(json.load(f))
+        for path, doc in zip(argv, docs):
+            validate(doc, path)
+            print(f"OK {path}: schema {doc['schema']}, "
+                  f"{len(doc['specs'])} specs, seed={doc['seed']}, "
+                  f"smoke={doc['smoke']}")
+        if len(docs) == 2:
+            check_deterministic(docs[0], docs[1])
+            print("OK deterministic: documents identical outside 'wall'")
+    except (BenchError, OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

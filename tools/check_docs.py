@@ -11,7 +11,13 @@ without jax installed.  Two classes of rot it catches:
 2. **Link rot** — every relative markdown link / image target must exist
    in the repository (``[text](path)``; external ``http(s)://`` and
    ``#anchor`` links are skipped).
-3. **Matrix rot** (freshness, ISSUE 4/5) — every backend *spec family*
+3. **Span-taxonomy rot** (freshness, ISSUE 6) — every span/event name
+   emitted anywhere under ``src/`` (a string literal at a
+   ``.span("...")`` / ``.event("...")`` call site — the tracing style
+   rule) must appear in ``docs/observability.md``, so new
+   instrumentation cannot land undocumented.  Runs whenever an
+   ``observability.md`` is among the checked files.
+4. **Matrix rot** (freshness, ISSUE 4/5) — every backend *spec family*
    registered in the source tree (``register_backend("name", ...)`` /
    ``register_backend_class("name", ...)``) must appear in the README's
    backend matrix, so a new backend cannot land undocumented.  Found by
@@ -101,6 +107,36 @@ def check_backend_matrix(readme: Path, repo_root: Path) -> list:
     return errors
 
 
+SPAN_CALL_RE = re.compile(
+    r"""\.(?:span|event)\(\s*['"]([A-Za-z][A-Za-z0-9_.]*)['"]""")
+
+
+def emitted_span_names(src_root: Path) -> set:
+    """Every span/event name emitted under ``src/`` — names are string
+    literals at the call site (the style rule that makes this scan
+    complete)."""
+    names = set()
+    for py in sorted(src_root.rglob("*.py")):
+        names.update(SPAN_CALL_RE.findall(py.read_text()))
+    return names
+
+
+def check_span_taxonomy(doc: Path, repo_root: Path) -> list:
+    """Freshness gate: every emitted span/event name must appear in the
+    observability doc's taxonomy."""
+    names = emitted_span_names(repo_root / "src")
+    if not names:
+        return [f"{doc}: no span/event call sites found under "
+                f"{repo_root / 'src'} — is the tree intact?"]
+    text = doc.read_text()
+    missing = sorted(n for n in names if n not in text)
+    print(f"{doc}: span taxonomy covers {len(names) - len(missing)}/"
+          f"{len(names)} emitted span/event names")
+    return [f"{doc}: emitted span/event name {n!r} is missing from the "
+            f"taxonomy — document it (see the 'Span and event taxonomy' "
+            f"section)" for n in missing]
+
+
 _MAX_PARITY_RE = re.compile(r"^MAX_PARITY\s*=\s*(\d+)", re.MULTILINE)
 
 
@@ -154,6 +190,8 @@ def main(argv) -> int:
         errors.extend(check_file(p, repo_root))
         if p.name == "README.md":
             errors.extend(check_backend_matrix(p, repo_root))
+        if p.name == "observability.md":
+            errors.extend(check_span_taxonomy(p, repo_root))
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     return 1 if errors else 0
