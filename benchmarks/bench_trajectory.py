@@ -24,6 +24,14 @@ Per spec the document separates three subtrees:
   ``recovery.fetch``/``recovery.reconstruct`` spans.  NOT compared by
   the determinism check.
 
+The document also carries a top-level ``sharded`` subtree (ISSUE 7,
+DESIGN.md §10): per device-shard count, the per-shard bytes a
+shard-kill campaign moves (``bytes`` — deterministic) and the overlap
+pipeline's hidden fraction at that shard count (``wall``).  Shard
+counts the running process cannot build a mesh for are skipped; the
+1-shard row is always present (``benchmarks/run.py --json`` fakes 8
+host devices so the committed document carries 1/4/8).
+
 Schema: docs/observability.md §4; ``tools/check_bench.py`` is the gate.
 """
 from __future__ import annotations
@@ -56,6 +64,10 @@ SPECS = (
     "erasure(nvm-prd x4+p)",
     "erasure(nvm-prd x6+2p)",
 )
+
+
+#: device-shard counts the sharded row sweeps (nblocks=8 divides all)
+SHARD_COUNTS = (1, 4, 8)
 
 
 def _smoke() -> bool:
@@ -160,7 +172,55 @@ def build(seed: int = 0, smoke: bool = None) -> dict:
                     "tol": tol,
                     "campaign": {"blocks": [1], "at_iteration": at}},
         "specs": specs,
+        "sharded": _sharded_rows(grid, tol, at),
     }
+
+
+def _sharded_rows(grid, tol: float, at: int) -> dict:
+    """The per-shard persist/recovery rows (DESIGN.md §10): for each
+    feasible device-shard count, an overlapped solve with a shard-kill
+    campaign, reporting the bytes it moved (deterministic — persist
+    traffic per shard, and a recovery fetch that moves only the lost
+    shard's slots) and the hidden fraction at that shard count
+    (wall-clock, outside the determinism contract)."""
+    import jax
+    import numpy as np
+
+    from repro.core.state import PCG_SCHEMA
+    from repro.distributed.sharding import shard_problem
+
+    # a dedicated nblocks=8 layout so every SHARD_COUNTS entry divides
+    op, b = make_poisson_problem(*grid, nblocks=8)
+    pre = JacobiPreconditioner(op)
+    slot = PCG_SCHEMA.slot_nbytes(op.partition.block_size,
+                                  np.dtype(b.dtype))
+    rows = {}
+    for nshards in SHARD_COUNTS:
+        if jax.device_count() < nshards:
+            continue    # run.py --json fakes 8 host devices; in-process
+                        # callers may only manage the 1-shard row
+        sop, sb = shard_problem(op, b, nshards)
+        solver = make_solver("pcg", sop, pre)
+        be = make_backend("nvm-prd", op, solver=solver)
+        campaign = FailureCampaign((
+            FailureEvent(shard=0, at_iteration=at),))
+        _, rep, _ = solve(solver, sop, sb, pre,
+                          SolveConfig(tol=tol, maxiter=20000,
+                                      persist_mode="overlap"),
+                          backend=be, failures=campaign)
+        rows[str(nshards)] = {
+            "bytes": {
+                "blocks_per_shard": 8 // nshards,
+                "slot_nbytes": slot,
+                "persist_bytes": rep.persist_bytes,
+                "recovery_fetch_bytes": rep.recovery_fetch_bytes,
+                "recovery_fetch_bytes_by_shard": {
+                    str(s): n for s, n in
+                    sorted(rep.recovery_fetch_bytes_by_shard.items())},
+            },
+            "wall": {"hidden_fraction": rep.persist_hidden_fraction},
+        }
+    return rows
 
 
 def rows(seed: int = 0):
@@ -178,4 +238,12 @@ def rows(seed: int = 0):
         out.append((f"trajectory_{spec}_recovery_latency_us",
                     entry["wall"]["recovery_latency_s"] * 1e6,
                     "traced recovery.fetch + recovery.reconstruct wall"))
+    for n, entry in doc["sharded"].items():
+        out.append((f"trajectory_sharded{n}_recovery_fetch_bytes",
+                    entry["bytes"]["recovery_fetch_bytes"],
+                    "bytes a shard-kill recovery moves (lost shard only)"))
+        out.append((f"trajectory_sharded{n}_hidden_fraction",
+                    entry["wall"]["hidden_fraction"],
+                    f"overlap pipeline at {n} shard(s), wall-clock "
+                    f"dependent"))
     return out

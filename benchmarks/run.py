@@ -79,6 +79,14 @@ def main() -> None:
     if opts["smoke"]:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
     os.environ["REPRO_BENCH_SEED"] = str(opts["seed"])
+    if opts["json"]:
+        # The trajectory's sharded rows (DESIGN.md §10) need a device
+        # mesh; fake 8 host devices BEFORE jax imports (flag is inert
+        # after).  CSV module runs keep the real 1-device view.
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=8").strip()
 
     import jax
     jax.config.update("jax_enable_x64", True)

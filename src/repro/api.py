@@ -139,13 +139,41 @@ class Problem:
     b: Any
     precond: Any
 
+    @property
+    def nshards(self) -> int:
+        """Device shards the operator is laid out over (1 = unsharded;
+        >1 when the operator is a
+        :class:`~repro.distributed.sharding.ShardedOperator`)."""
+        layout = getattr(self.op, "layout", None)
+        return 1 if layout is None else layout.nshards
+
+    def with_shards(self, nshards: int, mesh=None) -> "Problem":
+        """Lay this problem out over ``nshards`` devices on a 1-D
+        ``data`` mesh (:func:`repro.distributed.sharding.shard_problem`):
+        block-rows map contiguously onto shards, and the driver's
+        fail/persist/recover path becomes per-shard addressable
+        (``FailureEvent(shard=...)``).  The sharded solve is
+        bit-identical to the unsharded one (DESIGN.md §10).  Raises if
+        the problem is already sharded or fewer than ``nshards``
+        devices are visible."""
+        if getattr(self.op, "layout", None) is not None:
+            raise ValueError(
+                "problem is already sharded; shard the unsharded "
+                "problem instead of re-sharding")
+        from repro.distributed.sharding import shard_problem
+
+        sop, sb = shard_problem(self.op, self.b, nshards, mesh=mesh)
+        return dataclasses.replace(self, op=sop, b=sb)
+
     @classmethod
     def poisson(cls, nz: int, ny: Optional[int] = None,
                 nx: Optional[int] = None, nblocks: int = 4,
-                preconditioner: str = "jacobi") -> "Problem":
+                preconditioner: str = "jacobi",
+                nshards: int = 1) -> "Problem":
         """The paper's benchmark: a 7-point 3-D Poisson stencil with a
         smooth right-hand side, split into ``nblocks`` z-slabs.  ``ny``
-        and ``nx`` default to ``nz`` (a cubic grid)."""
+        and ``nx`` default to ``nz`` (a cubic grid).  ``nshards > 1``
+        device-shards the problem (see :meth:`with_shards`)."""
         op, b = make_poisson_problem(nz, ny if ny is not None else nz,
                                      nx if nx is not None else nz,
                                      nblocks=nblocks)
@@ -156,7 +184,10 @@ class Problem:
 
             raise unknown_name_error("preconditioner", preconditioner,
                                      PRECONDITIONERS) from None
-        return cls(op=op, b=b, precond=pre_cls(op))
+        problem = cls(op=op, b=b, precond=pre_cls(op))
+        if nshards != 1:
+            problem = problem.with_shards(nshards)
+        return problem
 
     @classmethod
     def from_parts(cls, op, b, precond=None) -> "Problem":
@@ -197,12 +228,17 @@ class ResilienceSpec:
     campaign planner on (:func:`plan_campaign`, DESIGN.md §8): a
     campaign the backend's capabilities provably cannot survive is
     rejected with :class:`UnsurvivableCampaignError` before iteration
-    0.  ``options`` are forwarded to the backend factory."""
+    0.  ``nshards`` pins the expected device-shard count of the
+    problem: ``None`` accepts any layout, an integer makes
+    :func:`solve` refuse a problem whose shard axis disagrees (the
+    spec was sized/planned for that layout).  ``options`` are
+    forwarded to the backend factory."""
 
     backend: Union[str, PersistenceBackend, None] = "nvm-prd"
     persist_mode: str = "sync"
     period: int = 1
     plan_campaigns: bool = True
+    nshards: Optional[int] = None
     dtype: Any = np.float64
     options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -297,6 +333,13 @@ def solve(
         resilience = ResilienceSpec(resilience)
     if resilience is None:
         resilience = ResilienceSpec(backend=None)
+    if (resilience.nshards is not None
+            and resilience.nshards != problem.nshards):
+        raise ValueError(
+            f"ResilienceSpec.nshards={resilience.nshards} but the "
+            f"problem is laid out over nshards={problem.nshards}; "
+            f"re-shard with Problem.with_shards({resilience.nshards}) "
+            f"or drop the spec's shard pin")
 
     built_solver = solver.build(problem)
     backend = resilience.build(problem, built_solver)

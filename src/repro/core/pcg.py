@@ -43,26 +43,33 @@ from repro.solvers import driver as _driver
 PCGConfig = SolveConfig
 
 
-def init_state(op, precond, b: jax.Array, x0: Optional[jax.Array] = None) -> PCGState:
+def init_state(op, precond, b: jax.Array, x0: Optional[jax.Array] = None,
+               dot: Callable = jnp.vdot) -> PCGState:
     x0 = jnp.zeros_like(b) if x0 is None else x0
     r0 = b - op.apply(x0)
     z0 = precond.apply(r0)
     return PCGState(
-        x=x0, r=r0, z=z0, p=z0, rz=jnp.vdot(r0, z0),
+        x=x0, r=r0, z=z0, p=z0, rz=dot(r0, z0),
         beta_prev=jnp.zeros((), b.dtype), k=jnp.zeros((), jnp.int32),
     )
 
 
-def make_step(op_apply: Callable, precond_apply: Callable) -> Callable[[PCGState], PCGState]:
-    """One PCG iteration (Algorithm 1 lines 3-8) as a jittable pure fn."""
+def make_step(op_apply: Callable, precond_apply: Callable,
+              dot: Callable = jnp.vdot) -> Callable[[PCGState], PCGState]:
+    """One PCG iteration (Algorithm 1 lines 3-8) as a jittable pure fn.
+
+    ``dot`` is the inner product; the zoo path passes the order-pinned
+    block-hierarchical one (:func:`repro.core.spmv.make_det_dot`) so the
+    trajectory is bitwise sharding-independent, while the fused perf path
+    keeps ``jnp.vdot``."""
 
     def step(state: PCGState) -> PCGState:
         ap = op_apply(state.p)                       # (A)SpMV
-        alpha = state.rz / jnp.vdot(state.p, ap)     # line 3
+        alpha = state.rz / dot(state.p, ap)          # line 3
         x = state.x + alpha * state.p                # line 4
         r = state.r - alpha * ap                     # line 5
         z = precond_apply(r)                         # line 6
-        rz_new = jnp.vdot(r, z)
+        rz_new = dot(r, z)
         beta = rz_new / state.rz                     # line 7
         p = z + beta * state.p                       # line 8
         return PCGState(x=x, r=r, z=z, p=p, rz=rz_new, beta_prev=beta, k=state.k + 1)

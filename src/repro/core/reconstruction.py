@@ -148,12 +148,17 @@ def reconstruct(
     p_cur_f: jax.Array,
     beta: float,
     local_method: str = "auto",
+    dot=jnp.vdot,
 ) -> PCGState:
-    """Run Algorithm 3 and return the fully reconstructed PCG state at ``k``."""
+    """Run Algorithm 3 and return the fully reconstructed PCG state at ``k``.
+
+    ``dot`` must match the solve loop's inner product (the zoo passes the
+    order-pinned one) so the restored ``rz`` is bitwise what the unfailed
+    trajectory would carry."""
     x, r, z, p = reconstruct_direction_form(
         op, precond, b, state_surviving, failed_blocks,
         p_prev_f, p_cur_f, beta, local_method)
-    rz = jnp.vdot(r, z)  # global reduction (replaces the replicated scalar)
+    rz = dot(r, z)  # global reduction (replaces the replicated scalar)
     return PCGState(
         x=x, r=r, z=z, p=p, rz=rz,
         beta_prev=jnp.asarray(beta, x.dtype), k=state_surviving.k,

@@ -37,6 +37,65 @@ def _grid_sharding(mesh: Mesh, shard_axes) -> NamedSharding:
     return NamedSharding(mesh, P(shard_axes, None, None))
 
 
+# ----------------------------------------------------------------------
+# Deterministic block-hierarchical reductions (sharded exactness).
+#
+# A global ``jnp.vdot`` lets XLA pick a reduction order per compiled
+# program, so the same mathematical dot produces different low-order
+# bits unsharded vs sharded (and even between two sharded layouts).
+# The zoo's bit-exactness contract — a sharded solve reproduces the
+# unsharded trajectory exactly — therefore pins the order explicitly:
+#
+# 1. per-block partial sums (``reshape(nblocks, -1).sum(axis=1)``):
+#    each partial is computed entirely within one block, which the
+#    ``data``-mesh layout never splits across devices, so the partials
+#    are bitwise identical under any 1-D block sharding;
+# 2. an explicit replication constraint gathers the partials (the only
+#    collective — an all-gather of ``nblocks`` scalars);
+# 3. an UNROLLED left-to-right add chain combines them.  ``jnp.sum``
+#    over the partials is NOT enough: XLA fuses it context-dependently
+#    and reassociates across shardings, which is exactly the
+#    nondeterminism being excluded.
+# ----------------------------------------------------------------------
+def make_det_dot(nblocks: int, mesh: Optional[Mesh] = None):
+    """Build ``dot(a, b)``: a block-hierarchical, order-pinned inner
+    product that is bitwise identical across device shardings (and
+    equal to the unsharded result).  ``mesh`` is the 1-D ``data`` mesh
+    of a sharded operator (None for single-device runs)."""
+    rep = None if mesh is None else NamedSharding(mesh, P())
+
+    def det_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+        partials = (a * b).reshape(nblocks, -1).sum(axis=1)
+        if rep is not None:
+            partials = jax.lax.with_sharding_constraint(partials, rep)
+        acc = partials[0]
+        for i in range(1, nblocks):
+            acc = acc + partials[i]
+        return acc
+
+    return det_dot
+
+
+def make_det_rowdots(nblocks: int, mesh: Optional[Mesh] = None):
+    """Row-batched :func:`make_det_dot`: ``rowdots(M, w)[i] == det_dot(M[i],
+    w)`` for an ``(rows, n)`` matrix — the Arnoldi projection shape.  The
+    per-row partials use the same block-hierarchical order, so the result
+    is bitwise sharding-independent like the scalar form."""
+    rep = None if mesh is None else NamedSharding(mesh, P())
+
+    def det_rowdots(m_rows: jax.Array, w: jax.Array) -> jax.Array:
+        rows = m_rows.shape[0]
+        partials = (m_rows * w[None, :]).reshape(rows, nblocks, -1).sum(axis=2)
+        if rep is not None:
+            partials = jax.lax.with_sharding_constraint(partials, rep)
+        acc = partials[:, 0]
+        for i in range(1, nblocks):
+            acc = acc + partials[:, i]
+        return acc
+
+    return det_rowdots
+
+
 def make_sharded_pcg_step(
     mesh: Mesh,
     shard_axes=("pod", "data", "model"),

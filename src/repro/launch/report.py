@@ -115,6 +115,13 @@ def solve_report_rows(r) -> Dict[str, str]:
         # normalized per iteration; appended last so the columns before
         # it stay byte-stable for existing tables
         "exposed/iter us": f"{r.persist_exposed_per_iteration * 1e6:.3f}",
+        # trailing columns (ISSUE 7): sharded-solve accounting — the
+        # device-shard count and the per-shard byte traffic totals the
+        # metrics registry meters (DESIGN.md §10); appended after the
+        # ISSUE-6 column for the same byte-stable-prefix reason
+        "shards": str(getattr(r, "nshards", 1)),
+        "persist KiB": f"{getattr(r, 'persist_bytes', 0) / 1024:.1f}",
+        "fetch KiB": f"{getattr(r, 'recovery_fetch_bytes', 0) / 1024:.1f}",
     }
 
 

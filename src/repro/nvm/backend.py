@@ -85,6 +85,30 @@ OVERLAP_NATIVE = "native"
 OVERLAP_DRIVER_STAGED = "driver-staged"
 
 
+@dataclass
+class SessionTraffic:
+    """Per-device-shard byte accounting at the driver/session boundary
+    (DESIGN.md §10).
+
+    Counts *logical* slot-payload bytes as the driver sees them — what a
+    node's NIC moves to (persist) or from (recovery fetch) the
+    persistence service for the blocks a shard owns.  Composites meter
+    once at the top of the storage tree: a replicated quorum read serves
+    from ONE mirror, an erasure fetch reassembles K chunks that sum to
+    one slot, so in both cases a recovery moves exactly the lost shard's
+    slot bytes.  Keys are shard indices (everything is shard 0 for an
+    unsharded solve)."""
+
+    persist_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    fetch_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def note_persist(self, shard: int, nbytes: int) -> None:
+        self.persist_bytes[shard] = self.persist_bytes.get(shard, 0) + nbytes
+
+    def note_fetch(self, shard: int, nbytes: int) -> None:
+        self.fetch_bytes[shard] = self.fetch_bytes.get(shard, 0) + nbytes
+
+
 @dataclass(frozen=True)
 class BackendCapabilities:
     """What a backend *guarantees*, declared instead of implied.
@@ -140,6 +164,21 @@ class BackendCapabilities:
                 f"{self.max_storage_failures}; a backend survives PRD "
                 f"loss exactly when it tolerates >= 1 storage failure")
 
+    def max_shard_failures(self, blocks_per_shard: int) -> Optional[int]:
+        """The shard-axis view of ``max_block_failures``: how many
+        whole device shards (of ``blocks_per_shard`` contiguous blocks
+        each, DESIGN.md §10) a fetch can serve concurrently.  ``None``
+        passes through from an unbounded block budget; otherwise the
+        declared block budget is divided — killing a shard kills every
+        block it owns, so a backend that serves ``B`` block failures
+        serves exactly ``B // blocks_per_shard`` shard failures."""
+        if blocks_per_shard < 1:
+            raise ValueError(
+                f"blocks_per_shard must be >= 1, got {blocks_per_shard}")
+        if self.max_block_failures is None:
+            return None
+        return self.max_block_failures // blocks_per_shard
+
 
 class PersistSession(abc.ABC):
     """One solve's persistence stream on an open backend.
@@ -158,6 +197,45 @@ class PersistSession(abc.ABC):
         self.schema = schema
         self._storage_down = False
         self._trace = None
+        self.traffic = SessionTraffic()
+        self._shard_of_block: Optional[Dict[int, int]] = None
+        self._slot_nbytes: Optional[int] = None
+
+    # -- per-shard addressing (DESIGN.md §10) ---------------------------
+    def bind_shards(self, shard_of_block: Optional[Mapping[int, int]] = None,
+                    slot_nbytes: Optional[int] = None) -> None:
+        """Bind the block -> owning-device-shard map (and the per-block
+        slot payload size) so the session can address and meter traffic
+        per shard.  The driver calls this once per solve with the
+        operator's :class:`~repro.distributed.sharding.ShardLayout` map
+        (all blocks -> shard 0 when the solve is unsharded); composite
+        sessions propagate the *map* to their children like
+        :meth:`set_tracer`, but only the driver-bound top session gets
+        ``slot_nbytes`` — metering happens once, at the driver boundary."""
+        if shard_of_block is not None:
+            self._shard_of_block = {int(b): int(s)
+                                    for b, s in shard_of_block.items()}
+        if slot_nbytes is not None:
+            self._slot_nbytes = int(slot_nbytes)
+
+    def _note_persist_traffic(self) -> None:
+        """Meter one persisted event: every block's slot chunk leaves its
+        owning shard.  No-op until the driver binds both the shard map
+        and the slot size."""
+        if self._slot_nbytes is None or self._shard_of_block is None:
+            return
+        for shard in self._shard_of_block.values():
+            self.traffic.note_persist(shard, self._slot_nbytes)
+
+    def _note_fetch_traffic(self, blocks: Sequence[int], nruns: int) -> None:
+        """Meter one served recovery fetch: only the failed blocks' slot
+        chunks move, ``nruns`` (= ``schema.history``) slots per block —
+        the recovery-traffic-proportional-to-the-lost-shard claim."""
+        if self._slot_nbytes is None or self._shard_of_block is None:
+            return
+        for blk in blocks:
+            self.traffic.note_fetch(self._shard_of_block.get(int(blk), 0),
+                                    nruns * self._slot_nbytes)
 
     # -- observability (DESIGN.md §9) -----------------------------------
     def set_tracer(self, tracer) -> None:
@@ -386,6 +464,7 @@ class CoreBackendSession(PersistSession):
     def begin(self, k, scalars, vectors) -> float:
         if self._storage_down:
             return 0.0  # the put target is gone; the event is lost
+        self._note_persist_traffic()
         if self._native:
             return self._backend.persist_begin(k, scalars, vectors)
         return self._front.begin(k, scalars, vectors)
@@ -420,6 +499,7 @@ class CoreBackendSession(PersistSession):
     def persist(self, k, scalars, vectors) -> float:
         if self._storage_down:
             return 0.0
+        self._note_persist_traffic()
         cost = self._backend.persist_set(k, scalars, vectors)
         if self._trace is not None:
             self._trace.event("backend.write", k=k, cost_s=cost,
@@ -440,7 +520,9 @@ class CoreBackendSession(PersistSession):
 
     def fetch(self, failed_blocks, ks) -> List[RecoverySet]:
         self._check_storage()
-        return self._backend.recover_set(tuple(failed_blocks), tuple(ks))
+        sets = self._backend.recover_set(tuple(failed_blocks), tuple(ks))
+        self._note_fetch_traffic(failed_blocks, len(ks))
+        return sets
 
     def durable_run(self) -> Optional[int]:
         if self._storage_down:
@@ -481,6 +563,7 @@ class LegacyBackendSession(PersistSession):
     def begin(self, k, scalars, vectors) -> float:
         if self._storage_down:
             return 0.0  # the flush target is gone; the event is lost
+        self._note_persist_traffic()
         return self._front.begin(k, scalars, vectors)
 
     def commit(self) -> float:
@@ -501,6 +584,7 @@ class LegacyBackendSession(PersistSession):
     def persist(self, k, scalars, vectors) -> float:
         if self._storage_down:
             return 0.0
+        self._note_persist_traffic()
         return self._flush(k, scalars, vectors)
 
     def fail(self, blocks: Sequence[int]) -> None:
@@ -518,6 +602,7 @@ class LegacyBackendSession(PersistSession):
             raise RuntimeError(
                 f"legacy backend {type(self._backend).__name__}.recover "
                 f"returned iterations {(prev.k, cur.k)}, wanted {tuple(ks)}")
+        self._note_fetch_traffic(failed_blocks, len(ks))
         return [RecoverySet(prev.k, {"beta": prev.beta}, {"p": prev.p}),
                 RecoverySet(cur.k, {"beta": cur.beta}, {"p": cur.p})]
 
@@ -587,6 +672,13 @@ class ReplicatedSession(PersistSession):
         for s in self._children:
             s.set_tracer(tracer)
 
+    def bind_shards(self, shard_of_block=None, slot_nbytes=None) -> None:
+        # children get the addressing map but not the meter (slot size):
+        # replicated traffic is counted once at the top of the tree
+        super().bind_shards(shard_of_block, slot_nbytes)
+        for s in self._children:
+            s.bind_shards(shard_of_block=shard_of_block)
+
     def _live(self) -> List[PersistSession]:
         return [s for s in self._children if not s._storage_down]
 
@@ -595,6 +687,8 @@ class ReplicatedSession(PersistSession):
     # (the mirroring overhead the benchmarks report), while staging is
     # still a single local copy per child pipeline.
     def begin(self, k, scalars, vectors) -> float:
+        if self._live():
+            self._note_persist_traffic()
         return sum(s.begin(k, scalars, vectors) for s in self._live())
 
     def commit(self) -> float:
@@ -617,6 +711,8 @@ class ReplicatedSession(PersistSession):
             s.abort()
 
     def persist(self, k, scalars, vectors) -> float:
+        if self._live():
+            self._note_persist_traffic()
         return sum(s.persist(k, scalars, vectors) for s in self._live())
 
     def fail(self, blocks: Sequence[int]) -> None:
@@ -651,6 +747,9 @@ class ReplicatedSession(PersistSession):
             if self._trace is not None:
                 self._trace.event("mirror.fetch", mirror=i, served=True,
                                   skipped=len(errors))
+            # quorum semantics: ONE mirror served the whole request, so
+            # the recovery moved exactly one copy of the lost slots
+            self._note_fetch_traffic(failed_blocks, len(ks))
             return sets
         raise UnrecoverableFailure(
             f"no mirror of {len(self._children)} can serve iterations "
@@ -730,7 +829,12 @@ class TieredSession(PersistSession):
         self._front._stager.tracer = self._trace
         self._child.set_tracer(tracer)
 
+    def bind_shards(self, shard_of_block=None, slot_nbytes=None) -> None:
+        super().bind_shards(shard_of_block, slot_nbytes)
+        self._child.bind_shards(shard_of_block=shard_of_block)
+
     def begin(self, k, scalars, vectors) -> float:
+        self._note_persist_traffic()
         return self._front.begin(k, scalars, vectors)
 
     def commit(self) -> float:
@@ -744,6 +848,7 @@ class TieredSession(PersistSession):
         self._child.abort()
 
     def persist(self, k, scalars, vectors) -> float:
+        self._note_persist_traffic()
         return self._child.persist(k, scalars, vectors)
 
     def fail(self, blocks: Sequence[int]) -> None:
@@ -756,7 +861,9 @@ class TieredSession(PersistSession):
         self._storage_down = self._child._storage_down
 
     def fetch(self, failed_blocks, ks) -> List[RecoverySet]:
-        return self._child.fetch(failed_blocks, ks)
+        sets = self._child.fetch(failed_blocks, ks)
+        self._note_fetch_traffic(failed_blocks, len(ks))
+        return sets
 
     def durable_run(self) -> Optional[int]:
         return self._child.durable_run()
@@ -878,6 +985,11 @@ class ErasureSession(PersistSession):
         for s in self._children:
             s.set_tracer(tracer)
 
+    def bind_shards(self, shard_of_block=None, slot_nbytes=None) -> None:
+        super().bind_shards(shard_of_block, slot_nbytes)
+        for s in self._children:
+            s.bind_shards(shard_of_block=shard_of_block)
+
     # -- stripe geometry ------------------------------------------------
     def _rotation(self) -> int:
         """Allocate the next stripe's rotation offset.  Stepping by P
@@ -948,6 +1060,7 @@ class ErasureSession(PersistSession):
     def begin(self, k, scalars, vectors) -> float:
         if self._storage_down:
             return 0.0  # the stripe is gone; the event is lost
+        self._note_persist_traffic()
         return self._fan_out("begin", k, scalars, vectors)
 
     def commit(self) -> float:
@@ -963,6 +1076,7 @@ class ErasureSession(PersistSession):
     def persist(self, k, scalars, vectors) -> float:
         if self._storage_down:
             return 0.0
+        self._note_persist_traffic()
         return self._fan_out("persist", k, scalars, vectors)
 
     # -- failure + recovery ---------------------------------------------
@@ -1008,8 +1122,12 @@ class ErasureSession(PersistSession):
                 f"reconstructs at most {be.nparity} — for iterations "
                 f"{tuple(ks)} over blocks {tuple(failed_blocks)}: "
                 + "; ".join(errors))
-        return [self._assemble(per_child, i, kk, tuple(failed_blocks))
+        sets = [self._assemble(per_child, i, kk, tuple(failed_blocks))
                 for i, kk in enumerate(ks)]
+        # the K data chunks (or their parity reconstruction) reassemble
+        # into exactly one slot copy per failed block per run
+        self._note_fetch_traffic(failed_blocks, len(ks))
+        return sets
 
     def _assemble(self, per_child, i: int, kk: int,
                   failed: Tuple[int, ...]) -> RecoverySet:

@@ -15,6 +15,7 @@ from repro.obs.metrics import (  # noqa: F401
     Gauge,
     Histogram,
     MetricsRegistry,
+    SHARD_BYTE_PAIRS,
     TRACE_REPORT_PAIRS,
     check_report_consistency,
     check_trace_report,

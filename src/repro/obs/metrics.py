@@ -38,6 +38,7 @@ __all__ = [
     "check_report_consistency",
     "check_trace_report",
     "TRACE_REPORT_PAIRS",
+    "SHARD_BYTE_PAIRS",
 ]
 
 
@@ -190,6 +191,28 @@ class MetricsRegistry:
         inst = self._instruments.get((name, _label_key(merged)))
         return 0 if inst is None else int(inst.value)
 
+    def counter_total(self, name: str) -> int:
+        """Sum of a counter over every label set it was incremented
+        under — the whole-solve view of a per-shard counter such as
+        ``recovery.fetch_bytes`` (0 when the name is unknown)."""
+        return sum(int(inst.value) for (n, _), inst
+                   in self._instruments.items()
+                   if n == name and inst.kind == "counter")
+
+    def counter_by_label(self, name: str, label: str) -> Dict[Any, int]:
+        """Per-label-value breakdown of a counter, e.g.
+        ``counter_by_label("persist.bytes", "shard") -> {0: ..., 1: ...}``
+        (the derived view behind ``SolveReport.*_by_shard``)."""
+        out: Dict[Any, int] = {}
+        for (n, _), inst in self._instruments.items():
+            if n != name or inst.kind != "counter":
+                continue
+            labels = dict(inst.labels)
+            if label in labels:
+                key = labels[label]
+                out[key] = out.get(key, 0) + int(inst.value)
+        return out
+
     def histogram_total(self, name: str, **labels: Any) -> float:
         merged = dict(self.base_labels)
         merged.update(labels)
@@ -228,6 +251,16 @@ TRACE_REPORT_PAIRS: Tuple[Tuple[str, str], ...] = (
 )
 
 
+#: per-shard byte counter -> (total field, by-shard dict field).  The
+#: counters carry a ``shard=N`` label per device shard; the report's
+#: totals and breakdowns are both derived views of them.
+SHARD_BYTE_PAIRS: Tuple[Tuple[str, str, str], ...] = (
+    ("persist.bytes", "persist_bytes", "persist_bytes_by_shard"),
+    ("recovery.fetch_bytes", "recovery_fetch_bytes",
+     "recovery_fetch_bytes_by_shard"),
+)
+
+
 def check_report_consistency(report) -> None:
     """Verify the report's counters really are views of its attached
     registry (``report.metrics``); raises ``ValueError`` naming the
@@ -243,6 +276,21 @@ def check_report_consistency(report) -> None:
             raise ValueError(
                 f"metrics/report disagreement: registry counter "
                 f"{metric!r} = {got} but SolveReport.{field} = {want}")
+    for metric, total_field, by_shard_field in SHARD_BYTE_PAIRS:
+        got_total = registry.counter_total(metric)
+        want_total = getattr(report, total_field, 0)
+        if got_total != want_total:
+            raise ValueError(
+                f"metrics/report disagreement: registry counter "
+                f"{metric!r} totals {got_total} but "
+                f"SolveReport.{total_field} = {want_total}")
+        got_by = registry.counter_by_label(metric, "shard")
+        want_by = getattr(report, by_shard_field, {})
+        if got_by != want_by:
+            raise ValueError(
+                f"metrics/report disagreement: registry counter "
+                f"{metric!r} per shard is {got_by} but "
+                f"SolveReport.{by_shard_field} = {want_by}")
 
 
 def check_trace_report(tracer, report) -> Dict[str, int]:

@@ -27,6 +27,24 @@ import numpy as np
 from repro.core.state import RecoverySchema, RecoverySet, wipe_vectors
 
 
+def solver_dot(op):
+    """The inner product a zoo solver must use: block-hierarchical with a
+    pinned combine order (:func:`repro.core.spmv.make_det_dot`), so the
+    trajectory is bitwise identical whether ``op`` is a plain operator or
+    a :class:`~repro.distributed.sharding.ShardedOperator` on any shard
+    count — the sharded-exactness contract (DESIGN.md §10)."""
+    from repro.core.spmv import make_det_dot
+
+    return make_det_dot(op.nblocks, getattr(op, "mesh", None))
+
+
+def base_operator(op):
+    """Unwrap a :class:`~repro.distributed.sharding.ShardedOperator` (or
+    any delegating wrapper exposing ``base``) for code that dispatches on
+    the concrete operator type, e.g. closed-form spectral bounds."""
+    return getattr(op, "base", op)
+
+
 class RecoverableSolver(abc.ABC):
     """Base class / protocol for ESR-recoverable iterative solvers."""
 
@@ -71,7 +89,10 @@ class RecoverableSolver(abc.ABC):
 
     # ------------------------------------------------------------------
     def residual_norm(self, state) -> float:
-        return float(jnp.linalg.norm(state.r))
+        # Host-side numpy norm: gathers the (possibly device-sharded)
+        # residual and reduces in a fixed order, so the convergence check
+        # reads the same bits whether the solve is sharded or not.
+        return float(np.linalg.norm(np.asarray(state.r)))
 
     def wipe(self, state, partition, blocks):
         """Simulate failure: failed shards of every distributed vector (and

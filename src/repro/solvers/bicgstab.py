@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.reconstruction import solve_x_from_residual
 from repro.core.state import RecoverySchema, RecoverySet
-from repro.solvers.base import RecoverableSolver
+from repro.solvers.base import RecoverableSolver, solver_dot
 
 BICGSTAB_SCHEMA = RecoverySchema(
     "bicgstab", vectors=("r", "p"), scalars=("rho", "alpha", "omega"),
@@ -68,18 +68,24 @@ class BiCGStabSolver(RecoverableSolver):
             raise RuntimeError("init_state must run before make_step")
         rhat0 = self._rhat0
         op_apply, precond_apply = op.apply, precond.apply
+        dot = solver_dot(op)
 
         def step(state: BiCGStabState) -> BiCGStabState:
-            rho_new = jnp.vdot(rhat0, state.r)
+            rho_new = dot(rhat0, state.r)
             beta = (rho_new / state.rho) * (state.alpha / state.omega)
             p = state.r + beta * (state.p - state.omega * state.v)
-            phat = precond_apply(p)
+            # phat/shat feed both an SpMV and the x update; without a
+            # barrier XLA re-fuses their recomputation into the x
+            # kernel, and that fusion choice is placement-dependent —
+            # sharded and unsharded compilations split by ~1 ulp in x
+            # (and only x).  Materializing them once pins the bits.
+            phat = jax.lax.optimization_barrier(precond_apply(p))
             v = op_apply(phat)
-            alpha = rho_new / jnp.vdot(rhat0, v)
+            alpha = rho_new / dot(rhat0, v)
             s = state.r - alpha * v
-            shat = precond_apply(s)
+            shat = jax.lax.optimization_barrier(precond_apply(s))
             t = op_apply(shat)
-            omega = jnp.vdot(t, s) / jnp.vdot(t, t)
+            omega = dot(t, s) / dot(t, t)
             x = state.x + alpha * phat + omega * shat
             r = s - omega * t
             return BiCGStabState(x=x, r=r, p=p, v=v, rho=rho_new, alpha=alpha,

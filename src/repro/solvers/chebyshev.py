@@ -64,6 +64,12 @@ def spectral_bounds(op, precond, power_iters: int = 100,
         JacobiPreconditioner,
         StencilOperator,
     )
+    from repro.solvers.base import base_operator
+
+    # Bounds are placement-independent: unwrap a ShardedOperator so the
+    # closed-form stencil route still fires (a sharded solve must use the
+    # SAME lam_min/lam_max as the unsharded one, bit for bit).
+    op = base_operator(op)
 
     if isinstance(op, StencilOperator) and isinstance(
             precond, (IdentityPreconditioner, JacobiPreconditioner)):

@@ -112,15 +112,25 @@ class FailureEvent:
     mirror) — any later recovery fetch raises
     :class:`~repro.nvm.backend.UnrecoverableFailure`.  A ``prd`` event
     may carry no blocks (the PRD dies alone; the solve itself
-    continues, unprotected)."""
+    continues, unprotected).
 
-    blocks: Tuple[int, ...]
+    ``shard`` names a *device shard* instead of (or in addition to)
+    explicit blocks: on a sharded solve the event kills every block the
+    shard owns (the paper's per-node failure unit).  The driver resolves
+    ``shard`` against the operator's
+    :class:`~repro.distributed.sharding.ShardLayout` before planning, so
+    the planner and the recovery engine only ever see blocks; a
+    ``shard`` event on an unsharded solve is an error (there is no
+    device to kill)."""
+
+    blocks: Tuple[int, ...] = ()
     at_iteration: Optional[int] = None
     during_recovery_at: Optional[int] = None
     prd: bool = False
+    shard: Optional[int] = None
 
     def __post_init__(self):
-        if not self.blocks and not self.prd:
+        if not self.blocks and self.shard is None and not self.prd:
             raise ValueError("a FailureEvent needs at least one block")
         if (self.at_iteration is None) == (self.during_recovery_at is None):
             raise ValueError(
@@ -130,6 +140,9 @@ class FailureEvent:
                 f"FailureEvent.at_iteration must be >= 1 (iteration 0 "
                 f"precedes the first persisted recovery point), got "
                 f"{self.at_iteration}")
+        if self.shard is not None and self.shard < 0:
+            raise ValueError(
+                f"FailureEvent.shard must be >= 0, got {self.shard}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,8 +195,38 @@ class CampaignPlan:
     storage_losses: int
 
 
+def resolve_shard_events(campaign, layout) -> "FailureCampaign":
+    """Resolve ``FailureEvent(shard=...)`` triggers into block sets.
+
+    ``layout`` is the operator's
+    :class:`~repro.distributed.sharding.ShardLayout` (None for an
+    unsharded solve).  Each shard event's block set becomes the union of
+    its explicit blocks and the blocks the shard owns, so everything
+    downstream — the planner's budget walk, ``solver.wipe``,
+    ``session.fail``, the recovery fetch — speaks blocks only.  A shard
+    event without a layout is refused (there is no device to kill), and
+    an out-of-range shard index fails here, before iteration 0."""
+    campaign = _as_campaign(campaign)
+    if not any(e.shard is not None for e in campaign.events):
+        return campaign
+    if layout is None:
+        raise ValueError(
+            "FailureEvent(shard=...) needs a sharded solve: the operator "
+            "carries no ShardLayout (wrap the problem with "
+            "repro.distributed.sharding.shard_problem, or address blocks "
+            "directly)")
+    events = []
+    for ev in campaign.events:
+        if ev.shard is None:
+            events.append(ev)
+            continue
+        blocks = tuple(sorted(set(ev.blocks) | set(layout.blocks_of(ev.shard))))
+        events.append(dataclasses.replace(ev, blocks=blocks, shard=None))
+    return FailureCampaign(tuple(events))
+
+
 def plan_campaign(campaign, capabilities: BackendCapabilities,
-                  tracer=None) -> CampaignPlan:
+                  tracer=None, layout=None) -> CampaignPlan:
     """Check a campaign against a backend's declared capabilities.
 
     Walks the campaign exactly as the solve loop will execute it —
@@ -203,10 +246,13 @@ def plan_campaign(campaign, capabilities: BackendCapabilities,
     :class:`UnsurvivableCampaignError` naming the violating
     :class:`FailureEvent` otherwise.  ``campaign`` may be a
     :class:`FailureCampaign` or any sequence :func:`solve` accepts.
+    ``layout`` (a :class:`~repro.distributed.sharding.ShardLayout`)
+    resolves ``shard=`` events to their block sets first.
     A ``tracer`` (repro.obs) records the verdict as a ``plan.accept``
     or ``plan.reject`` event.
     """
     trace = tracer or None
+    campaign = resolve_shard_events(campaign, layout)
     try:
         plan = _plan_campaign_walk(campaign, capabilities)
     except UnsurvivableCampaignError as e:
@@ -451,6 +497,19 @@ class SolveReport:
     ``persist_hidden_s / persist_cost_s`` (0.0 for a sync run or when
     nothing was persisted).
 
+    Sharded-solve accounting (DESIGN.md §10) — logical slot-payload
+    bytes at the driver/session boundary, metered by the session's
+    :class:`~repro.nvm.backend.SessionTraffic` and surfaced through the
+    registry as ``persist.bytes`` / ``recovery.fetch_bytes`` counters
+    labeled ``shard=N``:
+
+    - ``nshards`` — device shards of the solve (1 when unsharded).
+    - ``persist_bytes`` / ``persist_bytes_by_shard`` — slot bytes each
+      shard's blocks shipped to the persistence service.
+    - ``recovery_fetch_bytes`` / ``recovery_fetch_bytes_by_shard`` —
+      slot bytes recovery fetches moved back; proportional to the lost
+      shard, not the problem (the paper's recovery-traffic claim).
+
     Observability (DESIGN.md §9):
 
     - ``persist_aborts`` — staged-but-uncommitted persist events dropped
@@ -478,6 +537,13 @@ class SolveReport:
     persist_events: int = 0
     persist_aborts: int = 0
     persist_mode: str = "sync"
+    nshards: int = 1
+    persist_bytes: int = 0
+    recovery_fetch_bytes: int = 0
+    persist_bytes_by_shard: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    recovery_fetch_bytes_by_shard: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
     residual_history: List[float] = dataclasses.field(default_factory=list)
     solver: str = ""
     metrics: Optional[MetricsRegistry] = None
@@ -563,15 +629,32 @@ def solve(
     # with an identity check — so with tracing disabled the loop
     # executes zero tracer callables per iteration (the obs guard test).
     trace = config.tracer or None
+    # Sharded solve? The operator carries the block -> device-shard
+    # layout and the 1-D data mesh (repro.distributed.sharding); both
+    # stay None on a plain single-device operator.
+    layout = getattr(op, "layout", None)
+    mesh = getattr(op, "mesh", None)
+    part = getattr(op, "partition", None)
     session = None
     if backend is not None:
-        session = open_persist_session(backend, schema,
-                                       getattr(op, "partition", None))
+        session = open_persist_session(backend, schema, part)
         if trace is not None:
             session.set_tracer(trace)
+        binder = getattr(session, "bind_shards", None)
+        if part is not None and binder is not None:
+            # Per-shard session addressing (DESIGN.md §10): each block's
+            # slot chunks belong to its owning device shard, and the
+            # session meters persist/fetch bytes against that shard.
+            # (External sessions without bind_shards simply go unmetered.)
+            shard_map = (layout.shard_of_block_map() if layout is not None
+                         else {blk: 0 for blk in range(part.nblocks)})
+            binder(shard_of_block=shard_map,
+                   slot_nbytes=schema.slot_nbytes(part.block_size,
+                                                  np.dtype(b.dtype)))
     history = schema.history
 
-    campaign = _as_campaign(failures)
+    # shard=... events become block events before anything else sees them
+    campaign = resolve_shard_events(failures, layout)
     if (config.plan_campaign and campaign.events and backend is not None):
         caps = getattr(backend, "capabilities", None)
         if isinstance(caps, BackendCapabilities):
@@ -582,8 +665,16 @@ def solve(
             plan_campaign(campaign, caps, tracer=trace)
 
     state = solver.init_state(op, precond, b, x0)
+    if mesh is not None:
+        # Pin the canonical placement before the step jits: vectors
+        # block-sharded on "data", scalars replicated.  Recovery re-pins
+        # below so the step never recompiles for a drifted layout.
+        from repro.distributed.sharding import place_state
+
+        state = place_state(state, mesh, solver.state_vector_fields)
     step = solver.make_step(op, precond)
-    bnorm = float(jnp.linalg.norm(b))
+    # host-side norm: gathers a sharded b and reduces deterministically
+    bnorm = float(np.linalg.norm(np.asarray(b)))
     # The solve loop increments this registry at every accounting site;
     # the report's numeric counters are read back OUT of it at exit
     # (derived views, DESIGN.md §9) so registry and report cannot drift.
@@ -776,6 +867,14 @@ def solve(
             if trace is not None:
                 trace.event("recovery.rollback", from_k=k, to_k=k_rec,
                             wasted=k - k_rec)
+            if mesh is not None:
+                # the replacement shard rejoins the canonical placement;
+                # without this the jitted step would recompile against
+                # whatever layout reconstruction's scatters produced
+                from repro.distributed.sharding import place_state
+
+                st_new = place_state(st_new, mesh,
+                                     solver.state_vector_fields)
             return st_new
 
     # Iteration 0 counts as persisted so the first run completes early.
@@ -863,6 +962,22 @@ def solve(
                                                        phase="persist")
     report.persist_drain_s = metrics.histogram_total("persist.drain_s",
                                                      phase="recovery")
+    # Per-shard traffic (DESIGN.md §10): fold the session's byte meter
+    # into the registry as shard-labeled counters, then read the report
+    # fields back OUT of the registry like every other counter above.
+    report.nshards = 1 if layout is None else layout.nshards
+    traffic = getattr(session, "traffic", None)
+    if traffic is not None:
+        for shard, nbytes in sorted(traffic.persist_bytes.items()):
+            metrics.counter("persist.bytes", shard=shard).inc(nbytes)
+        for shard, nbytes in sorted(traffic.fetch_bytes.items()):
+            metrics.counter("recovery.fetch_bytes", shard=shard).inc(nbytes)
+    report.persist_bytes = metrics.counter_total("persist.bytes")
+    report.recovery_fetch_bytes = metrics.counter_total("recovery.fetch_bytes")
+    report.persist_bytes_by_shard = metrics.counter_by_label(
+        "persist.bytes", "shard")
+    report.recovery_fetch_bytes_by_shard = metrics.counter_by_label(
+        "recovery.fetch_bytes", "shard")
     metrics.gauge("solve.iterations").set(report.iterations)
     metrics.gauge("solve.converged").set(1.0 if report.converged else 0.0)
     if trace is not None:

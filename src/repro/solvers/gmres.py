@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.spmv import make_det_dot, make_det_rowdots
 from repro.core.state import RecoverySchema
 from repro.solvers.base import IterateOnlyRecovery, RecoverableSolver
 
@@ -47,12 +48,24 @@ class RestartedGMRESSolver(IterateOnlyRecovery, RecoverableSolver):
     def make_step(self, op, precond):
         m = self.m
         op_apply, precond_apply = op.apply, precond.apply
+        # Order-pinned reductions (sharded bit-exactness): the Arnoldi
+        # projections become block-hierarchical row-dots, the dense
+        # ``basis.T @ h`` combines become explicit row-weighted sums over
+        # the (replicated) basis axis — no reduction ever crosses the
+        # sharded vector axis with an XLA-chosen order.
+        dot = make_det_dot(op.nblocks, getattr(op, "mesh", None))
+        rowdots = make_det_rowdots(op.nblocks, getattr(op, "mesh", None))
+
+        def combine(rows, coeffs):
+            # sum_i coeffs[i] * rows[i] — elementwise along the vector
+            # axis, reduced over the small replicated row axis.
+            return (rows * coeffs[:, None]).sum(axis=0)
 
         def cycle(state: GMRESState) -> GMRESState:
             x, r = state.x, state.r
             n = r.shape[0]
             dt = r.dtype
-            beta = jnp.linalg.norm(r)
+            beta = jnp.sqrt(dot(r, r))
             tiny = jnp.asarray(np.finfo(np.dtype(dt)).tiny, dt)
             v0 = r / jnp.maximum(beta, tiny)
             basis = jnp.zeros((m + 1, n), dt).at[0].set(v0)
@@ -64,12 +77,12 @@ class RestartedGMRESSolver(IterateOnlyRecovery, RecoverableSolver):
                 # CGS2: unset rows of ``basis`` are zero, so the full-matrix
                 # products only project onto the j+1 built vectors; the
                 # second pass restores MGS-grade orthogonality.
-                h1 = basis @ w
-                w = w - basis.T @ h1
-                h2 = basis @ w
-                w = w - basis.T @ h2
+                h1 = rowdots(basis, w)
+                w = w - combine(basis, h1)
+                h2 = rowdots(basis, w)
+                w = w - combine(basis, h2)
                 h = h1 + h2
-                hnorm = jnp.linalg.norm(w)
+                hnorm = jnp.sqrt(dot(w, w))
                 basis = basis.at[j + 1].set(w / jnp.maximum(hnorm, tiny))
                 hess = hess.at[:, j].set(h).at[j + 1, j].set(hnorm)
                 return basis, hess
@@ -77,7 +90,7 @@ class RestartedGMRESSolver(IterateOnlyRecovery, RecoverableSolver):
             basis, hess = jax.lax.fori_loop(0, m, arnoldi, (basis, hess))
             rhs = jnp.zeros((m + 1,), dt).at[0].set(beta)
             y, *_ = jnp.linalg.lstsq(hess, rhs)
-            dx = precond_apply(basis[:m].T @ y)
+            dx = precond_apply(combine(basis[:m], y))
             x_new = x + dx
             r_new = r - op_apply(dx)  # = b - A x_new (exact arithmetic)
             return GMRESState(x=x_new, r=r_new, k=state.k + 1)

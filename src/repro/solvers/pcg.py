@@ -20,7 +20,7 @@ from repro.core import reconstruction
 # module object defers attribute lookup to call time.
 from repro.core import pcg as _core_pcg
 from repro.core.state import PCG_SCHEMA, RecoverySet
-from repro.solvers.base import RecoverableSolver
+from repro.solvers.base import RecoverableSolver, solver_dot
 
 
 class PCGSolver(RecoverableSolver):
@@ -30,10 +30,11 @@ class PCGSolver(RecoverableSolver):
     state_nan_scalars = ("rz",)
 
     def init_state(self, op, precond, b, x0=None):
-        return _core_pcg.init_state(op, precond, b, x0)
+        return _core_pcg.init_state(op, precond, b, x0, dot=solver_dot(op))
 
     def make_step(self, op, precond):
-        return jax.jit(_core_pcg.make_step(op.apply, precond.apply))
+        return jax.jit(_core_pcg.make_step(op.apply, precond.apply,
+                                           dot=solver_dot(op)))
 
     def recovery_set(self, state) -> RecoverySet:
         return RecoverySet(
@@ -53,4 +54,5 @@ class PCGSolver(RecoverableSolver):
             p_cur_f=jnp.asarray(cur.vectors["p"], b.dtype),
             beta=cur.scalars["beta"],
             local_method=local_method,
+            dot=solver_dot(op),
         )

@@ -58,6 +58,14 @@ def test_build_validates_against_schema(smoke_docs):
         "storage_overhead_x"] == pytest.approx(1.25)
     assert specs["replicated(nvm-prd x2)"]["modeled"][
         "storage_overhead_x"] == pytest.approx(2.0)
+    # the sharded subtree (DESIGN.md §10): the 1-shard row is always
+    # buildable in-process, and the per-shard fetch map sums exactly
+    assert "1" in doc["sharded"]
+    for n, entry in doc["sharded"].items():
+        bts = entry["bytes"]
+        assert bts["persist_bytes"] > 0, n
+        assert bts["recovery_fetch_bytes"] == sum(
+            bts["recovery_fetch_bytes_by_shard"].values()), n
     # strict JSON (allow_nan=False is what run.py writes with)
     json.dumps(doc, allow_nan=False)
 
@@ -118,6 +126,12 @@ def test_cli_json_mode_threads_seed(tmp_path):
     assert doc["seed"] == 3
     # the seed picks the campaign trigger: 4 + (seed % 5)
     assert doc["problem"]["campaign"]["at_iteration"] == 7
+    # the CLI fakes 8 host devices, so the full shard sweep is present
+    # and the recovery fetch moves only the lost shard's slots
+    assert set(doc["sharded"]) == {"1", "4", "8"}
+    fetch = {n: e["bytes"]["recovery_fetch_bytes"]
+             for n, e in doc["sharded"].items()}
+    assert fetch["1"] == 4 * fetch["4"] == 8 * fetch["8"]
 
     gate = subprocess.run(
         [sys.executable, str(REPO / "tools" / "check_bench.py"), str(out)],

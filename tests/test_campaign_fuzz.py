@@ -230,6 +230,135 @@ def test_campaign_fuzz_property(seed):
     check_verdict_matches_runtime("erasure(nvm-prd x6+2p)", seed)
 
 
+# ------------------------------------------------ the sharded fuzz leg
+# (ISSUE 7): seeded campaigns also draw sharded configurations — a
+# device-shard count in {1, 2, 4, 8} and shard-addressed events mixed
+# with block events — against every registered spec family.  Runs in a
+# subprocess (the multi_device fixture) because the faked devices must
+# exist before jax imports.  Verdicts, both ways:
+#
+# - accept => the sharded solve is BITWISE identical to the unsharded
+#   solve of the shard-resolved campaign (the DESIGN.md §10 invariant),
+#   and lands on the no-failure trajectory to the sweep's tolerance;
+# - reject => the planner's error names a violating campaign event.
+_SHARDED_SUB = r"""
+import json
+import numpy as np
+import jax
+jax.config.update("jax_enable_x64", True)
+from repro.core.poisson import make_poisson_problem, PRECONDITIONERS
+from repro.distributed.sharding import shard_problem
+from repro.solvers import driver as drv
+from repro.solvers.driver import (FailureCampaign, FailureEvent,
+                                  SolveConfig, UnsurvivableCampaignError,
+                                  plan_campaign, resolve_shard_events)
+from repro.solvers.registry import make_solver, make_backend
+
+NBLOCKS = 8
+SPECS = ("esr", "nvm-homogeneous", "nvm-prd", "tiered(nvm-homogeneous)",
+         "replicated(nvm-prd x2)", "replicated(nvm-prd x3)",
+         "erasure(nvm-prd x4+p)", "erasure(nvm-prd x6+2p)")
+SEEDS = (0, 1, 2, 3)
+
+op, b = make_poisson_problem(8, 8, 8, nblocks=NBLOCKS)
+pre = PRECONDITIONERS["jacobi"](op)
+
+
+def random_sharded_campaign(seed, nshards):
+    rng = np.random.default_rng(seed)
+    events = []
+    n_at = int(rng.integers(1, 3))
+    ats = sorted(rng.choice(np.arange(3, 13), size=n_at, replace=False))
+    for at in ats:
+        prd = bool(rng.random() < 0.45)
+        if rng.random() < 0.5:   # device-addressed kill
+            ev = FailureEvent(shard=int(rng.integers(nshards)),
+                              at_iteration=int(at), prd=prd)
+        else:                    # block-addressed kill
+            nb = int(rng.integers(1, 3))
+            blocks = tuple(sorted(int(x) for x in
+                                  rng.choice(NBLOCKS, nb, replace=False)))
+            ev = FailureEvent(blocks=blocks, at_iteration=int(at), prd=prd)
+        events.append(ev)
+    return FailureCampaign(tuple(events))
+
+
+def random_config(seed):
+    rng = np.random.default_rng(10_000 + seed)
+    return SolveConfig(
+        tol=1e-10, maxiter=5000,
+        persist_mode=str(rng.choice(["sync", "overlap"])),
+        persistence_period=int(rng.choice([1, 3])))
+
+
+# the no-failure reference trajectory (unsharded)
+_s = make_solver("pcg", op, pre)
+ref_state, ref_rep, _ = drv.solve(
+    _s, op, b, pre, config=SolveConfig(tol=1e-10, maxiter=5000))
+assert ref_rep.converged
+ref_x = np.asarray(ref_state.x)
+
+cases = []
+unsharded = {}
+for seed in SEEDS:
+    rng = np.random.default_rng(20_000 + seed)
+    nshards = int(rng.choice([1, 2, 4, 8]))
+    sop, sb = shard_problem(op, b, nshards)
+    campaign = random_sharded_campaign(seed, nshards)
+    config = random_config(seed)
+    resolved = resolve_shard_events(campaign, sop.layout)
+    for spec in SPECS:
+        solver = make_solver("pcg", sop, pre)
+        backend = make_backend(spec, op, solver=solver)
+        rec = {"spec": spec, "seed": seed, "nshards": nshards}
+        try:
+            plan_campaign(campaign, backend.capabilities,
+                          layout=sop.layout)
+        except UnsurvivableCampaignError as e:
+            rec["verdict"] = "rejected"
+            rec["names_event"] = any(repr(ev) in str(e)
+                                     for ev in resolved.events)
+            cases.append(rec)
+            continue
+        st, rep, _ = drv.solve(solver, sop, sb, pre, config=config,
+                               backend=backend, failures=campaign)
+        key = (seed, spec)
+        if key not in unsharded:
+            s0 = make_solver("pcg", op, pre)
+            b0 = make_backend(spec, op, solver=s0)
+            st0, _, _ = drv.solve(s0, op, b, pre, config=config,
+                                  backend=b0, failures=resolved)
+            unsharded[key] = np.asarray(st0.x).tobytes()
+        x = np.asarray(st.x)
+        rec["verdict"] = "accepted"
+        rec["converged"] = bool(rep.converged)
+        rec["bit_identical"] = x.tobytes() == unsharded[key]
+        rec["close_to_ref"] = bool(
+            np.linalg.norm(x - ref_x) / np.linalg.norm(ref_x) < 1e-8)
+        cases.append(rec)
+
+print(json.dumps({"cases": cases}))
+"""
+
+
+@pytest.mark.multi_device
+def test_campaign_fuzz_sharded_leg(multi_device):
+    out = multi_device.run(_SHARDED_SUB, ndevices=8, timeout=1800)
+    cases = out["cases"]
+    assert len(cases) == len(SPECS) * len(SEEDS)
+    verdicts = {c["verdict"] for c in cases}
+    assert verdicts == {"accepted", "rejected"}, \
+        "seed set must exercise both planner verdicts"
+    for c in cases:
+        ctx = (c["spec"], c["seed"], c["nshards"])
+        if c["verdict"] == "accepted":
+            assert c["converged"], ctx
+            assert c["bit_identical"], ctx
+            assert c["close_to_ref"], ctx
+        else:
+            assert c["names_event"], ctx
+
+
 # ------------------------------------------------ the advisor acceptance
 def test_advisor_picks_k2p_over_mirror_for_double_storage_loss():
     """ISSUE 5 acceptance: for a campaign whose recovery fetches after

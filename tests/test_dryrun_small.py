@@ -1,18 +1,12 @@
 """Dry-run machinery regression test on a small (2,2,2) host-device mesh.
 
-Runs in a SUBPROCESS so the 8-device XLA flag never touches this test
-process (smoke tests must keep seeing 1 device).
+Runs in a SUBPROCESS (the ``multi_device`` fixture) so the 8-device XLA
+flag never touches this test process (smoke tests must keep seeing 1
+device).
 """
-import json
-import os
-import subprocess
-import sys
-
 import pytest
 
 _SUB = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, jax
 import dataclasses as dc
 from repro.distributed.sharding import set_rules
@@ -53,14 +47,9 @@ print(json.dumps(out))
 """
 
 
-def test_dryrun_small_mesh():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("XLA_FLAGS", None)
-    res = subprocess.run([sys.executable, "-c", _SUB], capture_output=True,
-                         text=True, env=env, timeout=480)
-    assert res.returncode == 0, res.stderr[-2000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
+@pytest.mark.multi_device
+def test_dryrun_small_mesh(multi_device):
+    out = multi_device.run(_SUB, ndevices=8, timeout=480)
     # train cell compiled, has compute and collectives
     tr = out["llama3_8b/train_4k"]
     assert tr["flops"] > 0 and tr["peak"] > 0

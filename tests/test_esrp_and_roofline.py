@@ -1,10 +1,5 @@
 """Regression tests for bugs found during the build, plus roofline-parser
 units and a true multi-device elastic-restore test."""
-import json
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -92,8 +87,6 @@ def test_roofline_terms_and_bottleneck():
 # elastic restore: checkpoint saved on 1 device restored across 8
 # ----------------------------------------------------------------------
 _SUB = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, sys, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.ft.checkpoint import CheckpointConfig, NVMCheckpointManager
@@ -113,7 +106,8 @@ print(json.dumps({"step": step, "ndev": ndev,
 """
 
 
-def test_elastic_restore_across_device_counts(tmp_path):
+@pytest.mark.multi_device
+def test_elastic_restore_across_device_counts(tmp_path, multi_device):
     from repro.ft.checkpoint import CheckpointConfig, NVMCheckpointManager
 
     # save on THIS process (1 device)
@@ -122,13 +116,8 @@ def test_elastic_restore_across_device_counts(tmp_path):
     tree = {"w": w, "b": jnp.ones((8,))}
     mgr.save(tree, step=42)
 
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("XLA_FLAGS", None)
-    res = subprocess.run([sys.executable, "-c", _SUB, str(tmp_path)],
-                         capture_output=True, text=True, env=env, timeout=240)
-    assert res.returncode == 0, res.stderr[-1500:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
+    out = multi_device.run(_SUB, ndevices=8, argv=[str(tmp_path)],
+                           timeout=240)
     assert out["step"] == 42
     assert out["ndev"] == 8                      # resharded onto 8 devices
     assert abs(out["sum"] - float(w.sum())) < 1e-3

@@ -26,6 +26,10 @@ Two invariants the docs CI job enforces on every push:
    ``repro.solvers`` and ``repro.api``, and a smoke advise confirms
    the double-loss campaign picks the K+2p stripe over the triple
    mirror on footprint grounds.
+6. **Shard-axis coherence** (ISSUE 7) — every backend's
+   ``max_shard_failures(blocks_per_shard)`` is a coherent view of its
+   block budget, and the façade's shard fields (``Problem.nshards``,
+   ``ResilienceSpec.nshards``) are enforced.
 
 Usage: ``PYTHONPATH=src python tools/check_api.py``
 Exit status is non-zero when anything is broken.  Requires jax+numpy
@@ -200,6 +204,70 @@ def check_erasure_parity_coherence() -> list:
     return errors
 
 
+def check_shard_axis_coherence() -> list:
+    """The ISSUE 7 capability rule: every backend's shard-axis failure
+    budget (``max_shard_failures``) must be a coherent view of its
+    block budget — identity at one block per shard, monotone
+    non-increasing as shards grow, and never promising more blocks
+    than ``max_block_failures`` covers.  Plus the façade's shard-axis
+    fields: an unsharded problem reports ``nshards == 1`` and a
+    ``ResilienceSpec`` pinned to a different shard count is refused by
+    ``api.solve`` before anything runs."""
+    import numpy as np
+
+    from repro.core.state import PCG_SCHEMA
+    from repro.nvm.backend import backend_names, create_backend
+
+    errors = []
+    for name in backend_names():
+        be = create_backend(name, nblocks=8, block_size=8,
+                            dtype=np.float64, schema=PCG_SCHEMA)
+        caps = be.capabilities
+        msf = [caps.max_shard_failures(bps) for bps in (1, 2, 4, 8)]
+        if msf[0] != caps.max_block_failures:
+            errors.append(
+                f"backend {name!r}: max_shard_failures(1)={msf[0]} must "
+                f"equal max_block_failures={caps.max_block_failures}")
+        bounded = [m for m in msf if m is not None]
+        if None in msf and bounded:
+            errors.append(f"backend {name!r}: shard budget mixes "
+                          f"unbounded and bounded views: {msf}")
+        if bounded != sorted(bounded, reverse=True):
+            errors.append(f"backend {name!r}: max_shard_failures must be "
+                          f"monotone non-increasing in shard size: {msf}")
+        if caps.max_block_failures is not None:
+            for bps, m in zip((1, 2, 4, 8), msf):
+                if m * bps > caps.max_block_failures:
+                    errors.append(
+                        f"backend {name!r}: {m} shard failures of {bps} "
+                        f"blocks exceed max_block_failures="
+                        f"{caps.max_block_failures}")
+        try:
+            caps.max_shard_failures(0)
+            errors.append(f"backend {name!r}: max_shard_failures(0) "
+                          f"was not refused")
+        except ValueError:
+            pass
+
+    from repro import api
+
+    problem = api.Problem.poisson(8, nblocks=4)
+    if problem.nshards != 1:
+        errors.append(f"unsharded Problem reports nshards="
+                      f"{problem.nshards}, expected 1")
+    try:
+        api.solve(problem, "pcg", api.ResilienceSpec(nshards=2))
+        errors.append("api.solve accepted a ResilienceSpec pinned to "
+                      "nshards=2 on an unsharded problem")
+    except ValueError:
+        pass
+    if not errors:
+        print("shard axis coherence: max_shard_failures coheres with "
+              "max_block_failures for every backend; façade shard pins "
+              "enforced")
+    return errors
+
+
 def check_advisor_surface() -> list:
     """The advisor exports resolve and the canonical footprint decision
     holds: a double-storage-loss campaign picks the K+2p stripe over
@@ -250,7 +318,7 @@ def check_advisor_surface() -> list:
 def main() -> int:
     errors = (check_api_surface() + check_backend_capabilities()
               + check_planner_surface() + check_erasure_parity_coherence()
-              + check_advisor_surface())
+              + check_shard_axis_coherence() + check_advisor_surface())
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     return 1 if errors else 0

@@ -6,8 +6,10 @@ imports.  Two modes:
 
   python tools/check_bench.py BENCH_solver.json
       Validate the schema: version string, top-level keys, non-empty
-      specs, and per-spec ``modeled`` / ``counts`` / ``wall`` subtrees
-      with the required numeric keys.
+      specs, per-spec ``modeled`` / ``counts`` / ``wall`` subtrees
+      with the required numeric keys, and the ``sharded`` subtree
+      (per shard count: deterministic ``bytes`` whose per-shard fetch
+      map sums to the total, plus a wall-clock ``hidden_fraction``).
 
   python tools/check_bench.py A.json B.json
       Validate both, then assert the determinism contract: the two
@@ -25,7 +27,8 @@ import sys
 
 SCHEMA_VERSION = "repro-bench/v1"
 
-TOP_KEYS = ("schema", "bench", "seed", "smoke", "solver", "problem", "specs")
+TOP_KEYS = ("schema", "bench", "seed", "smoke", "solver", "problem", "specs",
+            "sharded")
 MODELED_KEYS = ("persist_s_per_event", "persist_s_per_iter",
                 "exposed_persist_s_per_iter", "drain_s",
                 "storage_overhead_x")
@@ -34,6 +37,8 @@ COUNT_KEYS = ("iterations", "converged", "persist_events", "persist_aborts",
               "wasted_iterations")
 WALL_KEYS = ("hidden_fraction", "exposed_persist_s_per_iter",
              "iterations_per_s", "recovery_latency_s")
+SHARDED_BYTE_KEYS = ("blocks_per_shard", "slot_nbytes", "persist_bytes",
+                     "recovery_fetch_bytes")
 
 
 class BenchError(Exception):
@@ -85,6 +90,35 @@ def validate(doc: dict, path: str = "<doc>") -> None:
                          f"{type(tree[k]).__name__}")
         _require(isinstance(entry["counts"]["converged"], bool),
                  f"{where}.counts.converged must be a bool")
+    sharded = doc["sharded"]
+    _require(isinstance(sharded, dict) and sharded,
+             f"{path}: sharded must be a non-empty object")
+    _require("1" in sharded,
+             f"{path}: sharded must carry the 1-shard row")
+    for n, entry in sharded.items():
+        where = f"{path}: sharded[{n!r}]"
+        _require(n.isdigit() and str(int(n)) == n and int(n) >= 1,
+                 f"{where}: key must be a positive decimal shard count")
+        _require(isinstance(entry, dict), f"{where} must be an object")
+        bts = entry.get("bytes")
+        _require(isinstance(bts, dict), f"{where}.bytes must be an object")
+        for k in SHARDED_BYTE_KEYS:
+            _require(_numeric(bts.get(k)),
+                     f"{where}.bytes.{k} must be numeric")
+        by_shard = bts.get("recovery_fetch_bytes_by_shard")
+        _require(isinstance(by_shard, dict),
+                 f"{where}.bytes.recovery_fetch_bytes_by_shard must be "
+                 f"an object")
+        _require(all(_numeric(v) for v in by_shard.values()),
+                 f"{where}.bytes.recovery_fetch_bytes_by_shard values "
+                 f"must be numeric")
+        _require(sum(by_shard.values()) == bts["recovery_fetch_bytes"],
+                 f"{where}.bytes: per-shard fetch bytes do not sum to "
+                 f"recovery_fetch_bytes")
+        wall = entry.get("wall")
+        _require(isinstance(wall, dict) and _numeric(
+                     wall.get("hidden_fraction")),
+                 f"{where}.wall.hidden_fraction must be numeric")
 
 
 def strip_nondeterministic(doc: dict) -> dict:
@@ -93,6 +127,8 @@ def strip_nondeterministic(doc: dict) -> dict:
     out = {k: v for k, v in doc.items() if k != "generated"}
     out["specs"] = {spec: {k: v for k, v in entry.items() if k != "wall"}
                     for spec, entry in doc["specs"].items()}
+    out["sharded"] = {n: {k: v for k, v in entry.items() if k != "wall"}
+                      for n, entry in doc.get("sharded", {}).items()}
     return out
 
 
