@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.reconstruction import reconstruct_direction_form
+from repro.core.spmv import make_det_dot
 from repro.core.state import RecoverySchema, RecoverySet
 from repro.solvers.base import RecoverableSolver
 
@@ -90,12 +91,14 @@ def spectral_bounds(op, precond, power_iters: int = 100,
     # power iteration for lmax; shifted power iteration for lmin
     rng = np.random.default_rng(seed)
     v = jnp.asarray(rng.standard_normal(op.n), op.dtype)
+    det_dot = make_det_dot(getattr(op, "nblocks", 1),
+                           getattr(op, "mesh", None))
 
     def power(apply_fn, v):
         lam = 0.0
         for _ in range(power_iters):
             w = apply_fn(v)
-            lam = float(jnp.vdot(v, w) / jnp.vdot(v, v))
+            lam = float(det_dot(v, w) / det_dot(v, v))
             v = w / jnp.linalg.norm(w)
         return lam
 

@@ -13,4 +13,8 @@ export JAX_ENABLE_X64=1
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Static invariants first (stdlib-only, fast): src/ must lint clean —
+# any unsuppressed repro-lint finding fails the run before pytest starts.
+python -m tools.repro_lint src
+
 exec python -m pytest -x -q "$@"

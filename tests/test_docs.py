@@ -18,7 +18,8 @@ sys.path.insert(0, str(REPO / "tools"))
 from check_docs import python_blocks  # noqa: E402
 
 DOC_FILES = ["README.md", "docs/recovery-format.md", "docs/backend-api.md",
-             "docs/erasure-coding.md", "docs/observability.md"]
+             "docs/erasure-coding.md", "docs/observability.md",
+             "docs/static-analysis.md"]
 
 
 @pytest.mark.parametrize("doc", DOC_FILES)
@@ -38,11 +39,12 @@ def test_check_docs_cli_passes_on_repo_docs():
         [sys.executable, str(REPO / "tools" / "check_docs.py"),
          "README.md", "DESIGN.md", "docs/recovery-format.md",
          "docs/backend-api.md", "docs/erasure-coding.md",
-         "docs/observability.md"],
+         "docs/observability.md", "docs/static-analysis.md"],
         cwd=REPO, capture_output=True, text=True)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "backend matrix covers" in out.stdout
     assert "span taxonomy covers" in out.stdout
+    assert "rule catalog covers" in out.stdout
 
 
 def test_check_api_cli_passes_on_repo():
@@ -125,6 +127,42 @@ def test_check_docs_flags_undocumented_span_name(tmp_path):
     fresh.parent.mkdir()
     fresh.write_text("spans: " + " ".join(f"`{n}`" for n in sorted(names))
                      + "\n")
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"), str(fresh)],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_check_docs_flags_rule_catalog_drift(tmp_path):
+    """The ISSUE 8 freshness gate, both directions: a static-analysis
+    doc missing a registered rule id fails the docs job, and so does a
+    doc naming a rule the registry no longer ships."""
+    from repro_lint.registry import ALL_RULES, META_RULES
+
+    known = sorted(set(ALL_RULES) | set(META_RULES))
+    assert {"RL101", "RL201", "RL301", "RL401", "RL501",
+            "RL001"} <= set(known)
+
+    stale = tmp_path / "static-analysis.md"
+    stale.write_text("rules: " + " ".join(known[1:]) + "\n")
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"), str(stale)],
+        capture_output=True, text=True)
+    assert out.returncode == 1
+    assert f"{known[0]!r} is missing" in out.stderr
+
+    ghost = tmp_path / "g" / "static-analysis.md"
+    ghost.parent.mkdir()
+    ghost.write_text("rules: " + " ".join(known) + " RL999\n")
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"), str(ghost)],
+        capture_output=True, text=True)
+    assert out.returncode == 1
+    assert "'RL999'" in out.stderr and "no longer exists" in out.stderr
+
+    fresh = tmp_path / "ok" / "static-analysis.md"
+    fresh.parent.mkdir()
+    fresh.write_text("rules: " + " ".join(known) + "\n")
     out = subprocess.run(
         [sys.executable, str(REPO / "tools" / "check_docs.py"), str(fresh)],
         capture_output=True, text=True)

@@ -1,0 +1,356 @@
+"""repro-lint test matrix (ISSUE 8).
+
+Three layers:
+
+1. **Fixture matrix** — for every rule family: a trigger fixture the
+   rule must fire on, a clean fixture it must stay silent on, a
+   suppressed-with-reason fixture (finding kept but silenced), and the
+   suppression-*without*-reason refusal (RL001 + the original finding
+   stays unsuppressed).
+2. **Self-clean** — ``src/`` itself lints clean (the merge gate), with
+   the justified suppressions visible in the report as an audit trail.
+3. **Negative controls** — on a scratch copy of ``src/``: deleting one
+   tracer guard (RL301) or one ABC method implementation (RL401) flips
+   the CLI exit status, proving the gate actually guards the invariants
+   it claims to.
+"""
+import ast
+import json
+import pathlib
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from repro_lint import (  # noqa: E402
+    ALL_RULES,
+    META_RULES,
+    lint_paths,
+    lint_source,
+    rule_families,
+)
+
+SOLVER_PATH = "src/repro/solvers/zoo.py"   # inside the linted tree
+NEUTRAL_PATH = "scripts/plot.py"           # outside solvers//core/
+
+
+def rules_of(findings):
+    return sorted(f.rule for f in findings)
+
+
+def live(findings):
+    return [f for f in findings if not f.suppressed]
+
+
+# ---------------------------------------------------------------------------
+# 1. the per-family fixture matrix
+# ---------------------------------------------------------------------------
+
+MINI_ABC = """\
+import abc
+
+
+class PersistSession(abc.ABC):
+    @abc.abstractmethod
+    def begin(self, k, scalars, vectors):
+        ...
+
+    @abc.abstractmethod
+    def commit(self):
+        ...
+"""
+
+FAMILIES = {
+    "RL101": dict(
+        trigger=("import jax\nrun = jax.shard_map(lambda x: x)\n",
+                 SOLVER_PATH),
+        clean=("import jax\nrun = jax.shard_map(lambda x: x)\n",
+               "src/repro/compat.py"),
+        noqa_line="run = jax.shard_map(lambda x: x)",
+    ),
+    "RL201": dict(
+        trigger=("import jax.numpy as jnp\nrr = jnp.vdot(r, r)\n",
+                 "src/repro/core/x.py"),
+        clean=("import jax.numpy as jnp\nrr = jnp.vdot(r, r)\n",
+               NEUTRAL_PATH),
+        noqa_line="rr = jnp.vdot(r, r)",
+    ),
+    "RL301": dict(
+        trigger=("def f(t, k):\n"
+                 "    t.event('iteration.step', k=k)\n",
+                 SOLVER_PATH),
+        clean=("def f(t, k):\n"
+               "    if t is not None:\n"
+               "        t.event('iteration.step', k=k)\n",
+               SOLVER_PATH),
+        noqa_line="    t.event('iteration.step', k=k)",
+    ),
+    "RL401": dict(
+        trigger=(MINI_ABC
+                 + "\n\nclass HalfSession(PersistSession):\n"
+                 "    def begin(self, k, scalars, vectors):\n"
+                 "        return k\n",
+                 SOLVER_PATH),
+        clean=(MINI_ABC
+               + "\n\nclass FullSession(PersistSession):\n"
+               "    def begin(self, k, scalars, vectors):\n"
+               "        return k\n\n"
+               "    def commit(self):\n"
+               "        return None\n",
+               SOLVER_PATH),
+        noqa_line="class HalfSession(PersistSession):",
+    ),
+    "RL501": dict(
+        trigger=("def f(x=[]):\n    return x\n", SOLVER_PATH),
+        clean=("def f(x=None):\n    return [] if x is None else x\n",
+               SOLVER_PATH),
+        noqa_line="def f(x=[]):",
+    ),
+}
+
+
+@pytest.mark.parametrize("rule", sorted(FAMILIES))
+def test_family_fires_on_trigger(rule):
+    src, path = FAMILIES[rule]["trigger"]
+    assert rule in rules_of(lint_source(src, path=path)), rule
+
+
+@pytest.mark.parametrize("rule", sorted(FAMILIES))
+def test_family_silent_on_clean(rule):
+    src, path = FAMILIES[rule]["clean"]
+    assert lint_source(src, path=path) == []
+
+
+@pytest.mark.parametrize("rule", sorted(FAMILIES))
+def test_family_suppressed_with_reason(rule):
+    fx = FAMILIES[rule]
+    src, path = fx["trigger"]
+    src = src.replace(
+        fx["noqa_line"],
+        fx["noqa_line"] + f"  # repro-lint: noqa[{rule}] -- fixture: "
+        f"exercising the suppression path", 1)
+    findings = lint_source(src, path=path)
+    mine = [f for f in findings if f.rule == rule]
+    assert mine and all(f.suppressed for f in mine)
+    assert all("suppression path" in f.reason for f in mine)
+    assert live(findings) == []
+
+
+@pytest.mark.parametrize("rule", sorted(FAMILIES))
+def test_family_suppression_without_reason_refused(rule):
+    fx = FAMILIES[rule]
+    src, path = fx["trigger"]
+    src = src.replace(fx["noqa_line"],
+                      fx["noqa_line"] + f"  # repro-lint: noqa[{rule}]", 1)
+    findings = lint_source(src, path=path)
+    assert "RL001" in rules_of(findings)          # the refusal itself
+    mine = [f for f in findings if f.rule == rule]
+    assert mine and not any(f.suppressed for f in mine)   # still gates
+
+
+def test_meta_rules_cannot_be_suppressed():
+    src = ("def f(x=[]):  # repro-lint: noqa[RL501,RL001]\n"
+           "    return x\n")
+    findings = lint_source(src, path=SOLVER_PATH)
+    assert not any(f.suppressed for f in findings)
+    assert "RL001" in rules_of(findings)
+
+
+# ---------------------------------------------------------------------------
+# the remaining rule ids, one trigger each
+# ---------------------------------------------------------------------------
+
+EXTRA_TRIGGERS = [
+    ("RL102", "from jax.sharding import AxisType\n", SOLVER_PATH),
+    ("RL103", "from jax.sharding import Mesh\nm = Mesh(devs, ('data',))\n",
+     SOLVER_PATH),
+    ("RL202", "import time\nt0 = time.time()\n", SOLVER_PATH),
+    ("RL203", "import random\nx = random.random()\n", SOLVER_PATH),
+    ("RL302", "def f(t, name):\n"
+              "    if t is not None:\n"
+              "        t.event(name)\n", SOLVER_PATH),
+    ("RL402", MINI_ABC + "\n\nclass DriftSession(PersistSession):\n"
+              "    def begin(self, kk, scalars, vectors):\n"
+              "        return kk\n\n"
+              "    def commit(self):\n"
+              "        return None\n", SOLVER_PATH),
+    ("RL403", "def run(s, k):\n    s.begin(k)\n", SOLVER_PATH),
+    ("RL502", "try:\n    x = 1\nexcept:\n    pass\n", SOLVER_PATH),
+    ("RL503", "__all__ = ['ghost']\n", SOLVER_PATH),
+]
+
+
+@pytest.mark.parametrize("rule,src,path", EXTRA_TRIGGERS,
+                         ids=[t[0] for t in EXTRA_TRIGGERS])
+def test_every_rule_id_fires(rule, src, path):
+    assert rule in rules_of(lint_source(src, path=path))
+
+
+def test_registry_covers_five_families_and_meta():
+    fams = rule_families()
+    assert {"RL1", "RL2", "RL3", "RL4", "RL5"} <= set(fams)
+    assert set(META_RULES) == {"RL001", "RL002"}
+    fired = {t[0] for t in EXTRA_TRIGGERS} | set(FAMILIES)
+    assert fired == set(ALL_RULES), "every registered id has a fixture"
+
+
+# ---------------------------------------------------------------------------
+# RL301's guard analysis: every guarded idiom src/ actually uses
+# ---------------------------------------------------------------------------
+
+GUARDED_IDIOMS = [
+    ("inline", "def f(t):\n"
+               "    if t is not None:\n"
+               "        t.event('a.b')\n"),
+    ("early-exit", "def f(t):\n"
+                   "    if t is None:\n"
+                   "        return 0\n"
+                   "    t.event('a.b')\n"),
+    ("else-branch", "def f(t):\n"
+                    "    if t is None:\n"
+                    "        pass\n"
+                    "    else:\n"
+                    "        t.event('a.b')\n"),
+    ("and-conjunct", "def f(t, drained):\n"
+                     "    if t is not None and drained:\n"
+                     "        t.event('a.b')\n"),
+    ("conditional-expr", "def f(t):\n"
+                         "    return t.event('a.b') if t is not None "
+                         "else None\n"),
+]
+
+
+@pytest.mark.parametrize("name,src", GUARDED_IDIOMS,
+                         ids=[g[0] for g in GUARDED_IDIOMS])
+def test_guard_idioms_accepted(name, src):
+    assert lint_source(src, path=SOLVER_PATH) == []
+
+
+def test_guard_does_not_cross_function_boundary():
+    src = ("def f(t):\n"
+           "    if t is not None:\n"
+           "        def g():\n"
+           "            t.event('a.b')\n"   # closure: t may be swapped
+           "        return g\n")
+    assert "RL301" in rules_of(lint_source(src, path=SOLVER_PATH))
+
+
+# ---------------------------------------------------------------------------
+# 2. self-clean: the merge gate over the real tree
+# ---------------------------------------------------------------------------
+
+def test_src_lints_clean_with_audit_trail():
+    result = lint_paths([str(REPO / "src")])
+    assert result.exit_code == 0, result.render()
+    assert result.unsuppressed == []
+    suppressed = [f for f in result.findings if f.suppressed]
+    assert suppressed, "the justified suppressions stay in the report"
+    assert all(f.reason for f in suppressed)
+
+
+# ---------------------------------------------------------------------------
+# 3. negative controls on a scratch copy of src/
+# ---------------------------------------------------------------------------
+
+def _lint_cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", *map(str, args)],
+        cwd=REPO, capture_output=True, text=True)
+
+
+@pytest.fixture
+def src_copy(tmp_path):
+    dst = tmp_path / "src"
+    shutil.copytree(REPO / "src", dst,
+                    ignore=shutil.ignore_patterns("__pycache__"))
+    assert _lint_cli(dst).returncode == 0, "scratch baseline must be clean"
+    return dst
+
+
+def test_deleting_a_tracer_guard_flips_exit(src_copy):
+    drv = src_copy / "repro" / "solvers" / "driver.py"
+    text = drv.read_text()
+    needle = 'if trace is not None:\n        trace.event("solve.begin"'
+    assert needle in text
+    drv.write_text(text.replace(
+        needle, 'if True:\n        trace.event("solve.begin"', 1))
+    out = _lint_cli(src_copy)
+    assert out.returncode == 1
+    assert "RL301" in out.stdout and "solve.begin" not in out.stderr
+
+
+def test_deleting_an_abc_method_flips_exit(src_copy):
+    be = src_copy / "repro" / "nvm" / "backend.py"
+    tree = ast.parse(be.read_text())
+    cls = next(n for n in ast.walk(tree)
+               if isinstance(n, ast.ClassDef)
+               and n.name == "ReplicatedSession")
+    fn = next(n for n in cls.body if isinstance(n, ast.FunctionDef)
+              and n.name == "durable_run")
+    lines = be.read_text().splitlines(keepends=True)
+    start = min([fn.lineno] + [d.lineno for d in fn.decorator_list]) - 1
+    del lines[start:fn.end_lineno]
+    be.write_text("".join(lines))
+    out = _lint_cli(src_copy)
+    assert out.returncode == 1
+    assert "RL401" in out.stdout and "durable_run" in out.stdout
+
+
+def test_signature_drift_flips_exit(src_copy):
+    be = src_copy / "repro" / "nvm" / "backend.py"
+    tree = ast.parse(be.read_text())
+    cls = next(n for n in ast.walk(tree)
+               if isinstance(n, ast.ClassDef)
+               and n.name == "ReplicatedSession")
+    fn = next(n for n in cls.body if isinstance(n, ast.FunctionDef)
+              and n.name == "fail")
+    lines = be.read_text().splitlines()
+    lines[fn.lineno - 1] = lines[fn.lineno - 1].replace(
+        "(self, blocks", "(self, block_ids")
+    be.write_text("\n".join(lines) + "\n")
+    out = _lint_cli(src_copy)
+    assert out.returncode == 1
+    assert "RL402" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# CLI surface: --json schema, --list-rules, --select
+# ---------------------------------------------------------------------------
+
+def test_cli_json_schema_on_src():
+    out = _lint_cli("src", "--json")
+    assert out.returncode == 0, out.stdout + out.stderr
+    doc = json.loads(out.stdout)
+    assert doc["schema"] == "repro-lint/v1"
+    assert doc["unsuppressed"] == 0
+    assert doc["files_scanned"] > 0
+    assert {"span_names", "backend_families", "erasure_arities",
+            "tracer_sites"} <= set(doc["facts"])
+    assert "iteration.step" in doc["facts"]["span_names"]
+    assert "erasure" in doc["facts"]["backend_families"]
+    assert doc["facts"]["erasure_arities"] == ["+p", "+2p"]
+    for f in doc["findings"]:
+        assert {"rule", "file", "line", "col", "message", "hint",
+                "suppressed", "reason"} <= set(f)
+        assert f["suppressed"] and f["reason"]   # src is clean otherwise
+
+
+def test_cli_list_rules_names_every_id():
+    out = _lint_cli("--list-rules")
+    assert out.returncode == 0
+    for rid in list(ALL_RULES) + list(META_RULES):
+        assert rid in out.stdout, rid
+
+
+def test_cli_select_narrows_the_run(tmp_path):
+    bad = tmp_path / "src" / "repro" / "solvers" / "zoo.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import jax\nrun = jax.shard_map(lambda x: x)\n")
+    assert _lint_cli(bad).returncode == 1
+    assert _lint_cli(bad, "--select", "RL5").returncode == 0
+    narrowed = _lint_cli(bad, "--select", "RL1")
+    assert narrowed.returncode == 1 and "RL101" in narrowed.stdout

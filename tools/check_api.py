@@ -30,6 +30,11 @@ Two invariants the docs CI job enforces on every push:
    ``max_shard_failures(blocks_per_shard)`` is a coherent view of its
    block budget, and the façade's shard fields (``Problem.nshards``,
    ``ResilienceSpec.nshards``) are enforced.
+7. **Lint surface** (ISSUE 8) — ``tools/repro_lint`` imports cleanly
+   (stdlib-only, so this runs even before jax is installed), exports
+   its rule registry with all five families present and every rule
+   carrying a title and a fix hint, and a smoke ``lint_source`` call
+   actually fires.
 
 Usage: ``PYTHONPATH=src python tools/check_api.py``
 Exit status is non-zero when anything is broken.  Requires jax+numpy
@@ -268,6 +273,46 @@ def check_shard_axis_coherence() -> list:
     return errors
 
 
+def check_lint_surface() -> list:
+    """The ISSUE 8 gate: the linter package imports cleanly and exports
+    a complete rule registry — five families, titled and hinted rules,
+    the meta ids — and its engine fires on a one-line smoke fixture."""
+    errors = []
+    try:  # script mode puts tools/ first on sys.path; -m mode does not
+        from repro_lint import ALL_RULES, META_RULES, lint_source
+        from repro_lint import rule_families
+    except ImportError:
+        try:
+            from tools.repro_lint import (ALL_RULES, META_RULES,
+                                          lint_source, rule_families)
+        except Exception:
+            return [f"tools.repro_lint failed to import:\n"
+                    f"{traceback.format_exc()}"]
+    except Exception:
+        return [f"tools.repro_lint failed to import:\n"
+                f"{traceback.format_exc()}"]
+
+    fams = rule_families()
+    missing = [f"RL{i}" for i in range(1, 6) if f"RL{i}" not in fams]
+    if missing:
+        errors.append(f"rule registry misses famil(ies) {missing}; "
+                      f"has {sorted(fams)}")
+    for rid, rule in ALL_RULES.items():
+        if not rule.title or not rule.hint:
+            errors.append(f"rule {rid}: registry entries must carry a "
+                          f"title and a fix hint")
+    if not {"RL001", "RL002"} <= set(META_RULES):
+        errors.append(f"meta rules incomplete: {sorted(META_RULES)}")
+    smoke = lint_source("def f(x=[]):\n    return x\n")
+    if [f.rule for f in smoke] != ["RL501"]:
+        errors.append(f"lint_source smoke fixture fired "
+                      f"{[f.rule for f in smoke]}, expected ['RL501']")
+    if not errors:
+        print(f"lint surface: {len(ALL_RULES)} rule ids across "
+              f"{len(fams)} families, engine fires")
+    return errors
+
+
 def check_advisor_surface() -> list:
     """The advisor exports resolve and the canonical footprint decision
     holds: a double-storage-loss campaign picks the K+2p stripe over
@@ -318,7 +363,8 @@ def check_advisor_surface() -> list:
 def main() -> int:
     errors = (check_api_surface() + check_backend_capabilities()
               + check_planner_surface() + check_erasure_parity_coherence()
-              + check_shard_axis_coherence() + check_advisor_surface())
+              + check_shard_axis_coherence() + check_advisor_surface()
+              + check_lint_surface())
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     return 1 if errors else 0

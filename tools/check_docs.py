@@ -14,18 +14,30 @@ without jax installed.  Two classes of rot it catches:
 3. **Span-taxonomy rot** (freshness, ISSUE 6) — every span/event name
    emitted anywhere under ``src/`` (a string literal at a
    ``.span("...")`` / ``.event("...")`` call site — the tracing style
-   rule) must appear in ``docs/observability.md``, so new
-   instrumentation cannot land undocumented.  Runs whenever an
-   ``observability.md`` is among the checked files.
+   rule, now *enforced* as repro-lint RL302) must appear in
+   ``docs/observability.md``, so new instrumentation cannot land
+   undocumented.  Runs whenever an ``observability.md`` is among the
+   checked files.
 4. **Matrix rot** (freshness, ISSUE 4/5) — every backend *spec family*
    registered in the source tree (``register_backend("name", ...)`` /
    ``register_backend_class("name", ...)``) must appear in the README's
-   backend matrix, so a new backend cannot land undocumented.  Found by
-   scanning ``src/`` textually — no runtime import needed.  Runs
+   backend matrix, so a new backend cannot land undocumented.  Runs
    whenever a README is among the checked files.  For the ``erasure``
-   family, every parity arity the stripe grammar supports (scanned
-   from ``MAX_PARITY`` usage: ``+p`` and ``+2p``) must be named too —
-   a wider code cannot land with only the distance-2 row documented.
+   family, every parity arity the stripe grammar supports (derived from
+   ``MAX_PARITY`` in the GF(2^8) module: ``+p`` and ``+2p``) must be
+   named too — a wider code cannot land with only the distance-2 row
+   documented.
+5. **Rule-catalog rot** (freshness, ISSUE 8) — two directions: every
+   rule id the linter registry ships must appear in
+   ``docs/static-analysis.md``, and every ``RLxxx`` token that doc
+   names must exist in the registry (a doc describing a ghost rule
+   fails).  Runs whenever a ``static-analysis.md`` is checked.
+
+Since ISSUE 8 the freshness facts (3)–(5) come from ``repro_lint``'s
+AST extractors (``tools/repro_lint/facts.py``), not regexes over raw
+source text: a span call split across lines or a reformatted
+``MAX_PARITY`` assignment no longer silently empties a gate.  Still
+dependency-free — repro_lint is stdlib-only.
 
 Usage: ``python tools/check_docs.py README.md DESIGN.md docs/*.md``
 Exit status is non-zero when anything is broken.
@@ -36,10 +48,27 @@ import re
 import sys
 from pathlib import Path
 
+try:  # script mode: sys.path[0] is tools/
+    from repro_lint import facts as _lint_facts
+    from repro_lint.registry import ALL_RULES, META_RULES
+except ImportError:  # module mode from the repo root
+    from tools.repro_lint import facts as _lint_facts
+    from tools.repro_lint.registry import ALL_RULES, META_RULES
+
 FENCE_RE = re.compile(r"^```(\w*)\s*$")
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-REGISTER_RE = re.compile(
-    r"""register_backend(?:_class)?\(\s*["']([\w.-]+)["']""")
+RULE_ID_RE = re.compile(r"\bRL\d{3}\b")
+
+_FACTS_CACHE: dict = {}
+
+
+def _facts(src_root: Path) -> dict:
+    """AST-extracted facts for ``src_root`` (cached per root — the
+    README and observability gates share one parse of the tree)."""
+    key = str(Path(src_root).resolve())
+    if key not in _FACTS_CACHE:
+        _FACTS_CACHE[key] = _lint_facts.collect_facts_from_root(src_root)
+    return _FACTS_CACHE[key]
 
 
 def python_blocks(text: str):
@@ -69,11 +98,9 @@ def relative_links(text: str):
 
 def registered_backend_families(src_root: Path) -> set:
     """Backend spec families registered anywhere under ``src/`` — the
-    textual counterpart of ``repro.nvm.backend.backend_names()``."""
-    names = set()
-    for py in sorted(src_root.rglob("*.py")):
-        names.update(REGISTER_RE.findall(py.read_text()))
-    return names
+    static counterpart of ``repro.nvm.backend.backend_names()``,
+    AST-extracted from ``register_backend(_class)`` call sites."""
+    return set(_facts(src_root)["backend_families"])
 
 
 def check_backend_matrix(readme: Path, repo_root: Path) -> list:
@@ -107,18 +134,11 @@ def check_backend_matrix(readme: Path, repo_root: Path) -> list:
     return errors
 
 
-SPAN_CALL_RE = re.compile(
-    r"""\.(?:span|event)\(\s*['"]([A-Za-z][A-Za-z0-9_.]*)['"]""")
-
-
 def emitted_span_names(src_root: Path) -> set:
-    """Every span/event name emitted under ``src/`` — names are string
-    literals at the call site (the style rule that makes this scan
-    complete)."""
-    names = set()
-    for py in sorted(src_root.rglob("*.py")):
-        names.update(SPAN_CALL_RE.findall(py.read_text()))
-    return names
+    """Every span/event name emitted under ``src/`` — string literals
+    at ``.span(``/``.event(`` call sites, AST-extracted (repro-lint
+    RL302 is the style rule that makes this scan complete)."""
+    return set(_facts(src_root)["span_names"])
 
 
 def check_span_taxonomy(doc: Path, repo_root: Path) -> list:
@@ -137,20 +157,33 @@ def check_span_taxonomy(doc: Path, repo_root: Path) -> list:
             f"section)" for n in missing]
 
 
-_MAX_PARITY_RE = re.compile(r"^MAX_PARITY\s*=\s*(\d+)", re.MULTILINE)
-
-
 def supported_erasure_arities(src_root: Path) -> list:
     """The ``+p`` / ``+2p`` / ... spec suffixes the stripe grammar
-    accepts, derived textually from ``MAX_PARITY`` in the GF(2^8)
-    module (default 2 when the scan finds nothing)."""
-    max_parity = 2
-    gf = src_root / "repro" / "nvm" / "gf256.py"
-    if gf.exists():
-        m = _MAX_PARITY_RE.search(gf.read_text())
-        if m:
-            max_parity = int(m.group(1))
-    return ["+p"] + [f"+{p}p" for p in range(2, max_parity + 1)]
+    accepts, derived from the ``MAX_PARITY`` constant in the GF(2^8)
+    module's AST (default 2 when the scan finds nothing)."""
+    arities = _facts(src_root)["erasure_arities"]
+    return arities or _lint_facts.erasure_arities_from_parity(2)
+
+
+def check_rule_catalog(doc: Path, repo_root: Path) -> list:
+    """Two-direction freshness gate for the linter's rule catalog:
+    registry ⊆ doc (a shipped rule cannot stay undocumented) and
+    doc ⊆ registry (the doc cannot describe a ghost rule)."""
+    known = set(ALL_RULES) | set(META_RULES)
+    text = doc.read_text()
+    documented = set(RULE_ID_RE.findall(text))
+    missing = sorted(known - documented)
+    ghosts = sorted(documented - known)
+    print(f"{doc}: rule catalog covers {len(known - set(missing))}/"
+          f"{len(known)} registered rule ids")
+    errors = [f"{doc}: registered lint rule {rid!r} is missing from the "
+              f"catalog — document it (python -m tools.repro_lint "
+              f"--list-rules)" for rid in missing]
+    errors.extend(
+        f"{doc}: documents rule {rid!r} which no longer exists in the "
+        f"repro_lint registry — delete the stale catalog entry"
+        for rid in ghosts)
+    return errors
 
 
 def check_file(path: Path, repo_root: Path) -> list:
@@ -192,6 +225,8 @@ def main(argv) -> int:
             errors.extend(check_backend_matrix(p, repo_root))
         if p.name == "observability.md":
             errors.extend(check_span_taxonomy(p, repo_root))
+        if p.name == "static-analysis.md":
+            errors.extend(check_rule_catalog(p, repo_root))
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     return 1 if errors else 0

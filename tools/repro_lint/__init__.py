@@ -1,0 +1,49 @@
+"""repro-lint — AST-based invariant linter for the resilience stack.
+
+The stack's exactness guarantees (bit-identical recovery, placement-
+stable reductions, the zero-overhead disabled-tracer path, the
+session-lifecycle crash-consistency rules) were previously enforced
+only at runtime — by the campaign-fuzz harness and a counting probe —
+or by textual greps in ``tools/check_docs.py``.  This package enforces
+them **statically, at review time**, on the stdlib ``ast`` module with
+zero third-party dependencies (the CI lint job runs on a bare Python).
+
+Public surface:
+
+- :func:`lint_paths` / :func:`lint_source` — run the rule set, return a
+  :class:`~repro_lint.core.LintResult` (or plain findings for a source
+  snippet).
+- ``ALL_RULES`` — the rule registry (``{rule_id: Rule}``), five
+  families: RL1xx compat, RL2xx determinism, RL3xx tracer guards,
+  RL4xx session lifecycle, RL5xx hygiene (plus RL0xx meta rules).
+- :mod:`repro_lint.facts` — AST-extracted project facts (span names,
+  backend families, erasure arities) consumed by ``check_docs.py``'s
+  freshness gates, replacing its textual scans.
+
+CLI: ``python -m tools.repro_lint src/ [--json] [--select RL3,RL5]``.
+Suppressions: ``# repro-lint: noqa[RL201] -- <written justification>``
+— the justification is mandatory; a bare ``noqa`` is itself a finding
+(RL001) and cannot be suppressed.  See ``docs/static-analysis.md``.
+"""
+from .core import (  # noqa: F401
+    Finding,
+    LintResult,
+    Rule,
+    lint_paths,
+    lint_source,
+)
+from .registry import ALL_RULES, META_RULES, rule_families  # noqa: F401
+
+__version__ = "1.0"
+
+__all__ = [
+    "Finding",
+    "LintResult",
+    "Rule",
+    "lint_paths",
+    "lint_source",
+    "ALL_RULES",
+    "META_RULES",
+    "rule_families",
+    "__version__",
+]

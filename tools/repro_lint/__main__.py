@@ -1,0 +1,63 @@
+"""CLI: ``python -m tools.repro_lint src/ [--json] [--select ...]``.
+
+Exit status 0 iff every finding is suppressed-with-reason; any
+unsuppressed finding (including RL001 justification-less suppressions
+and RL002 parse failures) exits 1 — that is the CI lint gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .core import lint_paths, main_json
+from .registry import ALL_RULES, META_RULES, rule_families
+
+
+def _list_rules() -> str:
+    lines = ["repro-lint rule catalog (docs/static-analysis.md has the "
+             "full rationale):"]
+    for fam, ids in sorted(rule_families().items()):
+        lines.append(f"  {fam}xx:")
+        for rid in ids:
+            rule = ALL_RULES[rid]
+            title = rule.title
+            if rid == getattr(rule, "MISMATCH_ID", None):
+                title = getattr(rule, "MISMATCH_TITLE", title)
+            lines.append(f"    {rid}  {title}")
+    lines.append("  meta (framework, never suppressable):")
+    for rid, desc in sorted(META_RULES.items()):
+        lines.append(f"    {rid}  {desc}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint",
+        description="AST-based invariant linter for the resilience stack")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directory roots to lint (default: src)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output (repro-lint/v1 schema, "
+                         "findings + AST-extracted project facts)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids or family prefixes "
+                         "(e.g. RL3,RL501)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+
+    select = args.select.split(",") if args.select else None
+    result = lint_paths(args.paths or ["src"], select=select)
+    if args.json:
+        print(main_json(result))
+    else:
+        print(result.render())
+    return result.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,319 @@
+"""Framework: findings, suppressions, file/project contexts, the runner.
+
+Design notes (docs/static-analysis.md has the user-facing version):
+
+- Two pass granularities.  A *file* rule sees one :class:`FileContext`
+  (source, AST, parent map, suppression table) at a time; a *project*
+  rule sees the whole :class:`Project` — that is where the symbol-table
+  passes live (ABC-surface conformance needs every class definition in
+  the tree at once).
+- Suppressions are **justified or refused**.  The only accepted form is
+  ``# repro-lint: noqa[RLxxx] -- reason`` (comma-separated ids allowed)
+  on the finding's line or on a comment line directly above it.  A
+  suppression with no ``-- reason`` suppresses nothing and raises an
+  RL001 finding of its own; RL0xx meta findings cannot be suppressed.
+  Comments are located with :mod:`tokenize`, not regexes over raw
+  lines, so a ``# repro-lint:`` inside a string literal is inert.
+- Findings are deterministic: sorted by (file, line, col, rule) so two
+  runs over the same tree emit byte-identical reports (the same
+  determinism contract the solvers hold their reductions to).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*noqa\[(?P<ids>[A-Z0-9,\s]+)\]"
+    r"(?:\s*--\s*(?P<reason>.*\S))?")
+
+#: meta findings — produced by the framework itself, never suppressable
+META_SUPPRESSION = "RL001"
+META_SYNTAX = "RL002"
+
+
+@dataclasses.dataclass
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    file: str
+    line: int
+    col: int
+    message: str
+    hint: str = ""
+    suppressed: bool = False
+    reason: Optional[str] = None
+
+    def render(self) -> str:
+        tag = f" [suppressed: {self.reason}]" if self.suppressed else ""
+        hint = f"  (fix: {self.hint})" if self.hint and not self.suppressed \
+            else ""
+        return (f"{self.file}:{self.line}:{self.col}: {self.rule} "
+                f"{self.message}{hint}{tag}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int
+    ids: Tuple[str, ...]
+    reason: Optional[str]
+    used: bool = False
+
+
+class FileContext:
+    """One parsed source file plus everything rules need to query it."""
+
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel.replace("\\", "/")
+        self.source = source
+        self.tree = ast.parse(source)  # caller handles SyntaxError
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+        self.suppressions: Dict[int, List[Suppression]] = {}
+        self._scan_suppressions()
+
+    # -- path predicates (rules scope themselves by tree position) ------
+    def path_endswith(self, *suffixes: str) -> bool:
+        return any(self.rel.endswith(s) for s in suffixes)
+
+    def in_dir(self, *parts: str) -> bool:
+        """True when any of ``parts`` is a path segment of this file."""
+        segments = self.rel.split("/")
+        return any(p in segments for p in parts)
+
+    # -- suppression table ----------------------------------------------
+    def _scan_suppressions(self) -> None:
+        try:
+            tokens = tokenize.generate_tokens(
+                io.StringIO(self.source).readline)
+            comments = [(t.start[0], t.string) for t in tokens
+                        if t.type == tokenize.COMMENT]
+        except tokenize.TokenError:
+            comments = []
+        for lineno, text in comments:
+            m = SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            ids = tuple(s.strip() for s in m.group("ids").split(",")
+                        if s.strip())
+            reason = m.group("reason")
+            self.suppressions.setdefault(lineno, []).append(
+                Suppression(lineno, ids, reason))
+
+    def suppression_for(self, rule: str, line: int) -> Optional[Suppression]:
+        """A justified suppression covering ``rule`` at ``line`` — on the
+        line itself or on a comment line directly above it."""
+        if rule.startswith("RL0"):
+            return None  # meta findings are not suppressable
+        for at in (line, line - 1):
+            for sup in self.suppressions.get(at, ()):
+                if rule in sup.ids and sup.reason:
+                    sup.used = True
+                    return sup
+        return None
+
+    # -- AST ancestry helpers -------------------------------------------
+    def ancestors(self, node: ast.AST) -> Iterable[ast.AST]:
+        cur = node
+        while cur in self.parents:
+            cur = self.parents[cur]
+            yield cur
+
+    def enclosing_function(self, node: ast.AST):
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+
+class Project:
+    """Every successfully parsed file, for project-wide passes."""
+
+    def __init__(self, files: Sequence[FileContext]):
+        self.files = list(files)
+
+
+class Rule:
+    """Rule protocol.  Subclasses set the class attributes and override
+    :meth:`check` (file scope) and/or :meth:`check_project`."""
+
+    rule_id: str = ""
+    title: str = ""
+    hint: str = ""
+    #: the DESIGN.md / docs invariant this rule encodes (for the catalog)
+    invariant: str = ""
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        return ()
+
+    def finding(self, ctx: FileContext, node: ast.AST, message: str,
+                hint: Optional[str] = None) -> Finding:
+        return Finding(rule=self.rule_id, file=ctx.rel,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0),
+                       message=message,
+                       hint=self.hint if hint is None else hint)
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    files: int
+    facts: dict
+
+    @property
+    def unsuppressed(self) -> List[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.unsuppressed else 0
+
+    def to_json(self) -> dict:
+        return {
+            "schema": "repro-lint/v1",
+            "files_scanned": self.files,
+            "findings": [f.to_dict() for f in self.findings],
+            "unsuppressed": len(self.unsuppressed),
+            "facts": self.facts,
+        }
+
+    def render(self) -> str:
+        lines = [f.render() for f in self.findings]
+        n_sup = sum(1 for f in self.findings if f.suppressed)
+        lines.append(
+            f"repro-lint: {self.files} file(s), "
+            f"{len(self.unsuppressed)} finding(s), {n_sup} suppressed")
+        return "\n".join(lines)
+
+
+def _iter_py_files(paths: Sequence[str]) -> List[Tuple[Path, str]]:
+    out: List[Tuple[Path, str]] = []
+    for raw in paths:
+        p = Path(raw)
+        if p.is_file() and p.suffix == ".py":
+            out.append((p, p.as_posix()))
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if "__pycache__" in f.parts:
+                    continue
+                out.append((f, f.as_posix()))
+    return out
+
+
+def _select_rules(select: Optional[Sequence[str]]):
+    from .registry import ALL_RULES
+
+    if not select:
+        picked = ALL_RULES.values()
+    else:
+        wanted = {s.strip() for s in select if s.strip()}
+        picked = [r for rid, r in ALL_RULES.items()
+                  if rid in wanted or any(rid.startswith(w)
+                                          for w in wanted)]
+    # one pass may own several ids (RL401/RL402) — run each object once
+    seen, rules = set(), []
+    for r in picked:
+        if id(r) not in seen:
+            seen.add(id(r))
+            rules.append(r)
+    return rules
+
+
+def _apply_suppressions(findings: List[Finding],
+                        contexts: Dict[str, FileContext]) -> List[Finding]:
+    out = []
+    for f in findings:
+        ctx = contexts.get(f.file)
+        if ctx is not None:
+            sup = ctx.suppression_for(f.rule, f.line)
+            if sup is not None:
+                f.suppressed, f.reason = True, sup.reason
+        out.append(f)
+    # a suppression comment with no justification is a finding in itself
+    for ctx in contexts.values():
+        for sups in ctx.suppressions.values():
+            for sup in sups:
+                if not sup.reason:
+                    out.append(Finding(
+                        rule=META_SUPPRESSION, file=ctx.rel, line=sup.line,
+                        col=0,
+                        message=(
+                            "suppression without a justification: write "
+                            "'# repro-lint: noqa[RLxxx] -- <reason>' — "
+                            "the reason is mandatory and is reviewed like "
+                            "code"),
+                        hint="append '-- <why this invariant is safe to "
+                             "waive here>'"))
+    return out
+
+
+def lint_paths(paths: Sequence[str],
+               select: Optional[Sequence[str]] = None) -> LintResult:
+    """Lint ``paths`` (files and/or directory roots) and return the
+    full :class:`LintResult` (findings + AST-extracted project facts)."""
+    from . import facts as facts_mod
+
+    rules = _select_rules(select)
+    contexts: Dict[str, FileContext] = {}
+    findings: List[Finding] = []
+    nfiles = 0
+    for path, rel in _iter_py_files(paths):
+        nfiles += 1
+        try:
+            source = path.read_text()
+            ctx = FileContext(path, rel, source)
+        except SyntaxError as e:
+            findings.append(Finding(
+                rule=META_SYNTAX, file=rel, line=e.lineno or 1, col=0,
+                message=f"file does not parse: {e.msg}",
+                hint="fix the syntax error"))
+            continue
+        contexts[ctx.rel] = ctx
+    project = Project(list(contexts.values()))
+    for rule in rules:
+        for ctx in project.files:
+            findings.extend(rule.check(ctx))
+        findings.extend(rule.check_project(project))
+    findings = _apply_suppressions(findings, contexts)
+    findings.sort(key=lambda f: (f.file, f.line, f.col, f.rule))
+    return LintResult(findings=findings, files=nfiles,
+                      facts=facts_mod.collect_facts(project))
+
+
+def lint_source(source: str, path: str = "snippet.py",
+                select: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint one in-memory snippet (fixture/doc entry point).  ``path``
+    is the pretend location — path-scoped rules (e.g. the RL2xx
+    determinism rules, active under ``solvers/`` and ``core/``) key off
+    it.  Returns the findings, suppressed ones included."""
+    rules = _select_rules(select)
+    ctx = FileContext(Path(path), path, source)
+    findings: List[Finding] = []
+    project = Project([ctx])
+    for rule in rules:
+        findings.extend(rule.check(ctx))
+        findings.extend(rule.check_project(project))
+    findings = _apply_suppressions(findings, {ctx.rel: ctx})
+    findings.sort(key=lambda f: (f.file, f.line, f.col, f.rule))
+    return findings
+
+
+def main_json(result: LintResult) -> str:
+    return json.dumps(result.to_json(), indent=2, sort_keys=True)

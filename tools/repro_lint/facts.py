@@ -1,0 +1,126 @@
+"""AST-extracted project facts — the linter's gift to the doc gates.
+
+``tools/check_docs.py`` used to derive its freshness gates (span
+taxonomy, backend-family matrix, erasure arities) from regexes over raw
+source text, which made them hostage to grep-able formatting: a span
+call split across lines, a backend registered through an alias, or a
+reformatted ``MAX_PARITY`` assignment silently emptied the gate.  These
+extractors walk the *AST*, so the facts survive any formatting.
+
+Completeness of the span-name fact relies on rule RL302 (span/event
+names must be string literals at the call site) — the same style rule
+the textual scan assumed, now enforced instead of hoped for.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Set
+
+from .core import FileContext, Project
+
+TRACER_METHODS = ("span", "event")
+REGISTER_FUNCS = ("register_backend", "register_backend_class")
+
+
+def _call_name(func: ast.AST) -> str:
+    """Trailing identifier of a call target (``a.b.c`` -> ``c``)."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def span_names(tree: ast.Module) -> Set[str]:
+    """Span/event names emitted by this module — string literals at
+    ``.span("...")`` / ``.event("...")`` call sites."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in TRACER_METHODS and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            names.add(node.args[0].value)
+    return names
+
+
+def backend_families(tree: ast.Module) -> Set[str]:
+    """Backend spec families registered by this module — string literals
+    at ``register_backend("name", ...)`` call sites."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and _call_name(node.func) in REGISTER_FUNCS and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            names.add(node.args[0].value)
+    return names
+
+
+def max_parity(tree: ast.Module) -> int:
+    """``MAX_PARITY`` module constant (0 when the module has none)."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if (isinstance(tgt, ast.Name) and tgt.id == "MAX_PARITY"
+                        and isinstance(node.value, ast.Constant)
+                        and isinstance(node.value.value, int)):
+                    return node.value.value
+        if (isinstance(node, ast.AnnAssign)
+                and isinstance(node.target, ast.Name)
+                and node.target.id == "MAX_PARITY"
+                and isinstance(node.value, ast.Constant)
+                and isinstance(node.value.value, int)):
+            return node.value.value
+    return 0
+
+
+def erasure_arities_from_parity(parity: int) -> List[str]:
+    if parity < 1:
+        return []
+    return ["+p"] + [f"+{p}p" for p in range(2, parity + 1)]
+
+
+def collect_facts(project: Project) -> dict:
+    """The machine-readable facts block of ``--json`` output."""
+    spans: Set[str] = set()
+    families: Set[str] = set()
+    parity = 0
+    tracer_sites = 0
+    for ctx in project.files:
+        spans |= span_names(ctx.tree)
+        families |= backend_families(ctx.tree)
+        if ctx.path_endswith("gf256.py"):
+            parity = max(parity, max_parity(ctx.tree))
+        for node in ast.walk(ctx.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in TRACER_METHODS):
+                tracer_sites += 1
+    return {
+        "span_names": sorted(spans),
+        "backend_families": sorted(families),
+        "erasure_arities": erasure_arities_from_parity(parity),
+        "tracer_sites": tracer_sites,
+    }
+
+
+def _parse_root(src_root) -> Project:
+    files = []
+    for path in sorted(Path(src_root).rglob("*.py")):
+        if "__pycache__" in path.parts:
+            continue
+        try:
+            files.append(FileContext(path, path.as_posix(),
+                                     path.read_text()))
+        except SyntaxError:
+            continue  # check_docs must stay usable on a broken tree
+    return Project(files)
+
+
+def collect_facts_from_root(src_root) -> dict:
+    """Standalone entry point for ``check_docs.py`` (no runner needed):
+    parse everything under ``src_root`` and return the facts block."""
+    return collect_facts(_parse_root(src_root))

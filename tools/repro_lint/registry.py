@@ -1,0 +1,52 @@
+"""The rule registry: five families plus the framework's meta rules.
+
+``ALL_RULES`` maps every reportable rule id to the rule object that
+emits it; one object may own several ids (the ABC-surface pass emits
+both RL401 missing-member and RL402 signature-drift findings), so
+consumers running rules must deduplicate by object identity — the
+runner does.  ``META_RULES`` are produced by the framework itself
+(suppression hygiene, parse failures) and can never be suppressed.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .core import Rule
+from . import (
+    rules_compat,
+    rules_determinism,
+    rules_hygiene,
+    rules_session,
+    rules_tracer,
+)
+
+#: framework-emitted ids -> human description (not Rule objects)
+META_RULES: Dict[str, str] = {
+    "RL001": "suppression without a written justification",
+    "RL002": "file does not parse",
+}
+
+
+def _build() -> Dict[str, Rule]:
+    table: Dict[str, Rule] = {}
+    for mod in (rules_compat, rules_determinism, rules_tracer,
+                rules_session, rules_hygiene):
+        for rule in mod.RULES:
+            assert rule.rule_id not in table, rule.rule_id
+            table[rule.rule_id] = rule
+            # secondary ids emitted by the same pass (e.g. RL402)
+            extra = getattr(rule, "MISMATCH_ID", None)
+            if extra:
+                table[extra] = rule
+    return table
+
+
+ALL_RULES: Dict[str, Rule] = _build()
+
+
+def rule_families() -> Dict[str, List[str]]:
+    """``{"RL1": ["RL101", ...], ...}`` — the five shipped families."""
+    fams: Dict[str, List[str]] = {}
+    for rid in sorted(ALL_RULES):
+        fams.setdefault(rid[:3], []).append(rid)
+    return fams

@@ -1,0 +1,123 @@
+"""RL2xx — bit-determinism of the solve trajectory.
+
+The sharded-exactness contract (DESIGN.md §10) requires every reduction
+touching solver state to run through the order-pinned block-hierarchical
+forms (``solver_dot(op)`` / ``make_det_dot`` / ``make_det_rowdots``): a
+raw ``jnp.vdot``/``jnp.sum`` lets XLA pick a reduction order per
+compiled program, so the same mathematical dot produces different
+low-order bits under different placements.  Library code must also stay
+off wall-clock time and unseeded RNG — both make a "deterministic"
+trajectory diverge between two runs that should be bit-identical.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from .core import FileContext, Finding, Rule
+
+#: raw XLA reductions whose combine order is placement-dependent
+RAW_REDUCTIONS = ("vdot", "dot", "sum")
+#: module aliases that mean jax.numpy
+JNP_ALIASES = ("jnp", "jax.numpy")
+#: wall-clock call targets (time.perf_counter — a monotonic duration
+#: meter, never a timestamp that leaks into results — is allowed)
+WALL_CLOCK = ("time.time", "time.time_ns", "datetime.now",
+              "datetime.utcnow", "datetime.datetime.now",
+              "datetime.datetime.utcnow", "datetime.date.today",
+              "date.today")
+#: numpy legacy global-RNG functions (unseeded process-global stream)
+NP_GLOBAL_RNG = ("rand", "randn", "randint", "random", "random_sample",
+                 "standard_normal", "normal", "uniform", "choice",
+                 "shuffle", "permutation", "seed")
+
+
+class RawReductionRule(Rule):
+    rule_id = "RL201"
+    title = "raw jnp reduction on solver state in solvers//core/"
+    hint = "route through solver_dot(op) / make_det_dot / " \
+           "make_det_rowdots (repro.core.spmv) — the order-pinned forms"
+    invariant = "DESIGN.md §10: solver-state reductions are " \
+                "block-hierarchical with a pinned combine order, so a " \
+                "sharded solve is bitwise identical to the unsharded one"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if not ctx.in_dir("solvers", "core"):
+            return
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in RAW_REDUCTIONS):
+                continue
+            if ast.unparse(node.func.value) in JNP_ALIASES:
+                yield self.finding(
+                    ctx, node, f"raw jnp.{node.func.attr}(...) — XLA "
+                    f"reassociates its reduction order per placement")
+
+
+class WallClockRule(Rule):
+    rule_id = "RL202"
+    title = "wall-clock time in library code"
+    hint = "use time.perf_counter() for durations; thread timestamps " \
+           "in from the caller if one is genuinely needed"
+    invariant = "DESIGN.md §9: BENCH/trace determinism excludes wall " \
+                "subtrees; library results must not embed wall-clock time"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        from_time_names = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom) and node.module == "time":
+                for alias in node.names:
+                    if alias.name in ("time", "time_ns"):
+                        from_time_names.add(alias.asname or alias.name)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if isinstance(func, ast.Attribute) \
+                    and ast.unparse(func) in WALL_CLOCK:
+                yield self.finding(
+                    ctx, node, f"wall-clock call {ast.unparse(func)}()")
+            elif isinstance(func, ast.Name) and func.id in from_time_names:
+                yield self.finding(
+                    ctx, node, f"wall-clock call {func.id}() "
+                    f"(imported from time)")
+
+
+class UnseededRngRule(Rule):
+    rule_id = "RL203"
+    title = "unseeded / process-global RNG in library code"
+    hint = "use np.random.default_rng(seed) / np.random.SeedSequence " \
+           "with an explicit seed, or jax.random with a threaded key"
+    invariant = "the fuzz/bench contract: every randomized path is " \
+                "seeded, so campaigns and benches replay bit-identically"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        stdlib_random = any(
+            isinstance(node, ast.Import)
+            and any(a.name == "random" for a in node.names)
+            for node in ast.walk(ctx.tree))
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)):
+                continue
+            dotted = ast.unparse(node.func)
+            recv = ast.unparse(node.func.value)
+            if stdlib_random and recv == "random":
+                yield self.finding(
+                    ctx, node, f"stdlib {dotted}() draws from the "
+                    f"unseeded process-global stream")
+            elif recv in ("np.random", "numpy.random") \
+                    and node.func.attr in NP_GLOBAL_RNG:
+                yield self.finding(
+                    ctx, node, f"{dotted}() uses numpy's process-global "
+                    f"RNG state")
+            elif node.func.attr == "default_rng" \
+                    and recv in ("np.random", "numpy.random") \
+                    and not node.args and not node.keywords:
+                yield self.finding(
+                    ctx, node, f"{dotted}() without a seed is entropy-"
+                    f"seeded — unreproducible")
+
+
+RULES: List[Rule] = [RawReductionRule(), WallClockRule(), UnseededRngRule()]

@@ -1,0 +1,142 @@
+"""RL5xx — hygiene: the small defects that become heisenbugs at scale.
+
+Mutable default arguments alias state across calls (a campaign list
+that remembers the previous solve's failures); a bare ``except``
+swallows ``UnrecoverableFailure`` and ``KeyboardInterrupt`` alike,
+turning the exact-or-raise recovery contract into silent divergence; an
+``__all__`` naming a ghost breaks ``from module import *`` and the
+check_api façade gate at the worst possible time (a user's first
+import).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from .core import FileContext, Finding, Rule
+
+_MUTABLE_DISPLAYS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp)
+_MUTABLE_CTORS = ("list", "dict", "set", "bytearray", "defaultdict",
+                  "OrderedDict", "Counter", "deque")
+
+
+def _is_mutable_default(node: ast.AST) -> bool:
+    if isinstance(node, _MUTABLE_DISPLAYS):
+        return True
+    if isinstance(node, ast.Call):
+        name = (node.func.id if isinstance(node.func, ast.Name)
+                else node.func.attr
+                if isinstance(node.func, ast.Attribute) else "")
+        return name in _MUTABLE_CTORS
+    return False
+
+
+class MutableDefaultRule(Rule):
+    rule_id = "RL501"
+    title = "mutable default argument"
+    hint = "default to None and materialize inside the function " \
+           "(x = [] if x is None else x), or use a tuple"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef, ast.Lambda)):
+                continue
+            defaults = list(node.args.defaults) + [
+                d for d in node.args.kw_defaults if d is not None]
+            for d in defaults:
+                if _is_mutable_default(d):
+                    fname = getattr(node, "name", "<lambda>")
+                    yield self.finding(
+                        ctx, d, f"mutable default {ast.unparse(d)!r} in "
+                        f"{fname}() is shared across every call")
+
+
+class BareExceptRule(Rule):
+    rule_id = "RL502"
+    title = "bare except"
+    hint = "catch the narrowest type that can actually occur; " \
+           "UnrecoverableFailure must always propagate (exact-or-raise)"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ExceptHandler) and node.type is None:
+                yield self.finding(
+                    ctx, node, "bare 'except:' swallows "
+                    "UnrecoverableFailure, KeyboardInterrupt and "
+                    "SystemExit alike")
+
+
+class AllGhostRule(Rule):
+    rule_id = "RL503"
+    title = "__all__ names that do not resolve"
+    hint = "every __all__ entry must be bound at module top level " \
+           "(def/class/import/assignment) — check_api's façade gate " \
+           "imports them all"
+
+    def _top_level_bindings(self, tree: ast.Module) -> Set[str]:
+        """Names bound at module scope, descending into top-level
+        If/Try/With bodies (version-guarded imports) but not into
+        functions or classes.  Returns ``{"*"}``-augmented set when a
+        star import makes static resolution impossible."""
+        bound: Set[str] = set()
+        stack = list(tree.body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                bound.add(node.name)
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    bound.add(alias.asname or alias.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom):
+                for alias in node.names:
+                    if alias.name == "*":
+                        bound.add("*")
+                    else:
+                        bound.add(alias.asname or alias.name)
+            elif isinstance(node, (ast.Assign, ast.AnnAssign,
+                                   ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for tgt in targets:
+                    for sub in ast.walk(tgt):
+                        if isinstance(sub, ast.Name):
+                            bound.add(sub.id)
+            elif isinstance(node, ast.If):
+                stack.extend(node.body)
+                stack.extend(node.orelse)
+            elif isinstance(node, ast.Try):
+                stack.extend(node.body)
+                stack.extend(node.finalbody)
+                for h in node.handlers:
+                    stack.extend(h.body)
+            elif isinstance(node, ast.With):
+                stack.extend(node.body)
+        return bound
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        all_node = None
+        for node in ctx.tree.body:
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == "__all__"
+                    for t in node.targets):
+                all_node = node
+        if all_node is None or not isinstance(all_node.value,
+                                              (ast.List, ast.Tuple)):
+            return
+        names = [e.value for e in all_node.value.elts
+                 if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+        bound = self._top_level_bindings(ctx.tree)
+        if "*" in bound:
+            return  # star import: not statically resolvable, runtime
+            # gate (check_api) still covers it
+        for name in names:
+            if name not in bound:
+                yield self.finding(
+                    ctx, all_node, f"__all__ lists {name!r} but the "
+                    f"module never binds it")
+
+
+RULES: List[Rule] = [MutableDefaultRule(), BareExceptRule(), AllGhostRule()]

@@ -1,0 +1,289 @@
+"""RL4xx — persistence-session lifecycle and ABC conformance.
+
+Crash consistency (docs/recovery-format.md) hangs on two structural
+facts the runtime can only probe, never prove:
+
+- every concrete :class:`PersistenceBackend` / :class:`PersistSession`
+  implements the *full* abstract surface with the declared signatures —
+  a subclass that silently misses ``abort`` falls back to a parent's
+  (or raises ``TypeError`` at construction deep inside a campaign), and
+  a renamed parameter breaks keyword call sites in the driver;
+- every code path that stages a persistence event (``.begin(...)``)
+  pairs it with ``commit`` and an abort/teardown edge, so a staged-but-
+  uncommitted event can never surface after a crash (the "aborted
+  events never surface" rule of DESIGN.md §6).
+
+The ABC surface is read from the scanned tree itself (the class that
+defines ``@abc.abstractmethod`` members under the well-known names), so
+the rule tracks the real contract, not a vendored copy of it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .core import FileContext, Finding, Project, Rule
+
+#: roots of the persistence contract (abstract surfaces live here)
+ABC_NAMES = ("PersistSession", "PersistenceBackend")
+
+_ABSTRACT_DECOS = ("abc.abstractmethod", "abstractmethod",
+                   "abc.abstractproperty", "abstractproperty")
+_PROPERTY_DECOS = ("property", "abc.abstractproperty", "abstractproperty",
+                   "cached_property", "functools.cached_property")
+
+
+def _deco_names(fn: ast.FunctionDef) -> List[str]:
+    return [ast.unparse(d) for d in fn.decorator_list]
+
+
+def _is_abstract(fn: ast.FunctionDef) -> bool:
+    return any(d in _ABSTRACT_DECOS for d in _deco_names(fn))
+
+
+def _is_property(fn: ast.FunctionDef) -> bool:
+    return any(d in _PROPERTY_DECOS for d in _deco_names(fn))
+
+
+def _arg_names(fn: ast.FunctionDef) -> Tuple[Tuple[str, ...], bool]:
+    """Positional parameter names (kind-insensitive) and whether the
+    implementation is fully variadic (``*args, **kwargs``)."""
+    a = fn.args
+    names = tuple(p.arg for p in (*a.posonlyargs, *a.args))
+    variadic = a.vararg is not None and a.kwarg is not None
+    return names, variadic
+
+
+class _ClassInfo:
+    def __init__(self, ctx: FileContext, node: ast.ClassDef):
+        self.ctx = ctx
+        self.node = node
+        self.name = node.name
+        self.base_names = [b.attr if isinstance(b, ast.Attribute) else
+                           b.id if isinstance(b, ast.Name) else ""
+                           for b in node.bases]
+        self.methods: Dict[str, ast.FunctionDef] = {}
+        self.class_attrs: Set[str] = set()
+        self.self_attrs: Set[str] = set()
+        for stmt in node.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.methods[stmt.name] = stmt
+            elif isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name):
+                        self.class_attrs.add(tgt.id)
+            elif isinstance(stmt, ast.AnnAssign) \
+                    and isinstance(stmt.target, ast.Name):
+                self.class_attrs.add(stmt.target.id)
+        for sub in ast.walk(node):
+            if (isinstance(sub, ast.Attribute)
+                    and isinstance(sub.ctx, ast.Store)
+                    and isinstance(sub.value, ast.Name)
+                    and sub.value.id == "self"):
+                self.self_attrs.add(sub.attr)
+
+    @property
+    def is_abstract(self) -> bool:
+        return any(_is_abstract(fn) for fn in self.methods.values())
+
+
+def _class_table(project: Project) -> Dict[str, _ClassInfo]:
+    table: Dict[str, _ClassInfo] = {}
+    for ctx in project.files:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                table.setdefault(node.name, _ClassInfo(ctx, node))
+    return table
+
+
+def _chain(info: _ClassInfo, table: Dict[str, _ClassInfo],
+           stop: str) -> List[_ClassInfo]:
+    """MRO-ish linearization within the project, ``info`` first, up to
+    (excluding) the class named ``stop``."""
+    out: List[_ClassInfo] = []
+    seen: Set[str] = set()
+    frontier = [info]
+    while frontier:
+        cur = frontier.pop(0)
+        if cur.name in seen or cur.name == stop:
+            continue
+        seen.add(cur.name)
+        out.append(cur)
+        frontier.extend(table[b] for b in cur.base_names if b in table)
+    return out
+
+
+def _descends_from(info: _ClassInfo, table: Dict[str, _ClassInfo],
+                   root: str) -> bool:
+    seen: Set[str] = set()
+    frontier = list(info.base_names)
+    while frontier:
+        name = frontier.pop(0)
+        if name in seen:
+            continue
+        seen.add(name)
+        if name == root:
+            return True
+        if name in table:
+            frontier.extend(table[name].base_names)
+    return False
+
+
+class AbcSurfaceRule(Rule):
+    """RL401 missing member + RL402 signature drift, one project pass."""
+
+    rule_id = "RL401"
+    title = "concrete backend/session misses part of the ABC surface"
+    hint = "implement every @abc.abstractmethod of PersistSession / " \
+           "PersistenceBackend (docs/backend-api.md lists the contract)"
+    invariant = "DESIGN.md §7: the driver speaks only the session ABC; " \
+                "a partial implementation fails mid-campaign, not at review"
+
+    MISMATCH_ID = "RL402"
+    MISMATCH_TITLE = "backend/session method signature drifts from the ABC"
+    MISMATCH_HINT = ("match the abstract method's parameter names — the "
+                     "driver and composites call them by keyword")
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        table = _class_table(project)
+        # names used as a base by some other project class: intermediate
+        # bases defer the remaining surface to their leaves (ABCMeta
+        # blocks direct instantiation anyway), so only leaves carry the
+        # full-surface obligation
+        base_of = {b for c in table.values() for b in c.base_names}
+        for root_name in ABC_NAMES:
+            root = table.get(root_name)
+            if root is None:
+                continue
+            spec = {name: fn for name, fn in root.methods.items()
+                    if _is_abstract(fn)}
+            if not spec:
+                continue
+            for info in table.values():
+                if info is root or info.is_abstract \
+                        or info.name in base_of \
+                        or not _descends_from(info, table, root_name):
+                    continue
+                chain = _chain(info, table, stop=root_name)
+                for mname, abstract_fn in sorted(spec.items()):
+                    impl = next((c.methods[mname] for c in chain
+                                 if mname in c.methods), None)
+                    if impl is None:
+                        if _is_property(abstract_fn) and any(
+                                mname in c.class_attrs
+                                or mname in c.self_attrs for c in chain):
+                            continue  # property satisfied by an attribute
+                        yield self.finding(
+                            info.ctx, info.node,
+                            f"{info.name} (concrete subclass of "
+                            f"{root_name}) does not implement abstract "
+                            f"{mname!r}")
+                        continue
+                    want, _ = _arg_names(abstract_fn)
+                    got, variadic = _arg_names(impl)
+                    if not variadic and want != got:
+                        yield Finding(
+                            rule=self.MISMATCH_ID, file=info.ctx.rel,
+                            line=impl.lineno, col=impl.col_offset,
+                            message=(
+                                f"{info.name}.{mname} signature "
+                                f"{got} drifts from the {root_name} "
+                                f"contract {want}"),
+                            hint=self.MISMATCH_HINT)
+
+
+class BeginPairingRule(Rule):
+    rule_id = "RL403"
+    title = "staged persist (.begin) without commit/abort pairing"
+    hint = "pair every .begin(...) with .commit() on the success path " \
+           "and .abort()/.fail()/drain teardown on every failure edge " \
+           "(DESIGN.md §6: aborted events never surface)"
+    invariant = "DESIGN.md §6 + docs/recovery-format.md crash-" \
+                "consistency: a staged-but-uncommitted event must never " \
+                "be fetchable"
+
+    _ABORTERS = ("abort", "fail", "fail_storage", "drain",
+                 "persist_abort")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        begin_calls = []
+        has_commit = False
+        has_abort = False
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Attribute):
+                if node.func.attr in ("begin", "persist_begin"):
+                    begin_calls.append(node)
+                elif node.func.attr in ("commit", "persist_commit"):
+                    has_commit = True
+                elif node.func.attr in self._ABORTERS:
+                    has_abort = True
+            elif isinstance(node.func, ast.Name):
+                if node.func.id in ("persist_begin",):
+                    begin_calls.append(node)
+                elif node.func.id in ("persist_commit",):
+                    has_commit = True
+                elif node.func.id in ("persist_abort",):
+                    has_abort = True
+        if not begin_calls:
+            return
+        if not has_commit:
+            yield self.finding(
+                ctx, begin_calls[0], "module stages persistence events "
+                "(.begin) but never commits them — staged payloads leak")
+        if not has_abort:
+            yield self.finding(
+                ctx, begin_calls[0], "module stages persistence events "
+                "(.begin) with no abort/teardown edge — a failure here "
+                "leaves uncommitted state that may surface after a crash")
+        for call in begin_calls:
+            yield from self._check_try_edges(ctx, call)
+
+    def _check_try_edges(self, ctx: FileContext,
+                         call: ast.Call) -> Iterable[Finding]:
+        """A begin inside a ``try`` body must have an except/finally that
+        commits or tears down — otherwise the exception edge leaks the
+        staged event."""
+        prev: ast.AST = call
+        for anc in ctx.ancestors(call):
+            if isinstance(anc, ast.Try) and any(
+                    self._in_subtree(stmt, prev, ctx)
+                    for stmt in anc.body):
+                cleanup = list(anc.finalbody)
+                for handler in anc.handlers:
+                    cleanup.extend(handler.body)
+                if not self._has_teardown(cleanup):
+                    yield self.finding(
+                        ctx, call, "staged .begin(...) inside try has no "
+                        "commit/abort on its except/finally edge")
+                return
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return
+            prev = anc
+
+    @staticmethod
+    def _in_subtree(stmt: ast.AST, node: ast.AST,
+                    ctx: FileContext) -> bool:
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if cur is stmt:
+                return True
+            cur = ctx.parents.get(cur)
+        return False
+
+    def _has_teardown(self, stmts) -> bool:
+        for stmt in stmts:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Call):
+                    name = (node.func.attr
+                            if isinstance(node.func, ast.Attribute)
+                            else node.func.id
+                            if isinstance(node.func, ast.Name) else "")
+                    if name in self._ABORTERS + ("commit",
+                                                 "persist_commit"):
+                        return True
+        return False
+
+
+RULES: List[Rule] = [AbcSurfaceRule(), BeginPairingRule()]

@@ -1,0 +1,147 @@
+"""RL3xx — the zero-callable disabled-tracer invariant.
+
+DESIGN.md §9: tracing must cost *zero tracer callables per iteration*
+when disabled.  The idiom is normalize-once (``trace = tracer or None``
+turns any falsy tracer into ``None``) then identity-guard every record
+site (``if trace is not None: trace.event(...)``) — never a truthiness
+check, which would invoke ``NullTracer.__bool__`` on the hot path, and
+never an unguarded call.  Before this linter the invariant was held by
+ONE runtime counting probe over ~22 sites; RL301 proves *every* site is
+dominated by an identity guard, at review time.
+
+RL302 is the companion style rule: span/event names must be string
+literals at the call site.  That is what makes the span-taxonomy
+freshness gate (``tools/check_docs.py`` on ``docs/observability.md``,
+fed by :mod:`repro_lint.facts`) complete — a computed name could never
+be statically enumerated.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from .core import FileContext, Finding, Rule
+
+TRACER_METHODS = ("span", "event")
+
+
+def _is_identity_test(test: ast.AST, recv: str, want_none: bool) -> bool:
+    """``recv is not None`` (want_none=False) / ``recv is None``
+    (want_none=True), possibly as one conjunct of an ``and`` chain."""
+    if isinstance(test, ast.BoolOp) and isinstance(test.op, ast.And):
+        return any(_is_identity_test(v, recv, want_none)
+                   for v in test.values)
+    if isinstance(test, ast.Compare) and len(test.ops) == 1:
+        wanted_op = ast.Is if want_none else ast.IsNot
+        comp = test.comparators[0]
+        if (isinstance(test.ops[0], wanted_op)
+                and isinstance(comp, ast.Constant) and comp.value is None):
+            return ast.unparse(test.left) == recv
+    return False
+
+
+def _contains(stmts, node: ast.AST, ctx: FileContext) -> bool:
+    """Is ``node`` inside the subtree of any statement in ``stmts``?
+    (Checked by parent-chain membership, not a re-walk.)"""
+    targets = set(map(id, stmts))
+    cur: Optional[ast.AST] = node
+    while cur is not None:
+        if id(cur) in targets:
+            return True
+        cur = ctx.parents.get(cur)
+    return False
+
+
+def _early_exit_dominates(ctx: FileContext, call: ast.Call,
+                          recv: str) -> bool:
+    """An ``if recv is None: return/raise/continue/break`` earlier in the
+    enclosing function body (the mirror-commit idiom).  Lexical-order
+    approximation of dominance — sound for this codebase's straight-line
+    method bodies, and a linter may demand the clearer form anyway."""
+    fn = ctx.enclosing_function(call)
+    if fn is None:
+        return False
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.If) and node.lineno < call.lineno
+                and _is_identity_test(node.test, recv, want_none=True)
+                and node.body
+                and isinstance(node.body[-1],
+                               (ast.Return, ast.Raise, ast.Continue,
+                                ast.Break))):
+            return True
+    return False
+
+
+def _is_guarded(ctx: FileContext, call: ast.Call, recv: str) -> bool:
+    prev: ast.AST = call
+    for anc in ctx.ancestors(call):
+        if isinstance(anc, ast.If):
+            if _contains(anc.body, prev, ctx) and \
+                    _is_identity_test(anc.test, recv, want_none=False):
+                return True
+            if _contains(anc.orelse, prev, ctx) and \
+                    _is_identity_test(anc.test, recv, want_none=True):
+                return True
+        elif isinstance(anc, ast.IfExp):
+            if anc.body is prev and \
+                    _is_identity_test(anc.test, recv, want_none=False):
+                return True
+            if anc.orelse is prev and \
+                    _is_identity_test(anc.test, recv, want_none=True):
+                return True
+        elif isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            break  # guards do not cross function boundaries
+        prev = anc
+    return _early_exit_dominates(ctx, call, recv)
+
+
+class UnguardedTracerSiteRule(Rule):
+    rule_id = "RL301"
+    title = "span/event record site not dominated by an identity guard"
+    hint = "wrap in 'if <tracer> is not None:' (or early-exit 'if " \
+           "<tracer> is None: return') on an 'x or None'-normalized " \
+           "tracer — see DESIGN.md §9"
+    invariant = "DESIGN.md §9: zero tracer callables per iteration when " \
+                "tracing is disabled (the counting-probe contract)"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in TRACER_METHODS):
+                continue
+            recv = ast.unparse(node.func.value)
+            if not _is_guarded(ctx, node, recv):
+                yield self.finding(
+                    ctx, node, f"{recv}.{node.func.attr}(...) runs "
+                    f"unconditionally — with tracing disabled this is a "
+                    f"per-iteration callable the §9 contract forbids")
+
+
+class NonLiteralSpanNameRule(Rule):
+    rule_id = "RL302"
+    title = "span/event name is not a string literal"
+    hint = "pass the name as a literal; put variability in labels " \
+           "(span('recovery.fetch', blocks=...)), not the name"
+    invariant = "docs/observability.md taxonomy freshness: names are " \
+                "statically enumerable only if they are literals"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in TRACER_METHODS):
+                continue
+            if not node.args:
+                yield self.finding(
+                    ctx, node, f".{node.func.attr}(...) without a "
+                    f"positional name argument")
+            elif not (isinstance(node.args[0], ast.Constant)
+                      and isinstance(node.args[0].value, str)):
+                yield self.finding(
+                    ctx, node, f".{node.func.attr}({ast.unparse(node.args[0])}, "
+                    f"...) — computed span/event name defeats the "
+                    f"taxonomy freshness gate")
+
+
+RULES: List[Rule] = [UnguardedTracerSiteRule(), NonLiteralSpanNameRule()]
