@@ -32,6 +32,16 @@ counts the running process cannot build a mesh for are skipped; the
 1-shard row is always present (``benchmarks/run.py --json`` fakes 8
 host devices so the committed document carries 1/4/8).
 
+The ``service`` subtree (ISSUE 9, DESIGN.md §12) replays the shared
+seeded request trace (``repro.serving.trace``) through the multi-tenant
+:class:`~repro.serving.SolveService` twice — without failures and with
+every tenant carrying a survivable failure campaign — and reports the
+admission/queue statistics in deterministic service *steps*
+(``counts``: completions, queue-wait p50/p99, mean batch occupancy,
+total service steps) plus the measured throughput (``wall``:
+solves/sec), the latter excluded from the determinism contract like
+every other wall subtree.
+
 Schema: docs/observability.md §4; ``tools/check_bench.py`` is the gate.
 """
 from __future__ import annotations
@@ -173,6 +183,7 @@ def build(seed: int = 0, smoke: bool = None) -> dict:
                     "campaign": {"blocks": [1], "at_iteration": at}},
         "specs": specs,
         "sharded": _sharded_rows(grid, tol, at),
+        "service": _service_rows(seed, smoke),
     }
 
 
@@ -223,6 +234,52 @@ def _sharded_rows(grid, tol: float, at: int) -> dict:
     return rows
 
 
+def _service_rows(seed: int, smoke: bool) -> dict:
+    """The multi-tenant service rows (DESIGN.md §12): sustained seeded
+    load through :class:`~repro.serving.SolveService`, with and without
+    per-tenant failure campaigns.  Queue statistics are in deterministic
+    service steps, so everything under ``counts`` is a pure function of
+    ``(seed, smoke)``; only throughput lives under ``wall``."""
+    from repro import api
+
+    nrequests = 4 if smoke else 8
+    lanes = 2   # narrow on purpose: sustained load must queue
+    rows: dict = {"trace": {"seed": int(seed), "requests": nrequests,
+                            "lanes": lanes}}
+    for label, rate in (("no_failures", 0.0), ("with_failures", 1.0)):
+        reqs = api.generate_request_trace(seed, nrequests=nrequests,
+                                          failure_rate=rate,
+                                          survivable_only=True)
+        svc = api.SolveService(api.ServiceConfig(lanes=lanes,
+                                                 max_queue=2 * nrequests))
+        t0 = time.perf_counter()
+        tickets = svc.replay(reqs)
+        wall_s = time.perf_counter() - t0
+        done = [t for t in tickets.values() if t.accepted]
+        waits = svc.metrics.histogram("service.queue_wait_steps")
+        occupancy = svc.metrics.histogram("service.batch_occupancy")
+        rows[label] = {
+            "counts": {
+                "requests": len(reqs),
+                "completed": svc.metrics.counter_value("service.completed"),
+                "rejected": svc.metrics.counter_value("service.rejected"),
+                "converged": sum(1 for t in done
+                                 if t.result.report.converged),
+                "failures_recovered": sum(
+                    t.result.report.failures_recovered for t in done),
+                "service_steps": svc.now,
+                "queue_wait_steps_p50": waits.percentile(50),
+                "queue_wait_steps_p99": waits.percentile(99),
+                "batch_occupancy_mean": occupancy.mean,
+            },
+            "wall": {
+                "elapsed_s": wall_s,
+                "solves_per_s": len(done) / max(wall_s, 1e-12),
+            },
+        }
+    return rows
+
+
 def rows(seed: int = 0):
     """CSV view for the default ``run.py`` harness: the headline
     quantities per spec (the JSON document is the primary artifact)."""
@@ -246,4 +303,12 @@ def rows(seed: int = 0):
                     entry["wall"]["hidden_fraction"],
                     f"overlap pipeline at {n} shard(s), wall-clock "
                     f"dependent"))
+    for label in ("no_failures", "with_failures"):
+        entry = doc["service"][label]
+        out.append((f"trajectory_service_{label}_queue_wait_p99_steps",
+                    entry["counts"]["queue_wait_steps_p99"],
+                    "multi-tenant service queue wait, deterministic steps"))
+        out.append((f"trajectory_service_{label}_solves_per_s",
+                    entry["wall"]["solves_per_s"],
+                    "multi-tenant service throughput, wall-clock dependent"))
     return out

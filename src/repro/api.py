@@ -49,6 +49,13 @@ from repro.solvers.driver import (
     plan_campaign,
 )
 from repro.solvers.registry import SOLVERS, make_backend, make_solver
+from repro.serving.solve_service import (
+    ServiceConfig,
+    ServiceError,
+    ServiceTicket,
+    SolveService,
+)
+from repro.serving.trace import ServiceRequest, generate_request_trace
 
 __all__ = [
     "Problem",
@@ -74,6 +81,13 @@ __all__ = [
     "FailurePlan",
     "SolveConfig",
     "SolveReport",
+    "SolveService",
+    "ServiceConfig",
+    "ServiceError",
+    "ServiceTicket",
+    "ServiceRequest",
+    "generate_request_trace",
+    "serve",
 ]
 
 #: the composite spec families — they take arguments, so the default
@@ -358,3 +372,23 @@ def solve(
     )
     return SolveResult(state=state, report=report, captured=captured,
                        backend=backend)
+
+
+def serve(
+    requests: Sequence[ServiceRequest],
+    lanes: int = 4,
+    max_queue: int = 8,
+    tracer=None,
+) -> Dict[str, ServiceTicket]:
+    """Replay a multi-tenant request trace through a fresh
+    :class:`SolveService` (docs/serving.md) and return tenant ->
+    ticket; each accepted ticket carries its :class:`SolveResult`.
+    For incremental submission use the service object directly::
+
+        svc = api.SolveService(api.ServiceConfig(lanes=8))
+        ticket = svc.submit(problem, "pcg", failures=campaign)
+        svc.drain()
+    """
+    svc = SolveService(ServiceConfig(lanes=lanes, max_queue=max_queue,
+                                     tracer=tracer))
+    return svc.replay(requests)

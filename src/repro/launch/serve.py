@@ -1,4 +1,15 @@
-"""Production serving driver: batched prefill + decode for any arch.
+"""Serving driver.
+
+Default path — the multi-tenant batched **solve service**
+(docs/serving.md): replay a seeded request trace through
+:class:`repro.serving.SolveService` and print per-tenant outcomes plus
+the service's admission/queue statistics::
+
+    PYTHONPATH=src python -m repro.launch.serve --seed 0 --requests 6 \
+        --lanes 4 --failures
+
+LM path (kept from the original driver) — batched prefill + decode for
+any registered arch::
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3_12b --smoke \
         --batch 4 --prompt-len 64 --gen 32
@@ -8,23 +19,15 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 
-from repro.distributed.sharding import set_rules
-from repro.launch.mesh import make_mesh_for
-from repro.models import registry as R
-from repro.serving.engine import ServeEngine
+def _serve_lm(args) -> None:
+    import jax
+    import jax.numpy as jnp
 
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=R.ARCH_IDS)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    args = ap.parse_args()
+    from repro.distributed.sharding import set_rules
+    from repro.launch.mesh import make_mesh_for
+    from repro.models import registry as R
+    from repro.serving.engine import ServeEngine
 
     cfg = R.get_config(args.arch, smoke=args.smoke)
     ndev = len(jax.devices())
@@ -49,6 +52,68 @@ def main() -> None:
     wall = time.perf_counter() - t0
     print(f"{cfg.name}: {out.shape} tokens in {wall:.2f}s "
           f"({args.batch*args.gen/wall:.1f} tok/s incl. compile)")
+
+
+def _serve_solves(args) -> None:
+    from repro import api
+
+    reqs = api.generate_request_trace(
+        args.seed, nrequests=args.requests,
+        failure_rate=args.failure_rate if args.failures else 0.0,
+        survivable_only=True)
+    svc = api.SolveService(api.ServiceConfig(lanes=args.lanes,
+                                             max_queue=args.max_queue))
+    t0 = time.perf_counter()
+    tickets = svc.replay(reqs)
+    wall = time.perf_counter() - t0
+
+    completed = 0
+    for name, ticket in sorted(tickets.items()):
+        if not ticket.accepted:
+            print(f"  {name}: REJECTED ({ticket.reason})")
+            continue
+        rep = ticket.result.report
+        completed += 1
+        print(f"  {name}: {rep.solver:9s} conv={str(rep.converged):5s} "
+              f"iters={rep.iterations:4d} recovered={rep.failures_recovered} "
+              f"wait={rep.service_queue_wait_steps} "
+              f"occupancy={rep.service_batch_occupancy:.2f}")
+    waits = svc.metrics.histogram("service.queue_wait_steps")
+    print(f"service: {completed}/{len(reqs)} completed in {svc.now} steps "
+          f"({wall:.2f}s, {completed / wall:.2f} solves/s); "
+          f"queue-wait p50={waits.percentile(50):.0f} "
+          f"p99={waits.percentile(99):.0f} steps")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None,
+                    help="LM arch id: switches to the prefill/decode "
+                         "engine (default: the solve service)")
+    # LM path
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    # solve-service path
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--max-queue", type=int, default=8)
+    ap.add_argument("--failures", action="store_true",
+                    help="inject the trace's per-tenant failure campaigns")
+    ap.add_argument("--failure-rate", type=float, default=0.6)
+    args = ap.parse_args()
+
+    if args.arch is not None:
+        from repro.models import registry as R
+
+        if args.arch not in R.ARCH_IDS:
+            raise SystemExit(f"unknown arch {args.arch!r}; "
+                             f"one of {sorted(R.ARCH_IDS)}")
+        _serve_lm(args)
+    else:
+        _serve_solves(args)
 
 
 if __name__ == "__main__":

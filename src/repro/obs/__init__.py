@@ -15,6 +15,7 @@ from repro.obs.metrics import (  # noqa: F401
     Gauge,
     Histogram,
     MetricsRegistry,
+    SERVICE_REPORT_PAIRS,
     SHARD_BYTE_PAIRS,
     TRACE_REPORT_PAIRS,
     check_report_consistency,

@@ -39,6 +39,7 @@ __all__ = [
     "check_trace_report",
     "TRACE_REPORT_PAIRS",
     "SHARD_BYTE_PAIRS",
+    "SERVICE_REPORT_PAIRS",
 ]
 
 
@@ -261,6 +262,16 @@ SHARD_BYTE_PAIRS: Tuple[Tuple[str, str, str], ...] = (
 )
 
 
+#: service-residency counter -> SolveReport field (docs/serving.md §5).
+#: Recorded in the *tenant's* registry by the solve service; zero on
+#: solo driver runs, where the counters simply never increment — the
+#: derived-view rule holds on both paths.
+SERVICE_REPORT_PAIRS: Tuple[Tuple[str, str], ...] = (
+    ("service.wait_steps", "service_queue_wait_steps"),
+    ("service.lane_steps", "service_lane_steps"),
+)
+
+
 def check_report_consistency(report) -> None:
     """Verify the report's counters really are views of its attached
     registry (``report.metrics``); raises ``ValueError`` naming the
@@ -272,6 +283,13 @@ def check_report_consistency(report) -> None:
     for metric, field in TRACE_REPORT_PAIRS:
         got = registry.counter_value(metric)
         want = getattr(report, field)
+        if got != want:
+            raise ValueError(
+                f"metrics/report disagreement: registry counter "
+                f"{metric!r} = {got} but SolveReport.{field} = {want}")
+    for metric, field in SERVICE_REPORT_PAIRS:
+        got = registry.counter_value(metric)
+        want = getattr(report, field, 0)
         if got != want:
             raise ValueError(
                 f"metrics/report disagreement: registry counter "

@@ -1,2 +1,22 @@
-"""Serving substrate: batched prefill/decode engine with sharded KV caches."""
+"""Serving substrate.
+
+Two independent engines live here:
+
+- :class:`SolveService` — the multi-tenant batched *solve* service
+  (docs/serving.md, DESIGN.md §12): size-bucketed tenant lanes through
+  one vmapped recoverable driver step, with per-tenant persistence,
+  failure isolation, and bounded admission.
+- :class:`ServeEngine` — the LM prefill/decode engine over sharded KV
+  caches (the ``launch/serve.py --arch ...`` path).
+"""
 from repro.serving.engine import ServeEngine  # noqa: F401
+from repro.serving.solve_service import (  # noqa: F401
+    ServiceConfig,
+    ServiceError,
+    ServiceTicket,
+    SolveService,
+)
+from repro.serving.trace import (  # noqa: F401
+    ServiceRequest,
+    generate_request_trace,
+)

@@ -58,6 +58,11 @@ class RecoverableSolver(abc.ABC):
     #: failure; restored by reconstruction)
     state_nan_scalars: Sequence[str] = ()
 
+    #: whether the solver offers a :meth:`lane_step` for the batched
+    #: multi-tenant service path (DESIGN.md §12); GMRES's restart-cycle
+    #: step is host-orchestrated and stays solo-only
+    batchable = False
+
     # ------------------------------------------------------------------
     @abc.abstractmethod
     def init_state(self, op, precond, b, x0=None):
@@ -86,6 +91,30 @@ class RecoverableSolver(abc.ABC):
         schema.history``; each union vector is concatenated in
         ``failed_blocks`` order.
         """
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def lane_step(cls, op_apply, precond_apply, dot, params):
+        """Un-jitted one-iteration transition for ONE lane of a batched
+        (vmapped) solve — the multi-tenant service path (DESIGN.md §12).
+
+        Unlike :meth:`make_step`, which may close over per-solve Python
+        constants, every per-tenant quantity (Chebyshev recurrence
+        coefficients, the Jacobi weight, BiCGStab's shadow residual)
+        arrives through ``params`` as *traced* values, so one compiled
+        ``vmap`` body serves heterogeneous tenants.  Solvers share the
+        step body with :meth:`make_step` (a module-level builder), so
+        the solo path stays bit-identical.
+        """
+        raise NotImplementedError(
+            f"solver {cls.name!r} has no batched lane step "
+            f"(batchable={cls.batchable})")
+
+    def lane_params(self):
+        """The per-lane ``params`` pytree :meth:`lane_step` consumes, read
+        off a solver built for this tenant (after :meth:`init_state` for
+        solvers whose params are derived there).  Default: none."""
+        return {}
 
     # ------------------------------------------------------------------
     def residual_norm(self, state) -> float:

@@ -45,11 +45,42 @@ class BiCGStabState(NamedTuple):
     k: jax.Array
 
 
+def make_step(op_apply, precond_apply, dot, rhat0,
+              barrier=jax.lax.optimization_barrier):
+    """One BiCGStab iteration as a jittable pure fn.  ``rhat0`` may be a
+    concrete array (solo path) or a traced per-lane vector (batched
+    service path) — the body is shared."""
+
+    def step(state: BiCGStabState) -> BiCGStabState:
+        rho_new = dot(rhat0, state.r)
+        beta = (rho_new / state.rho) * (state.alpha / state.omega)
+        p = state.r + beta * (state.p - state.omega * state.v)
+        # phat/shat feed both an SpMV and the x update; without a
+        # barrier XLA re-fuses their recomputation into the x
+        # kernel, and that fusion choice is placement-dependent —
+        # sharded and unsharded compilations split by ~1 ulp in x
+        # (and only x).  Materializing them once pins the bits.
+        phat = barrier(precond_apply(p))
+        v = op_apply(phat)
+        alpha = rho_new / dot(rhat0, v)
+        s = state.r - alpha * v
+        shat = barrier(precond_apply(s))
+        t = op_apply(shat)
+        omega = dot(t, s) / dot(t, t)
+        x = state.x + alpha * phat + omega * shat
+        r = s - omega * t
+        return BiCGStabState(x=x, r=r, p=p, v=v, rho=rho_new, alpha=alpha,
+                             omega=omega, k=state.k + 1)
+
+    return step
+
+
 class BiCGStabSolver(RecoverableSolver):
     name = "bicgstab"
     schema = BICGSTAB_SCHEMA
     state_vector_fields = ("x", "r", "p", "v")
     state_nan_scalars = ()
+    batchable = True
 
     def __init__(self):
         self._rhat0 = None
@@ -66,32 +97,22 @@ class BiCGStabSolver(RecoverableSolver):
     def make_step(self, op, precond):
         if self._rhat0 is None:
             raise RuntimeError("init_state must run before make_step")
-        rhat0 = self._rhat0
-        op_apply, precond_apply = op.apply, precond.apply
-        dot = solver_dot(op)
+        return jax.jit(make_step(op.apply, precond.apply, solver_dot(op),
+                                 self._rhat0))
 
-        def step(state: BiCGStabState) -> BiCGStabState:
-            rho_new = dot(rhat0, state.r)
-            beta = (rho_new / state.rho) * (state.alpha / state.omega)
-            p = state.r + beta * (state.p - state.omega * state.v)
-            # phat/shat feed both an SpMV and the x update; without a
-            # barrier XLA re-fuses their recomputation into the x
-            # kernel, and that fusion choice is placement-dependent —
-            # sharded and unsharded compilations split by ~1 ulp in x
-            # (and only x).  Materializing them once pins the bits.
-            phat = jax.lax.optimization_barrier(precond_apply(p))
-            v = op_apply(phat)
-            alpha = rho_new / dot(rhat0, v)
-            s = state.r - alpha * v
-            shat = jax.lax.optimization_barrier(precond_apply(s))
-            t = op_apply(shat)
-            omega = dot(t, s) / dot(t, t)
-            x = state.x + alpha * phat + omega * shat
-            r = s - omega * t
-            return BiCGStabState(x=x, r=r, p=p, v=v, rho=rho_new, alpha=alpha,
-                                 omega=omega, k=state.k + 1)
+    @classmethod
+    def lane_step(cls, op_apply, precond_apply, dot, params):
+        # No barrier under vmap: optimization_barrier has no batching
+        # rule, and its purpose — sharded/unsharded fusion agreement —
+        # doesn't apply to lanes, whose bit-identity contract is scoped
+        # to the one compiled bucket program (docs/serving.md).
+        return make_step(op_apply, precond_apply, dot, params["rhat0"],
+                         barrier=lambda u: u)
 
-        return jax.jit(step)
+    def lane_params(self):
+        if self._rhat0 is None:
+            raise RuntimeError("init_state must run before lane_params")
+        return {"rhat0": self._rhat0}
 
     def recovery_set(self, state) -> RecoverySet:
         return RecoverySet(

@@ -107,11 +107,32 @@ def spectral_bounds(op, precond, power_iters: int = 100,
     return 0.9 * max(lo, 1e-12 * hi), 1.05 * hi
 
 
+def make_step(op_apply, precond_apply, c, sigma):
+    """One Chebyshev iteration as a jittable pure fn.  ``c``/``sigma``
+    may be Python floats (solo path) or traced per-lane scalars (batched
+    service path) — the recurrence body is shared."""
+
+    def step(state: ChebyshevState) -> ChebyshevState:
+        ap = op_apply(state.p)                    # the only SpMV
+        x = state.x + state.alpha * state.p
+        r = state.r - state.alpha * ap
+        z = precond_apply(r)
+        rho_new = 1.0 / (2.0 * sigma - state.rho)   # scalar recurrence:
+        beta = state.rho * c * state.alpha / 2.0    # no reductions
+        alpha_new = 2.0 * rho_new / c
+        p = z + beta * state.p
+        return ChebyshevState(x=x, r=r, z=z, p=p, alpha=alpha_new,
+                              rho=rho_new, beta_prev=beta, k=state.k + 1)
+
+    return step
+
+
 class ChebyshevSolver(RecoverableSolver):
     name = "chebyshev"
     schema = CHEBYSHEV_SCHEMA
     state_vector_fields = ("x", "r", "z", "p")
     state_nan_scalars = ()
+    batchable = True
 
     def __init__(self, lam_min: float, lam_max: float):
         if not (0.0 < lam_min < lam_max):
@@ -135,22 +156,19 @@ class ChebyshevSolver(RecoverableSolver):
         )
 
     def make_step(self, op, precond):
-        op_apply, precond_apply = op.apply, precond.apply
-        c, sigma = self.c, self.d / self.c
+        return jax.jit(make_step(op.apply, precond.apply,
+                                 self.c, self.d / self.c))
 
-        def step(state: ChebyshevState) -> ChebyshevState:
-            ap = op_apply(state.p)                    # the only SpMV
-            x = state.x + state.alpha * state.p
-            r = state.r - state.alpha * ap
-            z = precond_apply(r)
-            rho_new = 1.0 / (2.0 * sigma - state.rho)   # scalar recurrence:
-            beta = state.rho * c * state.alpha / 2.0    # no reductions
-            alpha_new = 2.0 * rho_new / c
-            p = z + beta * state.p
-            return ChebyshevState(x=x, r=r, z=z, p=p, alpha=alpha_new,
-                                  rho=rho_new, beta_prev=beta, k=state.k + 1)
+    @classmethod
+    def lane_step(cls, op_apply, precond_apply, dot, params):
+        return make_step(op_apply, precond_apply,
+                         params["c"], params["sigma"])
 
-        return jax.jit(step)
+    def lane_params(self):
+        # Bounds are computed host-side from the tenant's *real* operator
+        # (spectral_bounds in from_problem); only the recurrence
+        # coefficients travel into the compiled lane.
+        return {"c": self.c, "sigma": self.d / self.c}
 
     def recovery_set(self, state) -> RecoverySet:
         return RecoverySet(

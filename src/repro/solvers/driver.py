@@ -520,6 +520,19 @@ class SolveReport:
       :func:`repro.obs.check_report_consistency` can re-verify the
       derivation and :func:`repro.obs.check_trace_report` can close the
       triangle against a tracer's event counts.
+
+    Service residency (docs/serving.md §5) — set only when the solve ran
+    as a tenant of :class:`repro.serving.SolveService`; all three stay 0
+    on solo driver runs.  The counters are derived views too
+    (``SERVICE_REPORT_PAIRS``), measured in deterministic service steps,
+    never wall-clock:
+
+    - ``service_queue_wait_steps`` — steps spent queued before a lane
+      seated the tenant.
+    - ``service_lane_steps`` — steps resident in a lane (vmapped batch
+      steps the tenant rode).
+    - ``service_batch_occupancy`` — mean live-lane fraction of the
+      tenant's bucket over its residency.
     """
 
     iterations: int = 0
@@ -547,6 +560,14 @@ class SolveReport:
     residual_history: List[float] = dataclasses.field(default_factory=list)
     solver: str = ""
     metrics: Optional[MetricsRegistry] = None
+    # Service-path extras (repro.serving.solve_service, DESIGN.md §12) —
+    # zero on solo driver runs.  Wait is measured in deterministic
+    # service steps (not seconds) so BENCH's queue stats survive the
+    # determinism gate; occupancy is the mean fraction of live lanes in
+    # the tenant's bucket over the steps it was resident.
+    service_queue_wait_steps: int = 0
+    service_lane_steps: int = 0
+    service_batch_occupancy: float = 0.0
 
     @property
     def persist_hidden_fraction(self) -> float:
@@ -594,119 +615,115 @@ def _as_campaign(failures) -> FailureCampaign:
     return FailureCampaign(tuple(events))
 
 
-def solve(
-    solver,
-    op,
-    b,
-    precond,
-    config: SolveConfig = SolveConfig(),
-    backend=None,
-    failures: Union[FailureCampaign, Sequence[FailurePlan]] = (),
-    x0=None,
-    capture_states_at: Sequence[int] = (),
-):
-    """Run ``solver`` with optional ESR/NVM-ESR fault tolerance.
+class PersistencePipeline:
+    """The per-solve persistence + recovery engine, extracted from
+    :func:`solve` so one engine instance serves exactly one tenant —
+    the multi-tenant service (:mod:`repro.serving.solve_service`,
+    DESIGN.md §12) runs one pipeline per admitted request while
+    :func:`solve` keeps running one for the whole solo loop.
 
-    ``backend`` is any recovery backend :func:`repro.nvm.backend.
-    open_persist_session` accepts — a first-class
-    :class:`~repro.nvm.backend.PersistenceBackend` (including the
-    composite ``replicated``/``tiered`` backends), a schema-duck-typed
-    object, or a deprecated pre-zoo object — or None for an unprotected
-    run.  ``failures`` injects block crashes — either a sequence of
-    :class:`FailurePlan` (the single-event form) or a
-    :class:`FailureCampaign` with overlapping / mid-burst / repeated /
-    PRD-loss events.  Returns the final state, a report, and any states
-    captured for verification.
+    The pipeline owns everything that is *not* the iteration itself:
+    the :class:`~repro.nvm.backend.PersistSession` (opened, traced, and
+    shard-bound here), campaign normalization
+    (:func:`resolve_shard_events`) and pre-flight planning
+    (:func:`plan_campaign`), the survivor-side snapshot at the last
+    durable run, the sync/overlap persist pipeline
+    (:meth:`persist_point` / :meth:`persist_commit` /
+    :meth:`persist_abort`), failure injection (:meth:`pop_event` /
+    :meth:`inject`), the recovery engine (:meth:`run_recovery`), and
+    the derived-view report readback (:meth:`finalize`).  The caller
+    owns the state, the step function, and the loop.
+
+    ``layout`` overrides the operator's
+    :class:`~repro.distributed.sharding.ShardLayout` — the service
+    passes a tenant's *declared logical* layout so ``shard=`` failure
+    events resolve to block sets without any device mesh.
     """
-    schema = solver.schema
-    if config.persist_mode not in PERSIST_MODES:
-        raise ValueError(
-            f"persist_mode must be one of {PERSIST_MODES}, "
-            f"got {config.persist_mode!r}")
-    overlap = config.persist_mode == "overlap"
-    # Normalize the tracer ONCE: a falsy tracer (None, NULL_TRACER)
-    # becomes None here, and every instrumentation site below guards
-    # with an identity check — so with tracing disabled the loop
-    # executes zero tracer callables per iteration (the obs guard test).
-    trace = config.tracer or None
-    # Sharded solve? The operator carries the block -> device-shard
-    # layout and the 1-D data mesh (repro.distributed.sharding); both
-    # stay None on a plain single-device operator.
-    layout = getattr(op, "layout", None)
-    mesh = getattr(op, "mesh", None)
-    part = getattr(op, "partition", None)
-    session = None
-    if backend is not None:
-        session = open_persist_session(backend, schema, part)
-        if trace is not None:
-            session.set_tracer(trace)
-        binder = getattr(session, "bind_shards", None)
-        if part is not None and binder is not None:
-            # Per-shard session addressing (DESIGN.md §10): each block's
-            # slot chunks belong to its owning device shard, and the
-            # session meters persist/fetch bytes against that shard.
-            # (External sessions without bind_shards simply go unmetered.)
-            shard_map = (layout.shard_of_block_map() if layout is not None
-                         else {blk: 0 for blk in range(part.nblocks)})
-            binder(shard_of_block=shard_map,
-                   slot_nbytes=schema.slot_nbytes(part.block_size,
-                                                  np.dtype(b.dtype)))
-    history = schema.history
 
-    # shard=... events become block events before anything else sees them
-    campaign = resolve_shard_events(failures, layout)
-    if (config.plan_campaign and campaign.events and backend is not None):
-        caps = getattr(backend, "capabilities", None)
-        if isinstance(caps, BackendCapabilities):
-            # Pre-flight: reject a campaign the backend provably cannot
-            # survive before any iteration runs (duck-typed backends
-            # declare nothing, so nothing is provable — they run
-            # unplanned and fail at the fetch instead).
-            plan_campaign(campaign, caps, tracer=trace)
+    def __init__(self, solver, op, precond, b, config: SolveConfig,
+                 backend, failures=(), *, layout=None, metrics=None):
+        if config.persist_mode not in PERSIST_MODES:
+            raise ValueError(
+                f"persist_mode must be one of {PERSIST_MODES}, "
+                f"got {config.persist_mode!r}")
+        self.solver = solver
+        self.op = op
+        self.precond = precond
+        self.b = b
+        self.config = config
+        self.overlap = config.persist_mode == "overlap"
+        # Normalize the tracer ONCE: a falsy tracer (None, NULL_TRACER)
+        # becomes None here, and every instrumentation site below guards
+        # with an identity check — so with tracing disabled the loop
+        # executes zero tracer callables per iteration (the obs guard
+        # test).
+        self.trace = config.tracer or None
+        # Sharded solve? The operator carries the block -> device-shard
+        # layout and the 1-D data mesh (repro.distributed.sharding); both
+        # stay None on a plain single-device operator.  A service tenant
+        # overrides ``layout`` with its declared logical one instead.
+        self.layout = getattr(op, "layout", None) if layout is None else layout
+        self.mesh = getattr(op, "mesh", None)
+        self.history = solver.schema.history
+        self.metrics = (MetricsRegistry(solver=solver.name,
+                                        mode=config.persist_mode)
+                        if metrics is None else metrics)
+        part = getattr(op, "partition", None)
+        self.session = None
+        if backend is not None:
+            self.session = open_persist_session(backend, solver.schema, part)
+            if self.trace is not None:
+                self.session.set_tracer(self.trace)
+            binder = getattr(self.session, "bind_shards", None)
+            if part is not None and binder is not None:
+                # Per-shard session addressing (DESIGN.md §10): each
+                # block's slot chunks belong to its owning device shard,
+                # and the session meters persist/fetch bytes against that
+                # shard.  (External sessions without bind_shards simply
+                # go unmetered.)
+                shard_map = (self.layout.shard_of_block_map()
+                             if self.layout is not None
+                             else {blk: 0 for blk in range(part.nblocks)})
+                binder(shard_of_block=shard_map,
+                       slot_nbytes=solver.schema.slot_nbytes(
+                           part.block_size, np.dtype(b.dtype)))
 
-    state = solver.init_state(op, precond, b, x0)
-    if mesh is not None:
-        # Pin the canonical placement before the step jits: vectors
-        # block-sharded on "data", scalars replicated.  Recovery re-pins
-        # below so the step never recompiles for a drifted layout.
-        from repro.distributed.sharding import place_state
+        # shard=... events become block events before anything else sees
+        # them
+        campaign = resolve_shard_events(failures, self.layout)
+        if config.plan_campaign and campaign.events and backend is not None:
+            caps = getattr(backend, "capabilities", None)
+            if isinstance(caps, BackendCapabilities):
+                # Pre-flight: reject a campaign the backend provably
+                # cannot survive before any iteration runs (duck-typed
+                # backends declare nothing, so nothing is provable — they
+                # run unplanned and fail at the fetch instead).
+                plan_campaign(campaign, caps, tracer=self.trace)
 
-        state = place_state(state, mesh, solver.state_vector_fields)
-    step = solver.make_step(op, precond)
-    # host-side norm: gathers a sharded b and reduces deterministically
-    bnorm = float(np.linalg.norm(np.asarray(b)))
-    # The solve loop increments this registry at every accounting site;
-    # the report's numeric counters are read back OUT of it at exit
-    # (derived views, DESIGN.md §9) so registry and report cannot drift.
-    metrics = MetricsRegistry(solver=solver.name, mode=config.persist_mode)
-    report = SolveReport(solver=solver.name, persist_mode=config.persist_mode,
-                         metrics=metrics)
-    captured: Dict[int, object] = {}
-    if trace is not None:
-        trace.event("solve.begin", solver=solver.name,
-                    mode=config.persist_mode, maxiter=config.maxiter)
+        self.at_events: Dict[int, List[FailureEvent]] = {}
+        self.during_events: Dict[int, List[FailureEvent]] = {}
+        for ev in campaign.events:
+            if ev.at_iteration is not None:
+                self.at_events.setdefault(ev.at_iteration, []).append(ev)
+            else:
+                self.during_events.setdefault(ev.during_recovery_at,
+                                              []).append(ev)
 
-    at_events: Dict[int, List[FailureEvent]] = {}
-    during_events: Dict[int, List[FailureEvent]] = {}
-    for ev in campaign.events:
-        if ev.at_iteration is not None:
-            at_events.setdefault(ev.at_iteration, []).append(ev)
-        else:
-            during_events.setdefault(ev.during_recovery_at, []).append(ev)
+        # Survivor-side snapshot at the last *durable* persistence run:
+        # the surviving processes' own state copy kept in their local RAM
+        # (cheap, one shard each).  Needed to roll back to the recovery
+        # point when persistence is periodic (ESRP trade-off, paper §2).
+        # In overlap mode the snapshot only advances when the run's final
+        # commit lands — a staged-but-uncommitted persist is not a
+        # recovery point.
+        self.snapshot = None
+        self.last_persisted_k: Optional[int] = None
+        self.consecutive = 0
+        self.staged_state = None  # payload staged, pending commit
 
-    # Survivor-side snapshot at the last *durable* persistence run: the
-    # surviving processes' own state copy kept in their local RAM (cheap,
-    # one shard each).  Needed to roll back to the recovery point when
-    # persistence is periodic (ESRP trade-off, paper §2).  In overlap
-    # mode the snapshot only advances when the run's final commit lands —
-    # a staged-but-uncommitted persist is not a recovery point.
-    snapshot = None
-    last_persisted_k: Optional[int] = None
-    consecutive = 0
-    staged_state = None     # state whose payload is staged, pending commit
-
-    def _note_committed(st, cost: float, window_s: float) -> None:
-        nonlocal snapshot, last_persisted_k, consecutive
+    # ------------------------------------------------------------------
+    def _note_committed(self, st, cost: float, window_s: float) -> None:
+        metrics, trace = self.metrics, self.trace
         metrics.histogram("persist.commit_s", phase="persist").observe(cost)
         metrics.counter("persist.commit").inc()
         hidden = min(cost, window_s)
@@ -717,59 +734,100 @@ def solve(
             trace.event("persist.commit", k=int(st.k), cost_s=cost,
                         hidden_s=hidden, exposed_s=cost - hidden)
         k_c = int(st.k)
-        consecutive = consecutive + 1 if last_persisted_k == k_c - 1 else 1
-        last_persisted_k = k_c
-        if consecutive >= history:
+        self.consecutive = (self.consecutive + 1
+                            if self.last_persisted_k == k_c - 1 else 1)
+        self.last_persisted_k = k_c
+        if self.consecutive >= self.history:
             # a full history-run is now durable -> new recovery point.
             # (The k=0 persist alone is NOT one for history >= 2; the
             # schedule persists iterations 0..history-1 consecutively, so
             # the first recovery point completes at k = history-1.  A
-            # failure injected before that trips the snapshot assert
-            # below with a clear message.)
-            snapshot = st
+            # failure injected before that trips the snapshot assert in
+            # run_recovery with a clear message.)
+            self.snapshot = st
 
-    def persist_begin(st) -> None:
-        nonlocal staged_state
-        rset = solver.recovery_set(st)
-        stage_cost = session.begin(rset.k, rset.scalars, rset.vectors)
-        metrics.histogram("persist.stage_s",
-                          phase="persist").observe(stage_cost)
+    def persist_begin(self, st) -> None:
+        rset = self.solver.recovery_set(st)
+        stage_cost = self.session.begin(rset.k, rset.scalars, rset.vectors)
+        self.metrics.histogram("persist.stage_s",
+                               phase="persist").observe(stage_cost)
+        trace = self.trace
         if trace is not None:
             trace.event("persist.begin", k=rset.k, stage_s=stage_cost)
-        staged_state = st
+        self.staged_state = st
 
-    def persist_commit(window_s: float = 0.0) -> None:
-        nonlocal staged_state
-        if staged_state is None:
+    def persist_commit(self, window_s: float = 0.0) -> None:
+        if self.staged_state is None:
             return
-        cost = session.commit()
-        _note_committed(staged_state, cost, window_s)
-        staged_state = None
+        cost = self.session.commit()
+        self._note_committed(self.staged_state, cost, window_s)
+        self.staged_state = None
 
-    def persist_abort() -> None:
+    def persist_abort(self) -> None:
         # The session side is aborted by session.fail() / fail_storage();
         # here we only drop the driver-side bookkeeping so the dead event
         # is never counted or committed (it does count as an abort).
-        nonlocal staged_state
-        if staged_state is not None:
-            metrics.counter("persist.abort").inc()
+        if self.staged_state is not None:
+            self.metrics.counter("persist.abort").inc()
+            trace = self.trace
             if trace is not None:
-                trace.event("persist.abort", k=int(staged_state.k))
-        staged_state = None
+                trace.event("persist.abort", k=int(self.staged_state.k))
+        self.staged_state = None
 
-    def persist_point(st) -> None:
+    def persist_point(self, st) -> None:
         """One scheduled persistence event.  Sync mode is the paper's
         fully synchronous host pull: write straight through, no staging
         copy, everything exposed.  Overlap mode stages now and commits
         behind the next iteration's compute."""
-        if overlap:
-            persist_begin(st)
+        if self.overlap:
+            self.persist_begin(st)
         else:
-            rset = solver.recovery_set(st)
-            cost = session.persist(rset.k, rset.scalars, rset.vectors)
-            _note_committed(st, cost, 0.0)
+            rset = self.solver.recovery_set(st)
+            cost = self.session.persist(rset.k, rset.scalars, rset.vectors)
+            self._note_committed(st, cost, 0.0)
 
-    def run_recovery(ev: FailureEvent, st, k: int):
+    # ------------------------------------------------------------------
+    def pop_event(self, k: int) -> Optional[FailureEvent]:
+        """The next iteration-triggered event pending at ``k`` (one per
+        loop pass — a second event at the same k fires on the repeated
+        pass after the first one's rollback), or None."""
+        pending = self.at_events.get(k)
+        if not pending:
+            return None
+        ev = pending.pop(0)
+        if not pending:
+            del self.at_events[k]
+        return ev
+
+    def storage_kill(self, k: int) -> None:
+        self.session.fail_storage()
+        self.metrics.counter("storage.kill").inc()
+        trace = self.trace
+        if trace is not None:
+            trace.event("storage.kill", k=k)
+
+    def inject(self, ev: FailureEvent, state, k: int):
+        """Apply one iteration-triggered event: a storage-only event
+        kills the persistence service and returns the state unchanged
+        (the solve continues); a block event runs the full recovery and
+        returns the rolled-back, reconstructed state."""
+        if self.session is None:
+            raise RuntimeError(
+                "failure injected but no recovery backend configured")
+        trace = self.trace
+        if trace is not None:
+            trace.event("failure.inject", k=k, blocks=tuple(ev.blocks),
+                        prd=ev.prd, overlapping=False)
+        if not ev.blocks:
+            # Storage-only event: the PRD node dies but no compute
+            # state is lost, so the solve continues.  The loss
+            # surfaces — loudly — at the next recovery fetch unless
+            # the backend's capabilities cover it.
+            self.storage_kill(k)
+            return state
+        return self.run_recovery(ev, state, k)
+
+    def run_recovery(self, ev: FailureEvent, st, k: int):
         """The campaign recovery engine.  Handles ``ev`` plus any events
         triggered *during* this recovery: each overlapping event enlarges
         the failed union and forces a refetch (the already-fetched
@@ -777,16 +835,15 @@ def solve(
         ``prd=True`` event additionally crashes the persistence-service
         node before its blocks are processed; the fetch then succeeds
         only if the backend's capabilities cover the loss (mirrors)."""
-        nonlocal snapshot
-        persist_abort()  # an in-flight staged persist dies with the nodes
-        overlap_queue = list(during_events.pop(ev.at_iteration, ()))
+        solver, session = self.solver, self.session
+        metrics, trace, history = self.metrics, self.trace, self.history
+        self.persist_abort()  # an in-flight staged persist dies with the nodes
+        overlap_queue = list(self.during_events.pop(ev.at_iteration, ()))
         failed: List[int] = []
         new = list(ev.blocks)
         prd_hit = ev.prd
-        events_handled = 0
         st_wiped = st
         while True:
-            events_handled += 1
             metrics.counter("recovery.absorbed").inc()
             if trace is not None:
                 trace.event("recovery.absorbed", blocks=tuple(new),
@@ -799,8 +856,8 @@ def solve(
                 prd_hit = False
             failed = sorted(set(failed) | set(new))
             if new:
-                st_wiped = solver.wipe(st_wiped, op.partition, new)  # VM lost
-                session.fail(tuple(new))
+                st_wiped = solver.wipe(st_wiped, self.op.partition, new)
+                session.fail(tuple(new))  # VM lost
             # Drain barrier: outstanding persistence settles (or is torn
             # away) before the durable recovery point is read.
             drain_cost = session.drain()
@@ -808,9 +865,9 @@ def solve(
                               phase="recovery").observe(drain_cost)
             if trace is not None:
                 trace.event("persist.drain", cost_s=drain_cost)
-            assert snapshot is not None, \
+            assert self.snapshot is not None, \
                 "no completed persistence run before failure"
-            k_rec = int(snapshot.k)
+            k_rec = int(self.snapshot.k)
             ks = tuple(range(k_rec - history + 1, k_rec + 1))
             if trace is None:
                 sets = session.fetch(tuple(failed), ks)
@@ -847,39 +904,180 @@ def solve(
                     f"(DESIGN.md §8)")
             if trace is None:
                 st_new = solver.reconstruct(
-                    op, precond, b,
-                    snapshot=snapshot,
+                    self.op, self.precond, self.b,
+                    snapshot=self.snapshot,
                     failed_blocks=list(failed),
                     sets=sets,
-                    local_method=config.local_solve,
+                    local_method=self.config.local_solve,
                 )
             else:
                 with trace.span("recovery.reconstruct",
                                 blocks=tuple(failed), k_rec=k_rec):
                     st_new = solver.reconstruct(
-                        op, precond, b,
-                        snapshot=snapshot,
+                        self.op, self.precond, self.b,
+                        snapshot=self.snapshot,
                         failed_blocks=list(failed),
                         sets=sets,
-                        local_method=config.local_solve,
+                        local_method=self.config.local_solve,
                     )
             metrics.counter("solve.wasted_iterations").inc(k - k_rec)
             if trace is not None:
                 trace.event("recovery.rollback", from_k=k, to_k=k_rec,
                             wasted=k - k_rec)
-            if mesh is not None:
+            if self.mesh is not None:
                 # the replacement shard rejoins the canonical placement;
                 # without this the jitted step would recompile against
                 # whatever layout reconstruction's scatters produced
                 from repro.distributed.sharding import place_state
 
-                st_new = place_state(st_new, mesh,
+                st_new = place_state(st_new, self.mesh,
                                      solver.state_vector_fields)
             return st_new
 
+    # ------------------------------------------------------------------
+    def finalize(self, report: SolveReport, state, bnorm: float) -> None:
+        """Exit drain + derived-view readback (DESIGN.md §9): a staged
+        final event still commits (exposed — there is no further compute
+        to hide behind), then every numeric report counter is read back
+        OUT of the registry the loop incremented, so registry and report
+        agree by construction (check_report_consistency re-verifies;
+        check_trace_report closes the triangle to the trace)."""
+        self.persist_commit(0.0)
+        metrics = self.metrics
+        report.iterations = int(state.k)
+        report.final_relres = self.solver.residual_norm(state) / bnorm
+        report.converged = (report.converged
+                            or report.final_relres < self.config.tol)
+        report.wasted_iterations = metrics.counter_value(
+            "solve.wasted_iterations")
+        report.failures_recovered = metrics.counter_value("recovery.absorbed")
+        report.recovery_restarts = metrics.counter_value("recovery.restart")
+        report.storage_failures = metrics.counter_value("storage.kill")
+        report.persist_events = metrics.counter_value("persist.commit")
+        report.persist_aborts = metrics.counter_value("persist.abort")
+        report.persist_cost_s = metrics.histogram_total("persist.commit_s",
+                                                        phase="persist")
+        report.persist_stage_s = metrics.histogram_total("persist.stage_s",
+                                                         phase="persist")
+        report.persist_hidden_s = metrics.histogram_total("persist.hidden_s",
+                                                          phase="persist")
+        report.persist_exposed_s = metrics.histogram_total("persist.exposed_s",
+                                                           phase="persist")
+        report.persist_drain_s = metrics.histogram_total("persist.drain_s",
+                                                         phase="recovery")
+        # Per-shard traffic (DESIGN.md §10): fold the session's byte
+        # meter into the registry as shard-labeled counters, then read
+        # the report fields back OUT of the registry like every other
+        # counter above.
+        report.nshards = 1 if self.layout is None else self.layout.nshards
+        traffic = getattr(self.session, "traffic", None)
+        if traffic is not None:
+            for shard, nbytes in sorted(traffic.persist_bytes.items()):
+                metrics.counter("persist.bytes", shard=shard).inc(nbytes)
+            for shard, nbytes in sorted(traffic.fetch_bytes.items()):
+                metrics.counter("recovery.fetch_bytes", shard=shard).inc(nbytes)
+        report.persist_bytes = metrics.counter_total("persist.bytes")
+        report.recovery_fetch_bytes = metrics.counter_total(
+            "recovery.fetch_bytes")
+        report.persist_bytes_by_shard = metrics.counter_by_label(
+            "persist.bytes", "shard")
+        report.recovery_fetch_bytes_by_shard = metrics.counter_by_label(
+            "recovery.fetch_bytes", "shard")
+        metrics.gauge("solve.iterations").set(report.iterations)
+        metrics.gauge("solve.converged").set(1.0 if report.converged else 0.0)
+        trace = self.trace
+        if trace is not None:
+            trace.event("solve.end", iterations=report.iterations,
+                        converged=report.converged,
+                        final_relres=report.final_relres)
+
+
+def make_batched_step(solver_cls, make_lane_ops):
+    """One jitted, vmapped driver step over a bucket of tenant lanes —
+    the batched entry of the multi-tenant service (DESIGN.md §12).
+
+    ``make_lane_ops(lane)`` receives one lane's traced data pytree and
+    returns ``(op_apply, precond_apply, dot, params)``; the solver
+    class's :meth:`~repro.solvers.base.RecoverableSolver.lane_step`
+    consumes them.  The returned function maps
+    ``(stacked_states, stacked_lanes) -> stacked_states`` with every
+    lane fully independent — lane ``i``'s output depends only on lane
+    ``i``'s inputs, which is what makes cohabitant trajectories
+    bit-identical to their solo runs through the same bucket.
+    """
+    if not getattr(solver_cls, "batchable", False):
+        raise NotImplementedError(
+            f"solver {solver_cls.name!r} is not batchable "
+            f"(no lane_step)")
+
+    def one(state, lane):
+        op_apply, precond_apply, dot, params = make_lane_ops(lane)
+        return solver_cls.lane_step(op_apply, precond_apply, dot,
+                                    params)(state)
+
+    return jax.jit(jax.vmap(one))
+
+
+def solve(
+    solver,
+    op,
+    b,
+    precond,
+    config: SolveConfig = SolveConfig(),
+    backend=None,
+    failures: Union[FailureCampaign, Sequence[FailurePlan]] = (),
+    x0=None,
+    capture_states_at: Sequence[int] = (),
+):
+    """Run ``solver`` with optional ESR/NVM-ESR fault tolerance.
+
+    ``backend`` is any recovery backend :func:`repro.nvm.backend.
+    open_persist_session` accepts — a first-class
+    :class:`~repro.nvm.backend.PersistenceBackend` (including the
+    composite ``replicated``/``tiered`` backends), a schema-duck-typed
+    object, or a deprecated pre-zoo object — or None for an unprotected
+    run.  ``failures`` injects block crashes — either a sequence of
+    :class:`FailurePlan` (the single-event form) or a
+    :class:`FailureCampaign` with overlapping / mid-burst / repeated /
+    PRD-loss events.  Returns the final state, a report, and any states
+    captured for verification.
+
+    The persistence/recovery machinery lives in
+    :class:`PersistencePipeline`; this function owns the state, the
+    jitted step, and the loop.
+    """
+    trace = config.tracer or None
+    if trace is not config.tracer:
+        # Normalize the falsy tracer away HERE so the pipeline's own
+        # `config.tracer or None` sees None — one truthiness call total
+        # on a disabled tracer (the obs zero-callable guard test).
+        config = dataclasses.replace(config, tracer=trace)
+    pipe = PersistencePipeline(solver, op, precond, b, config, backend,
+                               failures)
+    session = pipe.session
+
+    state = solver.init_state(op, precond, b, x0)
+    if pipe.mesh is not None:
+        # Pin the canonical placement before the step jits: vectors
+        # block-sharded on "data", scalars replicated.  Recovery re-pins
+        # in the pipeline so the step never recompiles for a drifted
+        # layout.
+        from repro.distributed.sharding import place_state
+
+        state = place_state(state, pipe.mesh, solver.state_vector_fields)
+    step = solver.make_step(op, precond)
+    # host-side norm: gathers a sharded b and reduces deterministically
+    bnorm = float(np.linalg.norm(np.asarray(b)))
+    report = SolveReport(solver=solver.name, persist_mode=config.persist_mode,
+                         metrics=pipe.metrics)
+    captured: Dict[int, object] = {}
+    if trace is not None:
+        trace.event("solve.begin", solver=solver.name,
+                    mode=config.persist_mode, maxiter=config.maxiter)
+
     # Iteration 0 counts as persisted so the first run completes early.
     if session is not None:
-        persist_point(state)
+        pipe.persist_point(state)
 
     while int(state.k) < config.maxiter:
         k = int(state.k)
@@ -893,28 +1091,9 @@ def solve(
             break
 
         # ---- failure injection + recovery ----
-        pending_here = at_events.get(k)
-        if pending_here:
-            ev = pending_here.pop(0)
-            if not pending_here:
-                del at_events[k]
-            if session is None:
-                raise RuntimeError(
-                    "failure injected but no recovery backend configured")
-            if trace is not None:
-                trace.event("failure.inject", k=k, blocks=tuple(ev.blocks),
-                            prd=ev.prd, overlapping=False)
-            if not ev.blocks:
-                # Storage-only event: the PRD node dies but no compute
-                # state is lost, so the solve continues.  The loss
-                # surfaces — loudly — at the next recovery fetch unless
-                # the backend's capabilities cover it.
-                session.fail_storage()
-                metrics.counter("storage.kill").inc()
-                if trace is not None:
-                    trace.event("storage.kill", k=k)
-                continue
-            state = run_recovery(ev, state, k)
+        ev = pipe.pop_event(k)
+        if ev is not None:
+            state = pipe.inject(ev, state, k)
             if int(state.k) in capture_states_at:
                 captured[int(state.k)] = state
             continue
@@ -925,63 +1104,14 @@ def solve(
         else:
             with trace.span("iteration.step", k=k):
                 state = step(state)
-        if staged_state is not None:
+        if pipe.staged_state is not None:
             # Overlap window: the commit of iteration k's payload rides
             # behind iteration k+1's compute.
             jax.block_until_ready(state)
-            persist_commit(time.perf_counter() - t0)
+            pipe.persist_commit(time.perf_counter() - t0)
         if session is not None and should_persist(
-                int(state.k), config.persistence_period, history):
-            persist_point(state)
+                int(state.k), config.persistence_period, pipe.history):
+            pipe.persist_point(state)
 
-    # Exit drain: a staged final event still commits (exposed — there is
-    # no further compute to hide behind), so the accounting and the
-    # backend's slot ring agree with the sync pipeline.
-    persist_commit(0.0)
-
-    report.iterations = int(state.k)
-    report.final_relres = solver.residual_norm(state) / bnorm
-    report.converged = report.converged or report.final_relres < config.tol
-    # Derived views (DESIGN.md §9): the report's numeric accounting is
-    # read back out of the registry the loop incremented, so registry
-    # and report agree by construction (check_report_consistency
-    # re-verifies; check_trace_report closes the triangle to the trace).
-    report.wasted_iterations = metrics.counter_value("solve.wasted_iterations")
-    report.failures_recovered = metrics.counter_value("recovery.absorbed")
-    report.recovery_restarts = metrics.counter_value("recovery.restart")
-    report.storage_failures = metrics.counter_value("storage.kill")
-    report.persist_events = metrics.counter_value("persist.commit")
-    report.persist_aborts = metrics.counter_value("persist.abort")
-    report.persist_cost_s = metrics.histogram_total("persist.commit_s",
-                                                    phase="persist")
-    report.persist_stage_s = metrics.histogram_total("persist.stage_s",
-                                                     phase="persist")
-    report.persist_hidden_s = metrics.histogram_total("persist.hidden_s",
-                                                      phase="persist")
-    report.persist_exposed_s = metrics.histogram_total("persist.exposed_s",
-                                                       phase="persist")
-    report.persist_drain_s = metrics.histogram_total("persist.drain_s",
-                                                     phase="recovery")
-    # Per-shard traffic (DESIGN.md §10): fold the session's byte meter
-    # into the registry as shard-labeled counters, then read the report
-    # fields back OUT of the registry like every other counter above.
-    report.nshards = 1 if layout is None else layout.nshards
-    traffic = getattr(session, "traffic", None)
-    if traffic is not None:
-        for shard, nbytes in sorted(traffic.persist_bytes.items()):
-            metrics.counter("persist.bytes", shard=shard).inc(nbytes)
-        for shard, nbytes in sorted(traffic.fetch_bytes.items()):
-            metrics.counter("recovery.fetch_bytes", shard=shard).inc(nbytes)
-    report.persist_bytes = metrics.counter_total("persist.bytes")
-    report.recovery_fetch_bytes = metrics.counter_total("recovery.fetch_bytes")
-    report.persist_bytes_by_shard = metrics.counter_by_label(
-        "persist.bytes", "shard")
-    report.recovery_fetch_bytes_by_shard = metrics.counter_by_label(
-        "recovery.fetch_bytes", "shard")
-    metrics.gauge("solve.iterations").set(report.iterations)
-    metrics.gauge("solve.converged").set(1.0 if report.converged else 0.0)
-    if trace is not None:
-        trace.event("solve.end", iterations=report.iterations,
-                    converged=report.converged,
-                    final_relres=report.final_relres)
+    pipe.finalize(report, state, bnorm)
     return state, report, captured

@@ -34,25 +34,38 @@ class JacobiState(NamedTuple):
     k: jax.Array
 
 
+def make_step(op_apply, precond_apply, omega):
+    """One weighted-Jacobi iteration as a jittable pure fn.  ``omega``
+    may be a Python float (solo path) or a traced per-lane scalar
+    (batched service path) — the body is shared."""
+
+    def step(state: JacobiState) -> JacobiState:
+        z = precond_apply(state.r)
+        x = state.x + omega * z
+        r = state.r - omega * op_apply(z)   # r = b - A x, incrementally
+        return JacobiState(x=x, r=r, k=state.k + 1)
+
+    return step
+
+
 class WeightedJacobiSolver(IterateOnlyRecovery, RecoverableSolver):
     name = "jacobi"
     schema = JACOBI_SCHEMA
     state_cls = JacobiState
+    batchable = True
 
     def __init__(self, omega: float = 2.0 / 3.0):
         self.omega = float(omega)
 
     def make_step(self, op, precond):
-        omega = self.omega
-        op_apply, precond_apply = op.apply, precond.apply
+        return jax.jit(make_step(op.apply, precond.apply, self.omega))
 
-        def step(state: JacobiState) -> JacobiState:
-            z = precond_apply(state.r)
-            x = state.x + omega * z
-            r = state.r - omega * op_apply(z)   # r = b - A x, incrementally
-            return JacobiState(x=x, r=r, k=state.k + 1)
+    @classmethod
+    def lane_step(cls, op_apply, precond_apply, dot, params):
+        return make_step(op_apply, precond_apply, params["omega"])
 
-        return jax.jit(step)
+    def lane_params(self):
+        return {"omega": self.omega}
 
     # ------------------------------------------------------------------
     @classmethod

@@ -28,6 +28,7 @@ class PCGSolver(RecoverableSolver):
     schema = PCG_SCHEMA
     state_vector_fields = ("x", "r", "z", "p")
     state_nan_scalars = ("rz",)
+    batchable = True
 
     def init_state(self, op, precond, b, x0=None):
         return _core_pcg.init_state(op, precond, b, x0, dot=solver_dot(op))
@@ -35,6 +36,11 @@ class PCGSolver(RecoverableSolver):
     def make_step(self, op, precond):
         return jax.jit(_core_pcg.make_step(op.apply, precond.apply,
                                            dot=solver_dot(op)))
+
+    @classmethod
+    def lane_step(cls, op_apply, precond_apply, dot, params):
+        # PCG's scalars (rz, beta) live in the state; no per-lane params.
+        return _core_pcg.make_step(op_apply, precond_apply, dot=dot)
 
     def recovery_set(self, state) -> RecoverySet:
         return RecoverySet(

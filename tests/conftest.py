@@ -101,3 +101,15 @@ def multi_device():
     """Centralized ``--xla_force_host_platform_device_count`` plumbing
     (see :class:`MultiDeviceRunner`)."""
     return MultiDeviceRunner()
+
+
+@pytest.fixture(scope="session")
+def request_trace():
+    """The shared deterministic service request-trace generator
+    (repro.serving.trace.generate_request_trace), exposed as a fixture
+    so the service tests, the campaign-fuzz service leg, and the
+    benchmark replay the SAME seeded traces.  Call it with a seed (and
+    any generator kwargs) to get a tuple of ServiceRequest."""
+    from repro.serving.trace import generate_request_trace
+
+    return generate_request_trace

@@ -424,3 +424,94 @@ def test_advise_spec_driver_level_and_no_survivor():
     with pytest.raises(UnsurvivableCampaignError, match="no candidate"):
         api.ResilienceSpec.advise(api.Problem.poisson(8, nblocks=NBLOCKS),
                                   triple)
+
+
+# ------------------------------------------------ the service leg (ISSUE 9)
+# Seeded multi-tenant traces replayed through the batched SolveService
+# (docs/serving.md): the same planner == runtime contract, lifted to the
+# service boundary.  Accepted tenants must match their solo api.solve
+# trajectory; unsurvivable requests must be refused at submission with
+# the planner naming the violating event.  Seeds picked so the leg
+# exercises block, PRD, and shard kills plus one unsurvivable request
+# (seed 28's t3: a PRD kill against bare nvm-prd).
+SERVICE_TRACE_SEEDS = (0, 6, 28)
+
+
+def _expect_unsurvivable(req) -> bool:
+    """The oracle, derived from the declarative request alone: only a
+    PRD kill against a spec with no storage redundancy is refusable —
+    every other single-event campaign has a surviving candidate (the
+    advisor path never fails on these traces)."""
+    return bool(req.failures and req.failures[0].prd
+                and req.backend == "nvm-prd")
+
+
+def _solo_service_reference(req):
+    """The tenant's solo trajectory: same declarative request through
+    ``api.solve``, with shard events resolved against the same logical
+    layout the service uses and the same advisor fallback."""
+    from repro import api
+    from repro.distributed.sharding import ShardLayout
+    from repro.solvers.driver import resolve_shard_events
+
+    problem = req.problem()
+    campaign = resolve_shard_events(
+        req.failures, ShardLayout(req.nblocks, req.nshards))
+    resilience = req.resilience_spec()
+    if resilience is None:
+        resilience = api.ResilienceSpec.advise(problem, campaign,
+                                               solver=req.solver_spec())
+    return api.solve(problem, req.solver_spec(), resilience,
+                     failures=campaign)
+
+
+@pytest.mark.parametrize("seed", SERVICE_TRACE_SEEDS)
+def test_campaign_fuzz_service_leg(seed, request_trace):
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.serving import ServiceConfig, SolveService
+
+    reqs = request_trace(seed, nrequests=5, failure_rate=0.6)
+    svc = SolveService(ServiceConfig(lanes=4, max_queue=16))
+    tickets = {}
+    refused = {}
+    for req in sorted(reqs, key=lambda r: (r.at_step, r.tenant)):
+        try:
+            tickets[req.tenant] = svc.submit_request(req)
+        except UnsurvivableCampaignError as e:
+            refused[req.tenant] = str(e)
+    svc.drain()
+
+    for req in reqs:
+        if _expect_unsurvivable(req):
+            # refused at submission, naming the violating event
+            assert req.tenant in refused, (seed, req.tenant)
+            msg = refused[req.tenant]
+            assert "prd" in msg, msg
+            assert str(req.failures[0].at_iteration) in msg, msg
+            continue
+        ticket = tickets[req.tenant]
+        assert ticket.accepted, (seed, req.tenant)
+        rep = ticket.result.report
+        solo = _solo_service_reference(req)
+        ctx = (seed, req.tenant, req.solver, req.backend)
+        # per-tenant exactness against the solo trajectory
+        assert rep.converged == solo.converged, ctx
+        assert rep.iterations == solo.iterations, ctx
+        np.testing.assert_allclose(np.asarray(ticket.result.x),
+                                   np.asarray(solo.x),
+                                   rtol=1e-8, atol=1e-10, err_msg=str(ctx))
+        assert rep.failures_recovered == solo.report.failures_recovered, ctx
+        assert rep.storage_failures == solo.report.storage_failures, ctx
+
+
+def test_service_trace_seeds_cover_both_verdicts(request_trace):
+    """The seed set must keep exercising both submission verdicts — the
+    analogue of the solo harness's accepted+rejected coverage check."""
+    verdicts = set()
+    for seed in SERVICE_TRACE_SEEDS:
+        for req in request_trace(seed, nrequests=5, failure_rate=0.6):
+            verdicts.add("refused" if _expect_unsurvivable(req)
+                         else "accepted")
+    assert verdicts == {"accepted", "refused"}

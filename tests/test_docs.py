@@ -19,7 +19,7 @@ from check_docs import python_blocks  # noqa: E402
 
 DOC_FILES = ["README.md", "docs/recovery-format.md", "docs/backend-api.md",
              "docs/erasure-coding.md", "docs/observability.md",
-             "docs/static-analysis.md"]
+             "docs/static-analysis.md", "docs/serving.md"]
 
 
 @pytest.mark.parametrize("doc", DOC_FILES)
@@ -39,12 +39,14 @@ def test_check_docs_cli_passes_on_repo_docs():
         [sys.executable, str(REPO / "tools" / "check_docs.py"),
          "README.md", "DESIGN.md", "docs/recovery-format.md",
          "docs/backend-api.md", "docs/erasure-coding.md",
-         "docs/observability.md", "docs/static-analysis.md"],
+         "docs/observability.md", "docs/static-analysis.md",
+         "docs/serving.md"],
         cwd=REPO, capture_output=True, text=True)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "backend matrix covers" in out.stdout
     assert "span taxonomy covers" in out.stdout
     assert "rule catalog covers" in out.stdout
+    assert "service metric table covers" in out.stdout
 
 
 def test_check_api_cli_passes_on_repo():
@@ -188,3 +190,36 @@ def test_check_docs_flags_undocumented_erasure_arity(tmp_path):
         capture_output=True, text=True)
     assert out.returncode == 1
     assert "'+2p' missing" in out.stderr
+
+
+def test_check_docs_flags_undocumented_service_metric(tmp_path):
+    """The ISSUE 9 freshness gate: a serving doc missing a metric name
+    emitted under serving/ fails the docs job, so new service
+    instrumentation cannot land undocumented."""
+    sys.path.insert(0, str(REPO / "tools"))
+    from repro_lint import facts
+
+    names = set(facts.collect_facts_from_root(
+        REPO / "src")["service_metric_names"])
+    assert {"service.submitted", "service.rejected", "service.admitted",
+            "service.completed", "service.queue_depth",
+            "service.queue_wait_steps", "service.batch_occupancy",
+            "service.wait_steps", "service.lane_steps"} <= names
+
+    stale = tmp_path / "serving.md"
+    keep = sorted(names - {"service.queue_wait_steps"})
+    stale.write_text("metrics: " + " ".join(f"`{n}`" for n in keep) + "\n")
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"), str(stale)],
+        capture_output=True, text=True)
+    assert out.returncode == 1
+    assert "'service.queue_wait_steps' is missing" in out.stderr
+
+    fresh = tmp_path / "ok" / "serving.md"
+    fresh.parent.mkdir()
+    fresh.write_text("metrics: " + " ".join(f"`{n}`" for n in sorted(names))
+                     + "\n")
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"), str(fresh)],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr

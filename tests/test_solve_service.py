@@ -1,0 +1,344 @@
+"""Service-level test layer for the multi-tenant batched solve service
+(ISSUE 9): tenant isolation, bucketing determinism, admission control.
+
+The contracts locked down here (docs/serving.md):
+
+- **Tenant isolation** — killing one tenant mid-batch (block, PRD, and
+  shard variants, across >= 3 solver families x >= 3 spec families)
+  rolls only the victim back; the victim reconverges onto its solo
+  trajectory, and every cohabitant lane's iterates — final x, captured
+  mid-trajectory states, the full residual history — stay
+  **bit-identical** to a solo run of the same tenant through the same
+  service (same bucket shape, same compiled vmapped step: the
+  bit-identity scope).
+- **Bucketing determinism** — a padded, vmapped lane solve agrees with
+  the per-problem ``api.solve`` answer to machine precision for every
+  batchable solver family (the dot products regroup across the padded
+  length, so agreement is to tolerance, not bits).
+- **Admission control** — the bounded queue rejects with a ticket (not
+  an exception), waits are measured in deterministic service steps, and
+  the queue/occupancy statistics land in both SolveReport and the
+  service registry.
+"""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.obs import check_report_consistency, Tracer
+from repro.serving.solve_service import ServiceError
+from repro.solvers import FailureEvent, UnsurvivableCampaignError
+
+CAPTURE_K = 5  # mid-trajectory capture: past iteration 0, before any
+#                family converges on the sweep grids
+
+
+def _bitwise_state_equal(got, want):
+    return all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(got, want))
+
+
+def _service(lanes=4, max_queue=8, tracer=None):
+    return api.SolveService(api.ServiceConfig(lanes=lanes,
+                                              max_queue=max_queue,
+                                              tracer=tracer))
+
+
+# ---------------------------------------------------------------------------
+# Tenant-isolation acceptance sweep: >= 3 solver families x >= 3 spec
+# families, one kill variant each (block / PRD / shard).
+# ---------------------------------------------------------------------------
+
+ISOLATION_CASES = (
+    # (solver, tol, spec, victim kill, victim nshards)
+    ("pcg", 1e-9, "replicated(nvm-prd x2)",
+     FailureEvent(blocks=(1,), at_iteration=4, prd=True), 1),
+    ("bicgstab", 1e-9, "nvm-prd",
+     FailureEvent(blocks=(0, 1), at_iteration=3), 1),
+    ("chebyshev", 1e-8, "erasure(nvm-prd x4+p)",
+     FailureEvent(shard=1, at_iteration=6), 3),
+)
+
+
+@pytest.mark.parametrize("solver,tol,spec,kill,nshards", ISOLATION_CASES,
+                         ids=[c[0] for c in ISOLATION_CASES])
+def test_tenant_isolation_kill_mid_batch(solver, tol, spec, kill, nshards):
+    victim_p = api.Problem.poisson(6, nblocks=6)
+    cohab_ps = {
+        "c1": api.Problem.poisson(5, 8, 8, nblocks=5),   # bucket (8,8,8)
+        "c2": api.Problem.poisson(8, nblocks=8),          # exact-fit lane
+    }
+    sspec = api.SolverSpec(solver, tol=tol, maxiter=2000)
+
+    svc = _service()
+    tv = svc.submit(victim_p, sspec, spec, failures=(kill,), tenant="victim",
+                    nshards=nshards, capture_states_at=(CAPTURE_K,))
+    tc = {name: svc.submit(p, sspec, "nvm-prd", tenant=name,
+                           capture_states_at=(CAPTURE_K,))
+          for name, p in cohab_ps.items()}
+    svc.drain()
+
+    # Victim: recovered mid-batch and reconverged onto its solo
+    # trajectory (recovery reconstructs in tenant space, so exactness is
+    # to solver tolerance, not bits).
+    vrep = tv.result.report
+    assert vrep.converged
+    assert vrep.failures_recovered >= 1
+    assert vrep.nshards == nshards
+    solo = api.solve(victim_p, sspec)
+    assert solo.iterations == vrep.iterations
+    np.testing.assert_allclose(tv.result.x, solo.x, rtol=1e-8, atol=1e-10)
+    check_report_consistency(vrep)
+
+    # Cohabitants: bit-identical to their solo no-failure runs through
+    # the same service (same bucket shape + lane width = same compiled
+    # step), regardless of which lane each run seated them in.
+    for name, p in cohab_ps.items():
+        ref_svc = _service()
+        ref = ref_svc.submit(p, sspec, "nvm-prd", tenant=name,
+                             capture_states_at=(CAPTURE_K,))
+        ref_svc.drain()
+        got, want = tc[name].result, ref.result
+        assert np.array_equal(got.x, want.x), f"{name}: final x drifted"
+        assert _bitwise_state_equal(got.captured[CAPTURE_K],
+                                    want.captured[CAPTURE_K]), \
+            f"{name}: captured state at k={CAPTURE_K} drifted"
+        assert (got.report.residual_history
+                == want.report.residual_history), \
+            f"{name}: residual history drifted"
+        assert got.report.failures_recovered == 0
+        check_report_consistency(got.report)
+
+
+def test_storage_only_kill_is_isolated_and_survivable():
+    """A PRD kill with no compute-block loss: the victim's persistence
+    service dies but its lanes keep stepping; cohabitants unaffected."""
+    p1 = api.Problem.poisson(4, nblocks=4)
+    p2 = api.Problem.poisson(3, 4, 4, nblocks=3)
+    svc = _service()
+    t1 = svc.submit(p1, api.SolverSpec("pcg", tol=1e-9), "nvm-prd",
+                    failures=(FailureEvent(blocks=(), at_iteration=2,
+                                           prd=True),),
+                    tenant="t1")
+    t2 = svc.submit(p2, api.SolverSpec("pcg", tol=1e-9), "nvm-prd",
+                    tenant="t2")
+    svc.drain()
+    assert t1.result.report.converged
+    assert t1.result.report.storage_failures == 1
+    assert t1.result.report.failures_recovered == 0
+    assert t2.result.report.converged
+    assert t2.result.report.storage_failures == 0
+
+
+# ---------------------------------------------------------------------------
+# Bucketing determinism: padded + vmapped == per-problem api.solve.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("solver,tol", [("pcg", 1e-9), ("bicgstab", 1e-9),
+                                        ("chebyshev", 1e-8),
+                                        ("jacobi", 1e-6)])
+def test_bucketed_solve_matches_solo_api_solve(solver, tol):
+    """Mixed tenant sizes share buckets; every tenant's service answer
+    equals its solo api.solve answer to machine precision, with the
+    same convergence verdict."""
+    problems = [api.Problem.poisson(3, 4, 4, nblocks=3),
+                api.Problem.poisson(4, nblocks=4),
+                api.Problem.poisson(6, nblocks=6)]
+    sspec = api.SolverSpec(solver, tol=tol, maxiter=3000)
+    svc = _service()
+    tickets = [svc.submit(p, sspec, "nvm-prd", tenant=f"t{i}")
+               for i, p in enumerate(problems)]
+    svc.drain()
+    for p, tk in zip(problems, tickets):
+        solo = api.solve(p, sspec)
+        assert tk.result.report.converged and solo.converged
+        assert tk.result.report.final_relres < tol
+        np.testing.assert_allclose(tk.result.x, solo.x,
+                                   rtol=1e-8, atol=1e-10)
+
+
+def test_replay_is_deterministic(request_trace):
+    """Two replays of the same seeded trace produce bit-identical
+    iterates and identical service clocks."""
+    reqs = request_trace(1, nrequests=4, failure_rate=0.5,
+                         survivable_only=True)
+    a, b = _service(), _service()
+    ta, tb = a.replay(reqs), b.replay(reqs)
+    assert a.now == b.now
+    assert sorted(ta) == sorted(tb)
+    for name in ta:
+        assert ta[name].accepted == tb[name].accepted
+        if ta[name].accepted:
+            assert np.array_equal(ta[name].result.x, tb[name].result.x)
+            assert (ta[name].result.report.residual_history
+                    == tb[name].result.report.residual_history)
+
+
+# ---------------------------------------------------------------------------
+# Admission control: bounded queue, waits, occupancy.
+# ---------------------------------------------------------------------------
+
+def test_bounded_queue_rejects_and_counts():
+    p = api.Problem.poisson(4, nblocks=4)
+    sspec = api.SolverSpec("pcg", tol=1e-9)
+    tr = Tracer()
+    svc = _service(lanes=1, max_queue=2, tracer=tr)
+    tickets = [svc.submit(p, sspec, "nvm-prd", tenant=f"t{i}")
+               for i in range(4)]
+    accepted = [t for t in tickets if t.accepted]
+    rejected = [t for t in tickets if not t.accepted]
+    assert len(accepted) == 2 and len(rejected) == 2
+    assert all(t.reason == "queue full" for t in rejected)
+    assert svc.metrics.counter_value("service.submitted") == 4
+    assert svc.metrics.counter_value("service.rejected") == 2
+    svc.drain()
+    assert svc.metrics.counter_value("service.admitted") == 2
+    assert svc.metrics.counter_value("service.completed") == 2
+    assert tr.counts().get("service.reject", 0) == 2
+    # rejected tickets never produce results
+    assert all(t.result is None for t in rejected)
+    assert all(t.result.report.converged for t in accepted)
+
+
+def test_queue_wait_and_occupancy_stats():
+    """With one lane, the second tenant must wait for the first to
+    finish; its wait (in service steps) lands in the report, the
+    service histograms, and the tenant registry (derived-view rule)."""
+    p = api.Problem.poisson(4, nblocks=4)
+    sspec = api.SolverSpec("pcg", tol=1e-9)
+    svc = _service(lanes=1, max_queue=4)
+    t1 = svc.submit(p, sspec, "nvm-prd", tenant="first")
+    t2 = svc.submit(p, sspec, "nvm-prd", tenant="second")
+    svc.drain()
+    r1, r2 = t1.result.report, t2.result.report
+    assert r1.service_queue_wait_steps == 0
+    # the second tenant waits exactly the first one's residency plus the
+    # admission step: the lane frees mid-step, after that step's
+    # admission pass already ran, so the successor boards next step
+    assert r2.service_queue_wait_steps == r1.service_lane_steps + 1
+    assert r2.service_queue_wait_steps > 0
+    for rep in (r1, r2):
+        assert rep.service_lane_steps > 0
+        assert rep.service_batch_occupancy == 1.0  # single-lane bucket
+        # derived view: the report field reads back out of the registry
+        assert (rep.metrics.counter_value("service.wait_steps")
+                == rep.service_queue_wait_steps)
+        assert (rep.metrics.counter_value("service.lane_steps")
+                == rep.service_lane_steps)
+    hist = svc.metrics.histogram("service.queue_wait_steps")
+    assert hist.count == 2
+    assert hist.percentile(99) == r2.service_queue_wait_steps
+
+
+def test_occupancy_reflects_shared_bucket():
+    """Two same-bucket tenants in a 4-lane bucket see occupancy 0.5
+    while both are live."""
+    sspec = api.SolverSpec("chebyshev", tol=1e-8, maxiter=2000)
+    svc = _service(lanes=4)
+    t1 = svc.submit(api.Problem.poisson(6, nblocks=6), sspec, "nvm-prd",
+                    tenant="a")
+    t2 = svc.submit(api.Problem.poisson(6, nblocks=6), sspec, "nvm-prd",
+                    tenant="b")
+    svc.drain()
+    # identical problems retire at the same step: occupancy 0.5 for both
+    assert t1.result.report.service_batch_occupancy == pytest.approx(0.5)
+    assert t2.result.report.service_batch_occupancy == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Admission validation and advisor integration.
+# ---------------------------------------------------------------------------
+
+def test_rejects_non_batchable_solver():
+    with pytest.raises(ServiceError, match="no batched lane step"):
+        _service().submit(api.Problem.poisson(4, nblocks=4),
+                          api.SolverSpec("gmres"))
+
+
+def test_rejects_non_diagonal_preconditioner():
+    p = api.Problem.poisson(4, nblocks=4, preconditioner="block_jacobi")
+    with pytest.raises(ServiceError, match="diagonal"):
+        _service().submit(p, api.SolverSpec("pcg"))
+
+
+def test_rejects_non_stencil_operator():
+    from repro.core.poisson import DenseOperator
+
+    n, nblocks = 16, 4
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n))
+    op = DenseOperator(a @ a.T + n * np.eye(n), nblocks=nblocks)
+    p = api.Problem.from_parts(op, np.ones(n))
+    with pytest.raises(ServiceError, match="stencil"):
+        _service().submit(p, api.SolverSpec("pcg"))
+
+
+def test_unsurvivable_campaign_raises_at_submission():
+    """plan_campaign runs at submit: a PRD kill against a bare nvm-prd
+    spec raises before the tenant reaches the queue, naming the event."""
+    svc = _service()
+    with pytest.raises(UnsurvivableCampaignError, match="prd"):
+        svc.submit(api.Problem.poisson(4, nblocks=4),
+                   api.SolverSpec("pcg"), "nvm-prd",
+                   failures=(FailureEvent(blocks=(1,), at_iteration=3,
+                                          prd=True),))
+    assert svc.active == 0 and svc.queued == 0
+
+
+def test_advisor_picks_spec_when_unset():
+    """resilience=None routes through api.ResilienceSpec.advise: the
+    chosen backend survives the tenant's campaign."""
+    svc = _service()
+    tk = svc.submit(api.Problem.poisson(4, nblocks=4),
+                    api.SolverSpec("pcg", tol=1e-9), None,
+                    failures=(FailureEvent(blocks=(1,), at_iteration=3,
+                                           prd=True),),
+                    tenant="advised")
+    svc.drain()
+    rep = tk.result.report
+    assert rep.converged
+    assert rep.failures_recovered >= 1 and rep.storage_failures >= 1
+    assert tk.result.backend.capabilities.survives_prd_loss
+
+
+def test_shard_events_resolve_against_declared_layout():
+    """shard= kills resolve against the tenant's declared logical
+    ShardLayout — no device mesh anywhere — and per-shard traffic is
+    labeled by that layout."""
+    svc = _service()
+    tk = svc.submit(api.Problem.poisson(4, nblocks=4),
+                    api.SolverSpec("pcg", tol=1e-9),
+                    "replicated(nvm-prd x2)",
+                    failures=(FailureEvent(shard=1, at_iteration=3),),
+                    tenant="sharded", nshards=2)
+    svc.drain()
+    rep = tk.result.report
+    assert rep.converged and rep.failures_recovered == 1
+    assert rep.nshards == 2
+    assert set(rep.persist_bytes_by_shard) == {0, 1}
+    # the shard kill lost shard 1's blocks: recovery fetched them back
+    assert rep.recovery_fetch_bytes_by_shard.get(1, 0) > 0
+
+
+def test_service_tracer_taxonomy(request_trace):
+    """The service emits its span/event taxonomy (docs/serving.md):
+    submit/admit/complete events, the service.step span, and the
+    per-tenant pipeline events underneath."""
+    reqs = request_trace(2, nrequests=3, failure_rate=1.0,
+                         survivable_only=True)
+    tr = Tracer()
+    svc = api.SolveService(api.ServiceConfig(lanes=2, tracer=tr))
+    tickets = svc.replay(reqs)
+    counts = tr.counts()
+    n_acc = sum(1 for t in tickets.values() if t.accepted)
+    assert counts["service.submit"] == len(reqs)
+    assert counts["service.admit"] == n_acc
+    assert counts["service.complete"] == n_acc
+    # every non-idle service step opened a span (idle ticks toward a
+    # future arrival advance the clock without spanning)
+    assert 0 < counts["service.step"] <= svc.now
+    assert counts["solve.begin"] == n_acc
+    assert counts["solve.end"] == n_acc
+    # per-tenant recovery events flowed through the shared tracer
+    total_recovered = sum(t.result.report.failures_recovered
+                          for t in tickets.values() if t.accepted)
+    assert counts.get("recovery.absorbed", 0) == total_recovered

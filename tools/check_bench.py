@@ -28,7 +28,7 @@ import sys
 SCHEMA_VERSION = "repro-bench/v1"
 
 TOP_KEYS = ("schema", "bench", "seed", "smoke", "solver", "problem", "specs",
-            "sharded")
+            "sharded", "service")
 MODELED_KEYS = ("persist_s_per_event", "persist_s_per_iter",
                 "exposed_persist_s_per_iter", "drain_s",
                 "storage_overhead_x")
@@ -39,6 +39,12 @@ WALL_KEYS = ("hidden_fraction", "exposed_persist_s_per_iter",
              "iterations_per_s", "recovery_latency_s")
 SHARDED_BYTE_KEYS = ("blocks_per_shard", "slot_nbytes", "persist_bytes",
                      "recovery_fetch_bytes")
+SERVICE_LOADS = ("no_failures", "with_failures")
+SERVICE_COUNT_KEYS = ("requests", "completed", "rejected", "converged",
+                      "failures_recovered", "service_steps",
+                      "queue_wait_steps_p50", "queue_wait_steps_p99",
+                      "batch_occupancy_mean")
+SERVICE_WALL_KEYS = ("elapsed_s", "solves_per_s")
 
 
 class BenchError(Exception):
@@ -119,6 +125,35 @@ def validate(doc: dict, path: str = "<doc>") -> None:
         _require(isinstance(wall, dict) and _numeric(
                      wall.get("hidden_fraction")),
                  f"{where}.wall.hidden_fraction must be numeric")
+    service = doc["service"]
+    _require(isinstance(service, dict),
+             f"{path}: service must be an object")
+    trace = service.get("trace")
+    _require(isinstance(trace, dict), f"{path}: service.trace must be an "
+                                      f"object")
+    for k in ("seed", "requests", "lanes"):
+        _require(_numeric(trace.get(k)),
+                 f"{path}: service.trace.{k} must be numeric")
+    for load in SERVICE_LOADS:
+        where = f"{path}: service[{load!r}]"
+        entry = service.get(load)
+        _require(isinstance(entry, dict), f"{where} must be an object")
+        counts = entry.get("counts")
+        _require(isinstance(counts, dict), f"{where}.counts must be an object")
+        for k in SERVICE_COUNT_KEYS:
+            _require(_numeric(counts.get(k)),
+                     f"{where}.counts.{k} must be numeric")
+        _require(counts["completed"] + counts["rejected"]
+                 == counts["requests"],
+                 f"{where}.counts: completed + rejected != requests")
+        _require(counts["queue_wait_steps_p50"]
+                 <= counts["queue_wait_steps_p99"],
+                 f"{where}.counts: queue-wait p50 exceeds p99")
+        wall = entry.get("wall")
+        _require(isinstance(wall, dict), f"{where}.wall must be an object")
+        for k in SERVICE_WALL_KEYS:
+            _require(_numeric(wall.get(k)),
+                     f"{where}.wall.{k} must be numeric")
 
 
 def strip_nondeterministic(doc: dict) -> dict:
@@ -129,6 +164,10 @@ def strip_nondeterministic(doc: dict) -> dict:
                     for spec, entry in doc["specs"].items()}
     out["sharded"] = {n: {k: v for k, v in entry.items() if k != "wall"}
                       for n, entry in doc.get("sharded", {}).items()}
+    out["service"] = {
+        load: ({k: v for k, v in entry.items() if k != "wall"}
+               if isinstance(entry, dict) else entry)
+        for load, entry in doc.get("service", {}).items()}
     return out
 
 

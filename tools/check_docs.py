@@ -157,6 +157,26 @@ def check_span_taxonomy(doc: Path, repo_root: Path) -> list:
             f"section)" for n in missing]
 
 
+def check_service_metrics(doc: Path, repo_root: Path) -> list:
+    """Freshness gate (ISSUE 9): every metric instrument name the
+    service layer creates (string literals at ``.counter(`` /
+    ``.gauge(`` / ``.histogram(`` call sites under ``serving/``) must
+    appear in the serving doc's metric table — new service
+    instrumentation cannot land undocumented.  The service's span/event
+    names ride the observability taxonomy gate like everyone else's."""
+    names = set(_facts(repo_root / "src")["service_metric_names"])
+    if not names:
+        return [f"{doc}: no service metric call sites found under "
+                f"{repo_root / 'src'} — is the serving layer intact?"]
+    text = doc.read_text()
+    missing = sorted(n for n in names if n not in text)
+    print(f"{doc}: service metric table covers {len(names) - len(missing)}/"
+          f"{len(names)} emitted metric names")
+    return [f"{doc}: service metric name {n!r} is missing from the metric "
+            f"table — document it (see the 'Metrics and spans' section)"
+            for n in missing]
+
+
 def supported_erasure_arities(src_root: Path) -> list:
     """The ``+p`` / ``+2p`` / ... spec suffixes the stripe grammar
     accepts, derived from the ``MAX_PARITY`` constant in the GF(2^8)
@@ -225,6 +245,8 @@ def main(argv) -> int:
             errors.extend(check_backend_matrix(p, repo_root))
         if p.name == "observability.md":
             errors.extend(check_span_taxonomy(p, repo_root))
+        if p.name == "serving.md":
+            errors.extend(check_service_metrics(p, repo_root))
         if p.name == "static-analysis.md":
             errors.extend(check_rule_catalog(p, repo_root))
     for e in errors:

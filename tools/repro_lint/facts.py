@@ -21,6 +21,7 @@ from .core import FileContext, Project
 
 TRACER_METHODS = ("span", "event")
 REGISTER_FUNCS = ("register_backend", "register_backend_class")
+METRIC_METHODS = ("counter", "gauge", "histogram")
 
 
 def _call_name(func: ast.AST) -> str:
@@ -40,6 +41,21 @@ def span_names(tree: ast.Module) -> Set[str]:
         if (isinstance(node, ast.Call)
                 and isinstance(node.func, ast.Attribute)
                 and node.func.attr in TRACER_METHODS and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            names.add(node.args[0].value)
+    return names
+
+
+def metric_names(tree: ast.Module) -> Set[str]:
+    """Metric instrument names created by this module — string literals
+    at ``.counter("...")`` / ``.gauge("...")`` / ``.histogram("...")``
+    call sites (the MetricsRegistry get-or-create surface)."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in METRIC_METHODS and node.args
                 and isinstance(node.args[0], ast.Constant)
                 and isinstance(node.args[0].value, str)):
             names.add(node.args[0].value)
@@ -87,11 +103,14 @@ def collect_facts(project: Project) -> dict:
     """The machine-readable facts block of ``--json`` output."""
     spans: Set[str] = set()
     families: Set[str] = set()
+    service_metrics: Set[str] = set()
     parity = 0
     tracer_sites = 0
     for ctx in project.files:
         spans |= span_names(ctx.tree)
         families |= backend_families(ctx.tree)
+        if "serving" in ctx.rel.split("/"):
+            service_metrics |= metric_names(ctx.tree)
         if ctx.path_endswith("gf256.py"):
             parity = max(parity, max_parity(ctx.tree))
         for node in ast.walk(ctx.tree):
@@ -102,6 +121,7 @@ def collect_facts(project: Project) -> dict:
     return {
         "span_names": sorted(spans),
         "backend_families": sorted(families),
+        "service_metric_names": sorted(service_metrics),
         "erasure_arities": erasure_arities_from_parity(parity),
         "tracer_sites": tracer_sites,
     }
