@@ -184,6 +184,87 @@ def build(seed: int = 0, smoke: bool = None) -> dict:
         "specs": specs,
         "sharded": _sharded_rows(grid, tol, at),
         "service": _service_rows(seed, smoke),
+        "persist_kernels": _persist_kernel_rows(grid, nblocks, tol, at),
+    }
+
+
+def _persist_kernel_rows(grid, nblocks: int, tol: float, at: int) -> dict:
+    """The fused persist-kernel rows (ISSUE 10, DESIGN.md §13): the
+    x6+2p overlap campaign solve run back to back through the numpy
+    ("ref") and fused Pallas persist routes.  Deterministic subtrees:
+    the stripe encode geometry (bytes the encode moves per event, plus
+    the fused update+staging pass's HBM traffic model) and the
+    bit-identity/accounting cross-checks.  The hidden fractions of both
+    routes live under ``wall`` — the fused route defers staging into
+    the compute window, so its fraction is the one the tentpole claim
+    is about (> ~0.94 on the committed non-smoke run)."""
+    import numpy as np
+
+    from repro.kernels.fused_cg import fused_pass_traffic
+
+    spec = "erasure(nvm-prd x6+2p)"
+    op, b = make_poisson_problem(*grid, nblocks=nblocks)
+    pre = JacobiPreconditioner(op)
+    campaign = FailureCampaign((
+        FailureEvent(blocks=(1,), at_iteration=at),))
+
+    states, reports, walls = {}, {}, {}
+    be = None
+    for label, fused in (("ref", False), ("fused", True)):
+        solver = make_solver("pcg", op, pre)
+        be = make_backend(spec, op, solver=solver)
+        tracer = Tracer()
+        t0 = time.perf_counter()
+        st, rep, _ = solve(solver, op, b, pre,
+                           SolveConfig(tol=tol, maxiter=20000,
+                                       persist_mode="overlap",
+                                       fused_persist=fused,
+                                       tracer=tracer),
+                           backend=be, failures=campaign)
+        walls[label] = time.perf_counter() - t0
+        check_trace_report(tracer, rep)
+        states[label] = np.asarray(st.x)
+        reports[label] = rep
+
+    itemsize = int(np.dtype(b.dtype).itemsize)
+    ref_rep, fused_rep = reports["ref"], reports["fused"]
+    return {
+        "spec": spec,
+        "geometry": {
+            "k_data": be.k_data,
+            "nparity": be.nparity,
+            "chunk_values": be.chunk,
+            "itemsize": itemsize,
+            # one stripe encode reads the K data chunks of every block
+            # and emits P parity chunks, per schema vector per event
+            "encode_read_bytes_per_event":
+                be.nblocks * be.k_data * be.chunk * itemsize,
+            "parity_bytes_per_event":
+                be.nblocks * be.nparity * be.chunk * itemsize,
+            "fused_pass": fused_pass_traffic(op.n, itemsize, be.k_data,
+                                             be.nparity),
+        },
+        "counts": {
+            # the tentpole's exactness claim, recorded in the artifact:
+            # both routes produce the same final iterate, bit for bit
+            "bit_identical": bool(np.array_equal(states["ref"],
+                                                 states["fused"])),
+            "counts_match_ref": bool(
+                ref_rep.iterations == fused_rep.iterations
+                and ref_rep.persist_events == fused_rep.persist_events
+                and ref_rep.persist_aborts == fused_rep.persist_aborts),
+            "iterations": fused_rep.iterations,
+            "persist_events": fused_rep.persist_events,
+            "persist_aborts": fused_rep.persist_aborts,
+        },
+        "wall": {
+            "hidden_fraction_ref": ref_rep.persist_hidden_fraction,
+            "hidden_fraction_fused": fused_rep.persist_hidden_fraction,
+            "iterations_per_s_ref":
+                ref_rep.iterations / max(walls["ref"], 1e-12),
+            "iterations_per_s_fused":
+                fused_rep.iterations / max(walls["fused"], 1e-12),
+        },
     }
 
 
@@ -311,4 +392,11 @@ def rows(seed: int = 0):
         out.append((f"trajectory_service_{label}_solves_per_s",
                     entry["wall"]["solves_per_s"],
                     "multi-tenant service throughput, wall-clock dependent"))
+    pk = doc["persist_kernels"]
+    out.append(("trajectory_persist_hidden_fraction_ref",
+                pk["wall"]["hidden_fraction_ref"],
+                "numpy persist route on x6+2p, wall-clock dependent"))
+    out.append(("trajectory_persist_hidden_fraction_fused",
+                pk["wall"]["hidden_fraction_fused"],
+                "fused persist route on x6+2p, wall-clock dependent"))
     return out

@@ -50,8 +50,26 @@ def _from_dryrun():
     return None
 
 
+def _persist_bandwidth_rows():
+    """The fused persist-bandwidth term (DESIGN.md §13): what share of
+    the fused update+staging pass's HBM traffic is persist staging, and
+    how many re-read bytes the fusion removes, on the paper's x6+2p
+    stripe at the bench solve size."""
+    from repro.kernels.fused_cg import fused_pass_traffic
+
+    t = fused_pass_traffic(n=64 * 64 * 64, itemsize=8, k_data=6, nparity=2)
+    return [
+        ("solver_fused_pass_total_bytes", t["total_bytes"],
+         "fused update+staging HBM bytes per pass (x6+2p)"),
+        ("solver_persist_bw_fraction", t["persist_bw_fraction"],
+         "share of the fused pass spent on persist staging"),
+        ("solver_fused_saved_read_bytes", t["unfused_extra_read_bytes"],
+         "vector re-read a standalone staging pass would add"),
+    ]
+
+
 def rows():
-    out = []
+    out = _persist_bandwidth_rows()
     dr = _from_dryrun()
     if dr is not None:
         nvm, esr = dr["pcg_1g"], dr["pcg_1g_esr"]
@@ -68,7 +86,11 @@ def rows():
                     "peak device RAM blow-up of in-memory ESR"))
         return out
     env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
+    # prepend, never overwrite: the tier-1 command exports
+    # PYTHONPATH=src:$PYTHONPATH and the subprocess must still see the
+    # caller's entries (site-installed deps, sitecustomize, ...)
+    env["PYTHONPATH"] = os.pathsep.join(
+        ["src"] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
     env.pop("XLA_FLAGS", None)
     res = subprocess.run([sys.executable, "-c", _SUB], capture_output=True,
                          text=True, env=env, check=True)

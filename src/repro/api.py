@@ -245,14 +245,19 @@ class ResilienceSpec:
     0.  ``nshards`` pins the expected device-shard count of the
     problem: ``None`` accepts any layout, an integer makes
     :func:`solve` refuse a problem whose shard axis disagrees (the
-    spec was sized/planned for that layout).  ``options`` are
-    forwarded to the backend factory."""
+    spec was sized/planned for that layout).  ``fused_persist``
+    selects the fused persist path (DESIGN.md §13): stripe parity
+    encodes run through the Pallas GF(256) kernel and, in overlap
+    mode, staging defers into the compute window — slot bytes and
+    solve trajectories are bit-identical to the numpy path.
+    ``options`` are forwarded to the backend factory."""
 
     backend: Union[str, PersistenceBackend, None] = "nvm-prd"
     persist_mode: str = "sync"
     period: int = 1
     plan_campaigns: bool = True
     nshards: Optional[int] = None
+    fused_persist: bool = False
     dtype: Any = np.float64
     options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -363,6 +368,7 @@ def solve(
         persistence_period=resilience.period,
         persist_mode=resilience.persist_mode,
         plan_campaign=resilience.plan_campaigns,
+        fused_persist=resilience.fused_persist,
         tracer=tracer,
     )
     state, report, captured = _driver.solve(

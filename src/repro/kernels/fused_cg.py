@@ -20,13 +20,26 @@ diagonal preconditioner (Jacobi); pass ones for plain CG.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 LANES = 128
+
+#: default row-tile cap: tiles never exceed this many (·, 128) rows
+DEFAULT_BM = 256
+
+
+def largest_divisor_bm(m: int, cap: int = DEFAULT_BM) -> int:
+    """The largest divisor of ``m`` that is <= ``cap`` (>= 1 always):
+    the auto block-rows choice, so every lane-aligned ``n`` gets a
+    legal tiling instead of a divisibility error."""
+    bm = min(cap, m)
+    while m % bm:
+        bm -= 1
+    return bm
 
 
 def _fused_cg_kernel(x_ref, r_ref, p_ref, ap_ref, inv_ref, alpha_ref,
@@ -52,17 +65,28 @@ def fused_cg_update_pallas(
     ap: jax.Array,
     alpha: jax.Array,
     inv_diag: jax.Array,
-    bm: int = 256,
+    bm: Optional[int] = None,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Single-pass fused CG update; returns (x', r', z', rz')."""
+    """Single-pass fused CG update; returns (x', r', z', rz').
+
+    ``bm=None`` (the default) picks the largest divisor of the row
+    count ``m = n // 128`` not exceeding :data:`DEFAULT_BM`, so any
+    lane-aligned ``n`` tiles legally (e.g. ``n = 384*128`` -> bm=192).
+    An explicit ``bm`` that does not divide ``m`` still raises — that
+    is a caller bug, not a size to silently repair.
+    """
     n = x.shape[0]
     if n % LANES != 0:
         raise ValueError(f"n={n} must be a multiple of {LANES}")
     m = n // LANES
-    bm = min(bm, m)
-    if m % bm != 0:
-        raise ValueError(f"rows m={m} not divisible by block rows bm={bm}")
+    if bm is None:
+        bm = largest_divisor_bm(m)
+    else:
+        bm = min(bm, m)
+        if m % bm != 0:
+            raise ValueError(
+                f"rows m={m} not divisible by block rows bm={bm}")
     grid = m // bm
 
     def as2d(v):
@@ -93,3 +117,165 @@ def fused_cg_update_pallas(
 
     rz = jnp.sum(partials).astype(x.dtype)  # tiny fp32 epilogue
     return xo.reshape(n), ro.reshape(n), zo.reshape(n), rz
+
+
+# ----------------------------------------------------------------------
+# Fused persist staging (DESIGN.md §13): the update pass already holds
+# every vector the PCG recovery schema needs (the search direction ``p``
+# is one of its five reads), so the erasure stripe's staging work —
+# chunking ``p`` block-wise into K shards and deriving the P/Q parity
+# bytes — can ride the same tile pass instead of a separate host-side
+# numpy pass.  The emitted chunk and parity layouts are byte-identical
+# to ``ErasureSession._shards`` + ``gf256.rs_encode``.
+# ----------------------------------------------------------------------
+def _make_persist_kernel(k_data: int, nparity: int, chunk: int,
+                         itemsize: int):
+    def kernel(x_ref, r_ref, p_ref, ap_ref, inv_ref, alpha_ref,
+               exp_ref, log_ref,
+               xo_ref, ro_ref, zo_ref, partial_ref, ch_ref, par_ref):
+        alpha = alpha_ref[0]
+        p = p_ref[...]
+        ap = ap_ref[...]
+        xn = x_ref[...] + alpha * p
+        rn = r_ref[...] - alpha * ap
+        zn = rn * inv_ref[...]
+        xo_ref[...] = xn
+        ro_ref[...] = rn
+        zo_ref[...] = zn
+        partial_ref[0, 0] = jnp.sum(rn.astype(jnp.float32)
+                                    * zn.astype(jnp.float32))
+        # --- staging free rider: this tile IS one partition block of p
+        stripe = p.reshape(k_data, chunk)
+        ch_ref[0] = stripe
+        dbytes = jax.lax.bitcast_convert_type(
+            stripe, jnp.uint8).reshape(k_data, chunk * itemsize)
+        pp = dbytes[0]
+        for j in range(1, k_data):
+            pp = pp ^ dbytes[j]
+        par_ref[0, 0] = pp
+        if nparity == 2:
+            exp = exp_ref[...]
+            logt = log_ref[...]
+            q = None
+            for j in range(k_data):
+                dj = dbytes[j]
+                idx = jnp.take(logt, dj.astype(jnp.int32)) + (j % 255)
+                term = jnp.take(exp, idx).astype(jnp.uint8)
+                term = jnp.where(dj == jnp.uint8(0), jnp.uint8(0), term)
+                q = term if q is None else q ^ term
+            par_ref[0, 1] = q
+
+    return kernel
+
+
+def fused_cg_update_persist_pallas(
+    x: jax.Array,
+    r: jax.Array,
+    p: jax.Array,
+    ap: jax.Array,
+    alpha: jax.Array,
+    inv_diag: jax.Array,
+    *,
+    nblocks: int,
+    k_data: int,
+    nparity: int,
+    interpret: bool = False,
+):
+    """Fused CG update + erasure persist staging in one tile pass.
+
+    Returns ``(x', r', z', rz', chunks, parity)`` where ``chunks`` is a
+    ``(nblocks, k_data, chunk)`` array of ``p``'s stripe chunks (chunk
+    ``j`` of the full vector is ``chunks[:, j, :].reshape(-1)``) and
+    ``parity`` a ``(nblocks, nparity, chunk*itemsize)`` uint8 array of
+    the P/Q parity bytes, both byte-identical to what
+    ``ErasureSession._shards`` computes from the same ``p``.
+
+    The grid runs one partition block per step (tile rows =
+    ``block_size // 128``), so the stripe chunking aligns with the
+    update tiling; sizes that break that alignment (``128 ∤
+    block_size`` or ``k_data ∤ block_size``) raise and callers fall
+    back to the unfused path (DESIGN.md §13).
+    """
+    from repro.nvm import gf256
+
+    n = x.shape[0]
+    if n % nblocks != 0:
+        raise ValueError(f"n={n} not divisible by nblocks={nblocks}")
+    bs = n // nblocks
+    if bs % LANES != 0:
+        raise ValueError(
+            f"block_size={bs} must be a multiple of {LANES} for the "
+            f"fused persist pass")
+    if bs % k_data != 0:
+        raise ValueError(
+            f"block_size={bs} not divisible by k_data={k_data}: the "
+            f"stripe pads chunks, which the fused pass does not model")
+    gf256.vandermonde(nparity, k_data)
+    chunk = bs // k_data
+    itemsize = jnp.dtype(x.dtype).itemsize
+    rb = bs // LANES
+    m = n // LANES
+
+    def as2d(v):
+        return v.reshape(m, LANES)
+
+    vec_spec = pl.BlockSpec((rb, LANES), lambda i: (i, 0))
+    table = lambda size: pl.BlockSpec((size,), lambda i: (0,))  # noqa: E731
+    alpha_arr = jnp.broadcast_to(jnp.asarray(alpha, x.dtype), (1,))
+    exp = jnp.asarray(gf256.EXP, dtype=jnp.int32)
+    logt = jnp.asarray(gf256.LOG, dtype=jnp.int32)
+
+    xo, ro, zo, partials, chunks, parity = pl.pallas_call(
+        _make_persist_kernel(k_data, nparity, chunk, itemsize),
+        grid=(nblocks,),
+        in_specs=[
+            vec_spec, vec_spec, vec_spec, vec_spec, vec_spec,
+            pl.BlockSpec((1,), lambda i: (0,)),
+            table(510), table(256),
+        ],
+        out_specs=[
+            vec_spec, vec_spec, vec_spec,
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, k_data, chunk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, nparity, chunk * itemsize),
+                         lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, LANES), x.dtype),
+            jax.ShapeDtypeStruct((m, LANES), x.dtype),
+            jax.ShapeDtypeStruct((m, LANES), x.dtype),
+            jax.ShapeDtypeStruct((nblocks, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks, k_data, chunk), x.dtype),
+            jax.ShapeDtypeStruct((nblocks, nparity, chunk * itemsize),
+                                 jnp.uint8),
+        ],
+        interpret=interpret,
+    )(as2d(x), as2d(r), as2d(p), as2d(ap), as2d(inv_diag), alpha_arr,
+      exp, logt)
+
+    rz = jnp.sum(partials).astype(x.dtype)
+    return xo.reshape(n), ro.reshape(n), zo.reshape(n), rz, chunks, parity
+
+
+def fused_pass_traffic(n: int, itemsize: int, k_data: int,
+                       nparity: int) -> dict:
+    """HBM traffic accounting of the fused update+staging pass (the
+    roofline's persist-bandwidth term): the bare update moves 5n reads
+    + 3n writes; fused staging adds the chunk emission (n values) and
+    the parity emission (n * P/K values) as extra writes — the encode
+    *reads* ride for free on the p read the update already does."""
+    update_read = 5 * n * itemsize
+    update_write = 3 * n * itemsize
+    staged_write = n * itemsize + (n * itemsize * nparity) // k_data
+    total = update_read + update_write + staged_write
+    return {
+        "update_read_bytes": update_read,
+        "update_write_bytes": update_write,
+        "staged_write_bytes": staged_write,
+        "total_bytes": total,
+        # share of the fused pass's HBM traffic that is persist staging
+        "persist_bw_fraction": staged_write / total,
+        # what a standalone staging pass would add: re-read the vector
+        # (n) plus the same writes — the traffic the fusion removes
+        "unfused_extra_read_bytes": n * itemsize,
+    }

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: tiled GF(2^8) Reed-Solomon P/Q parity encode.
+
+The erasure backend's stripe write (DESIGN.md §8) splits every slot
+vector into K data chunks and derives P parity chunks (P ∈ {1, 2}) with
+:func:`repro.nvm.gf256.rs_encode` — a numpy table-lookup pass that runs
+entirely outside the compute stream, reading the K chunks once per
+parity row.  This kernel fuses both parity rows into **one read of the
+data**: each grid step pulls a ``(K, bm, 128)`` byte tile into VMEM and
+emits the matching P and Q tiles together —
+
+- P parity is the plain bytewise XOR of the K shards (Vandermonde row 0
+  is all ones);
+- Q parity weights shard ``j`` by the generator power ``g^j`` before
+  XOR-accumulating, computed exactly as ``gf256.gf_mul`` does it:
+  ``EXP[LOG[d] + LOG[g^j]]`` with zero operands masked.  The EXP/LOG
+  tables ride into the kernel as lane-resident lookup inputs
+  (510 + 256 entries, a few KB of VMEM), and ``LOG[g^j] == j % 255`` by
+  table construction, so the per-shard coefficient lookup folds into a
+  static offset.
+
+Same table, same index arithmetic, same masking — the parity bytes are
+**bit-identical** to :func:`repro.nvm.gf256.rs_encode`, which stays the
+fallback and the test oracle (``tests/test_gf256_encode.py`` sweeps
+K ∈ {2,..,6}, P ∈ {1,2} and ragged tails in interpret mode).
+
+Backends never call this module directly: dispatch goes through
+:func:`repro.kernels.ops.rs_encode` (the registered fused-persist
+toggle), which repro-lint rule RL204 enforces.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.nvm import gf256
+
+LANES = 128
+
+#: default byte-tile rows per grid step ((bm, 128) = 8 KB per shard)
+DEFAULT_BM = 64
+
+
+def _make_encode_kernel(k_data: int, nparity: int):
+    """Build the tile kernel for a static (K, P) stripe shape."""
+
+    def kernel(d_ref, exp_ref, log_ref, *out_refs):
+        d = d_ref[...]                       # (K, bm, LANES) uint8
+        p = d[0]
+        for j in range(1, k_data):
+            p = p ^ d[j]
+        out_refs[0][...] = p
+        if nparity == 2:
+            exp = exp_ref[...]               # (510,) int32 values of EXP
+            logt = log_ref[...]              # (256,) int32 LOG table
+            q = None
+            for j in range(k_data):
+                dj = d[j]
+                # gf_mul(g^j, dj) == EXP[LOG[g^j] + LOG[dj]], zeros
+                # masked; LOG[g^j] == j % 255 by table construction.
+                idx = jnp.take(logt, dj.astype(jnp.int32)) + (j % 255)
+                term = jnp.take(exp, idx).astype(jnp.uint8)
+                term = jnp.where(dj == jnp.uint8(0), jnp.uint8(0), term)
+                q = term if q is None else q ^ term
+            out_refs[1][...] = q
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nparity", "bm", "interpret"))
+def _encode_tiles(arr: jax.Array, exp: jax.Array, logt: jax.Array,
+                  nparity: int, bm: int, interpret: bool):
+    k_data, m, _ = arr.shape
+    grid = m // bm
+    tile = pl.BlockSpec((k_data, bm, LANES), lambda i: (0, i, 0))
+    table = lambda size: pl.BlockSpec((size,), lambda i: (0,))  # noqa: E731
+    out_spec = pl.BlockSpec((bm, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _make_encode_kernel(k_data, nparity),
+        grid=(grid,),
+        in_specs=[tile, table(510), table(256)],
+        out_specs=[out_spec] * nparity,
+        out_shape=[jax.ShapeDtypeStruct((m, LANES), jnp.uint8)] * nparity,
+        interpret=interpret,
+    )(arr, exp, logt)
+
+
+def gf256_rs_encode_pallas(data: Sequence[np.ndarray], nparity: int,
+                           bm: int = DEFAULT_BM,
+                           interpret: bool = False) -> List[np.ndarray]:
+    """Drop-in for :func:`repro.nvm.gf256.rs_encode`: ``nparity``
+    parity shards over equal-length uint8 data shards, both parities
+    emitted from a single tiled read of the data.
+
+    Ragged lengths are zero-padded up to the tile grid internally
+    (parity of zero bytes is zero on both rows) and sliced back, so the
+    returned shards are bit-identical to the numpy reference for any
+    length.
+    """
+    shards = [np.ascontiguousarray(d, dtype=np.uint8).reshape(-1)
+              for d in data]
+    if len({s.shape for s in shards}) != 1:
+        raise ValueError(
+            f"data shards must share one shape, got "
+            f"{[s.shape for s in shards]}")
+    # same arity validation (and error text) as the numpy reference
+    gf256.vandermonde(nparity, len(shards))
+    n = shards[0].size
+    tile_bytes = bm * LANES
+    padded = max(tile_bytes, -(-n // tile_bytes) * tile_bytes)
+    arr = np.zeros((len(shards), padded // LANES, LANES), dtype=np.uint8)
+    for j, s in enumerate(shards):
+        arr[j].reshape(-1)[:n] = s
+    exp = jnp.asarray(gf256.EXP, dtype=jnp.int32)
+    logt = jnp.asarray(gf256.LOG, dtype=jnp.int32)
+    out = _encode_tiles(jnp.asarray(arr), exp, logt, nparity=nparity,
+                        bm=bm, interpret=interpret)
+    return [np.asarray(o).reshape(-1)[:n].copy() for o in out]

@@ -247,6 +247,18 @@ class PersistSession(abc.ABC):
         tracer attached the session runs zero tracer callables."""
         self._trace = tracer or None
 
+    # -- fused persist staging (DESIGN.md §13) --------------------------
+    def set_encode_mode(self, mode: str) -> None:
+        """Select the parity-encode route for this session's stripe
+        writes: ``"ref"`` (numpy, the default), ``"pallas"`` (the fused
+        GF(256) kernel through :func:`repro.kernels.ops.rs_encode`) or
+        ``"auto"``.  Only stripe sessions encode anything, so the base
+        is a no-op; composite sessions propagate to their children like
+        :meth:`set_tracer`, so the driver's one call (made when
+        ``SolveConfig.fused_persist`` is set) reaches every stripe in
+        the storage tree.  The emitted bytes are identical either way —
+        this toggles *where* the encode runs, never *what* it writes."""
+
     # -- overlapped pipeline (DESIGN.md §6) -----------------------------
     @abc.abstractmethod
     def begin(self, k: int, scalars: Mapping[str, float],
@@ -672,6 +684,10 @@ class ReplicatedSession(PersistSession):
         for s in self._children:
             s.set_tracer(tracer)
 
+    def set_encode_mode(self, mode: str) -> None:
+        for s in self._children:
+            s.set_encode_mode(mode)
+
     def bind_shards(self, shard_of_block=None, slot_nbytes=None) -> None:
         # children get the addressing map but not the meter (slot size):
         # replicated traffic is counted once at the top of the tree
@@ -829,6 +845,9 @@ class TieredSession(PersistSession):
         self._front._stager.tracer = self._trace
         self._child.set_tracer(tracer)
 
+    def set_encode_mode(self, mode: str) -> None:
+        self._child.set_encode_mode(mode)
+
     def bind_shards(self, shard_of_block=None, slot_nbytes=None) -> None:
         super().bind_shards(shard_of_block, slot_nbytes)
         self._child.bind_shards(shard_of_block=shard_of_block)
@@ -920,6 +939,9 @@ class TieredBackend(PersistenceBackend):
 #: degraded fetch can undo the rotation from any surviving child.
 STRIPE_ROT_SCALAR = "_stripe_rot"
 
+#: legal parity-encode routes for the stripe write path (DESIGN.md §13)
+ENCODE_MODES = frozenset({"ref", "pallas", "auto"})
+
 
 def stripe_child_schema(schema):
     """The schema stripe children are bound to: the solver's schema plus
@@ -976,6 +998,10 @@ class ErasureSession(PersistSession):
         self._children = [open_persist_session(c, backend.child_schema, None)
                           for c in backend.children]
         self._stripe_seq = 0
+        #: parity-encode route (DESIGN.md §13): "ref" = numpy reference,
+        #: "pallas" = the fused GF(256) kernel, "auto" = per-platform;
+        #: seeded from the backend, switchable per solve by the driver
+        self._encode_mode = backend.encode_mode
         #: per-child count of parity-shard writes (the hot-spot metric:
         #: rotation keeps max-min <= 1 over any write sequence)
         self.parity_writes = [0] * len(self._children)
@@ -984,6 +1010,15 @@ class ErasureSession(PersistSession):
         super().set_tracer(tracer)
         for s in self._children:
             s.set_tracer(tracer)
+
+    def set_encode_mode(self, mode: str) -> None:
+        if mode not in ENCODE_MODES:
+            raise ValueError(
+                f"unknown parity encode mode {mode!r}; expected one of "
+                f"{sorted(ENCODE_MODES)}")
+        self._encode_mode = mode
+        for s in self._children:  # nested stripes follow the same route
+            s.set_encode_mode(mode)
 
     def bind_shards(self, shard_of_block=None, slot_nbytes=None) -> None:
         super().bind_shards(shard_of_block, slot_nbytes)
@@ -1016,14 +1051,27 @@ class ErasureSession(PersistSession):
             chunks = [np.ascontiguousarray(padded[:, j * chunk:(j + 1) * chunk]
                                            ).reshape(-1)
                       for j in range(k_data)]
+            # Every non-"ref" encode routes through the registered
+            # toggle (repro.kernels.ops.rs_encode — lint rule RL204),
+            # imported lazily: repro.nvm must import without the
+            # kernels package (ops pulls in jax), so the default "ref"
+            # route stays numpy-only end to end.
+            if self._encode_mode == "ref":
+                def encode(shards):
+                    return gf256.rs_encode(shards, be.nparity)
+            else:
+                from repro.kernels.ops import rs_encode
+
+                def encode(shards):
+                    return rs_encode(shards, be.nparity,
+                                     mode=self._encode_mode)
             if self._trace is None:
-                parity = gf256.rs_encode([c.view(np.uint8) for c in chunks],
-                                         be.nparity)
+                parity = encode([c.view(np.uint8) for c in chunks])
             else:
                 with self._trace.span("gf256.rs_encode", vector=name,
-                                      k_data=k_data, nparity=be.nparity):
-                    parity = gf256.rs_encode(
-                        [c.view(np.uint8) for c in chunks], be.nparity)
+                                      k_data=k_data, nparity=be.nparity,
+                                      encoder=self._encode_mode):
+                    parity = encode([c.view(np.uint8) for c in chunks])
             for j in range(k_data):
                 out[j][name] = chunks[j]
             for i in range(be.nparity):
@@ -1217,9 +1265,15 @@ class ErasureCodedBackend(PersistenceBackend):
     name = "erasure"
 
     def __init__(self, data_children: Sequence[PersistenceBackend],
-                 parity_children, block_size: int):
+                 parity_children, block_size: int, encode: str = "ref"):
         if isinstance(parity_children, PersistenceBackend):
             parity_children = [parity_children]
+        if encode not in ENCODE_MODES:
+            raise ValueError(
+                f"unknown parity encode mode {encode!r}; expected one of "
+                f"{sorted(ENCODE_MODES)}")
+        #: default parity-encode route sessions inherit (DESIGN.md §13)
+        self.encode_mode = encode
         if len(data_children) < 2:
             raise ValueError(
                 f"erasure coding needs >= 2 data children, got "
@@ -1455,7 +1509,8 @@ def _erasure_factory(nblocks, block_size, dtype,
                      data: Sequence = ("nvm-prd",) * 4,
                      parity: Optional[str] = None,
                      nparity: int = 1,
-                     schema=None, **opts) -> ErasureCodedBackend:
+                     schema=None, encode: str = "ref",
+                     **opts) -> ErasureCodedBackend:
     """Build the stripe: children are sized for the chunk (1/K of the
     block, zero-padded) and bound to the stripe schema (the solver's
     schema + the rotation scalar), so the stripe's total footprint is
@@ -1486,7 +1541,8 @@ def _erasure_factory(nblocks, block_size, dtype,
     children = [build(c) for c in data]
     parity_spec = parity if parity is not None else data[0]
     parity_children = [build(parity_spec) for _ in range(int(nparity))]
-    return ErasureCodedBackend(children, parity_children, block_size)
+    return ErasureCodedBackend(children, parity_children, block_size,
+                               encode=encode)
 
 
 register_backend("replicated", _replicated_factory)

@@ -304,5 +304,13 @@ class PersistStager:
 
     def abort(self) -> int:
         n = len(self._staged)
+        if n and self.tracer is not None:
+            # The discard is observable: SolveReport.persist_aborts
+            # counts the driver-side event, and this closes the stager
+            # leg of the trace triangle — every stage.copy is matched by
+            # a stage.flush or accounted for by a stage.abort (the
+            # conservation law check_trace_report verifies).
+            self.tracer.event("stage.abort", count=n,
+                              ks=tuple(int(k) for k, _, _ in self._staged))
         self._staged.clear()
         return n

@@ -328,4 +328,22 @@ def check_trace_report(tracer, report) -> Dict[str, int]:
                 f"trace/report disagreement: {got} {metric!r} trace "
                 f"events but SolveReport.{field} = {want}")
         compared[field] = got
+    # Staging conservation (the stager leg of the triangle): every
+    # payload a stager copied in (``stage.copy``) must leave it either
+    # flushed (``stage.flush``, including drain-time flushes) or
+    # explicitly discarded (``stage.abort`` carries the dropped payload
+    # count) — a silent discard would make persist_aborts uncheckable
+    # against the trace.
+    copies = counts.get("stage.copy", 0)
+    flushes = counts.get("stage.flush", 0)
+    dropped = sum(
+        int(rec.get("args", {}).get("count", 0))
+        for rec in getattr(tracer, "records", ())
+        if rec.get("type") == "event" and rec.get("name") == "stage.abort")
+    if copies != flushes + dropped:
+        raise ValueError(
+            f"trace staging leak: {copies} stage.copy events but "
+            f"{flushes} stage.flush + {dropped} payloads dropped by "
+            f"stage.abort — staged payloads vanished untraced")
+    compared["stage_dropped"] = dropped
     return compared

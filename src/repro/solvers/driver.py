@@ -70,6 +70,16 @@ class SolveConfig:
     #                               backend's declared capabilities; False
     #                               runs unplanned (failures surface at the
     #                               recovery fetch instead)
+    fused_persist: bool = False   # fused persist path (DESIGN.md §13):
+    #                               stripe sessions encode parity through
+    #                               the Pallas kernel (repro.kernels.ops.
+    #                               rs_encode) and, in overlap mode, the
+    #                               staging pass is deferred into the next
+    #                               iteration's timed window so it rides
+    #                               the compute it overlaps.  Slot bytes
+    #                               and commit ordering are identical to
+    #                               the numpy path — solves are
+    #                               bit-identical either way
     tracer: Optional[object] = None  # a repro.obs.Tracer records spans /
     #                               events through the whole pipeline
     #                               (DESIGN.md §9); None (or any falsy
@@ -688,6 +698,15 @@ class PersistencePipeline:
                        slot_nbytes=solver.schema.slot_nbytes(
                            part.block_size, np.dtype(b.dtype)))
 
+        # Fused persist path (DESIGN.md §13): route stripe parity
+        # encodes through the Pallas kernel.  External/duck-typed
+        # sessions without the hook simply keep their own encode.
+        self.fused = bool(config.fused_persist) and self.session is not None
+        if self.fused:
+            setter = getattr(self.session, "set_encode_mode", None)
+            if setter is not None:
+                setter("pallas")
+
         # shard=... events become block events before anything else sees
         # them
         campaign = resolve_shard_events(failures, self.layout)
@@ -720,6 +739,10 @@ class PersistencePipeline:
         self.last_persisted_k: Optional[int] = None
         self.consecutive = 0
         self.staged_state = None  # payload staged, pending commit
+        # Fused overlap only: persist point reached but staging deferred
+        # into the next iteration's timed window (flush_pending_stage).
+        # At most one of staged_state / pending_state is set at a time.
+        self.pending_state = None
 
     # ------------------------------------------------------------------
     def _note_committed(self, st, cost: float, window_s: float) -> None:
@@ -766,21 +789,43 @@ class PersistencePipeline:
     def persist_abort(self) -> None:
         # The session side is aborted by session.fail() / fail_storage();
         # here we only drop the driver-side bookkeeping so the dead event
-        # is never counted or committed (it does count as an abort).
-        if self.staged_state is not None:
+        # is never counted or committed (it does count as an abort).  A
+        # fused-mode pending (deferred, never staged) event aborts the
+        # same way, so persist_aborts agree between the two routes.
+        st = (self.staged_state if self.staged_state is not None
+              else self.pending_state)
+        if st is not None:
             self.metrics.counter("persist.abort").inc()
             trace = self.trace
             if trace is not None:
-                trace.event("persist.abort", k=int(self.staged_state.k))
+                trace.event("persist.abort", k=int(st.k))
         self.staged_state = None
+        self.pending_state = None
+
+    def flush_pending_stage(self) -> None:
+        """Fused overlap only: run the deferred staging pass (no-op
+        otherwise).  The solve loop calls this inside the timed window
+        right after the next iteration's step — the staging copy and
+        parity encode then ride the same window that hides the commit,
+        instead of sitting exposed on the critical path between
+        iterations (DESIGN.md §13)."""
+        if self.pending_state is not None:
+            st, self.pending_state = self.pending_state, None
+            self.persist_begin(st)
 
     def persist_point(self, st) -> None:
         """One scheduled persistence event.  Sync mode is the paper's
         fully synchronous host pull: write straight through, no staging
         copy, everything exposed.  Overlap mode stages now and commits
-        behind the next iteration's compute."""
+        behind the next iteration's compute; fused overlap defers even
+        the staging into that window (same commit ordering — the event
+        is still staged and committed before the following persist
+        point)."""
         if self.overlap:
-            self.persist_begin(st)
+            if self.fused:
+                self.pending_state = st
+            else:
+                self.persist_begin(st)
         else:
             rset = self.solver.recovery_set(st)
             cost = self.session.persist(rset.k, rset.scalars, rset.vectors)
@@ -942,6 +987,7 @@ class PersistencePipeline:
         OUT of the registry the loop incremented, so registry and report
         agree by construction (check_report_consistency re-verifies;
         check_trace_report closes the triangle to the trace)."""
+        self.flush_pending_stage()  # a deferred final event still stages
         self.persist_commit(0.0)
         metrics = self.metrics
         report.iterations = int(state.k)
@@ -1104,6 +1150,13 @@ def solve(
         else:
             with trace.span("iteration.step", k=k):
                 state = step(state)
+        if pipe.pending_state is not None:
+            # Fused overlap (DESIGN.md §13): the deferred staging pass
+            # (payload copy + Pallas parity encode) runs inside this
+            # window too, so its wall time is absorbed by the same
+            # compute that hides the commit below.
+            jax.block_until_ready(state)
+            pipe.flush_pending_stage()
         if pipe.staged_state is not None:
             # Overlap window: the commit of iteration k's payload rides
             # behind iteration k+1's compute.

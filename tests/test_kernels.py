@@ -73,6 +73,36 @@ def test_property_stencil_linearity(nz, ny, nx, seed):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("m", [384, 7, 100, 255])
+def test_fused_cg_kernel_default_bm_any_row_count(m):
+    """Post-fix (ISSUE 10): the default tiling accepts ANY lane-aligned
+    n — m = 384 (not a divisor-friendly power of two), prime m = 7, ...
+    — by falling back to the largest divisor of m <= DEFAULT_BM."""
+    from repro.kernels.fused_cg import DEFAULT_BM, largest_divisor_bm
+
+    bm = largest_divisor_bm(m)
+    assert 1 <= bm <= min(DEFAULT_BM, m) and m % bm == 0
+    n = m * 128
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x, r, p, ap, inv = [jax.random.normal(k, (n,), jnp.float32) for k in ks]
+    alpha = jnp.asarray(-0.21, jnp.float32)
+    got = ops.fused_cg_update(x, r, p, ap, alpha, inv, mode="pallas")
+    want = ref.fused_cg_update_ref(x, r, p, ap, alpha, inv)
+    for g, w, name in zip(got[:3], want[:3], ("x", "r", "z")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-5, atol=2e-5, err_msg=name)
+
+
+def test_fused_cg_kernel_explicit_invalid_bm_still_raises():
+    """The divisor fallback repairs only the DEFAULT; a caller-passed
+    bm that does not divide m stays a hard error."""
+    n = 7 * 128
+    v = jnp.zeros((n,), jnp.float32)
+    a = jnp.asarray(1.0, jnp.float32)
+    with pytest.raises(ValueError, match="not divisible by block rows"):
+        ops.fused_cg_update(v, v, v, v, a, v, mode="pallas", bm=2)
+
+
 def test_fused_cg_inside_solver_iteration():
     """One CG iteration computed with the fused kernel equals the plain
     jnp iteration (the kernel is a drop-in for Algorithm 1 lines 4-7a)."""

@@ -170,6 +170,10 @@ EXTRA_TRIGGERS = [
      SOLVER_PATH),
     ("RL202", "import time\nt0 = time.time()\n", SOLVER_PATH),
     ("RL203", "import random\nx = random.random()\n", SOLVER_PATH),
+    ("RL204", "from repro.kernels.gf256_encode import "
+              "gf256_rs_encode_pallas\n"
+              "parity = gf256_rs_encode_pallas(chunks, 2)\n",
+     "src/repro/nvm/backend.py"),
     ("RL302", "def f(t, name):\n"
               "    if t is not None:\n"
               "        t.event(name)\n", SOLVER_PATH),
@@ -188,6 +192,22 @@ EXTRA_TRIGGERS = [
                          ids=[t[0] for t in EXTRA_TRIGGERS])
 def test_every_rule_id_fires(rule, src, path):
     assert rule in rules_of(lint_source(src, path=path))
+
+
+def test_fused_encode_route_rule_scoping():
+    """RL204 fires only inside nvm/ and only on the direct kernel entry
+    points — the registered toggle (ops.rs_encode) stays clean, and the
+    kernels package itself may reference its own entry points."""
+    direct = ("from repro.kernels.gf256_encode import "
+              "gf256_rs_encode_pallas\n"
+              "parity = gf256_rs_encode_pallas(chunks, 2)\n")
+    routed = ("from repro.kernels.ops import rs_encode\n"
+              "parity = rs_encode(chunks, 2, mode='pallas')\n")
+    nvm = "src/repro/nvm/backend.py"
+    assert "RL204" in rules_of(lint_source(direct, path=nvm))
+    assert "RL204" not in rules_of(lint_source(routed, path=nvm))
+    assert "RL204" not in rules_of(
+        lint_source(direct, path="src/repro/kernels/ops.py"))
 
 
 def test_registry_covers_five_families_and_meta():

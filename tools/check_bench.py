@@ -28,7 +28,7 @@ import sys
 SCHEMA_VERSION = "repro-bench/v1"
 
 TOP_KEYS = ("schema", "bench", "seed", "smoke", "solver", "problem", "specs",
-            "sharded", "service")
+            "sharded", "service", "persist_kernels")
 MODELED_KEYS = ("persist_s_per_event", "persist_s_per_iter",
                 "exposed_persist_s_per_iter", "drain_s",
                 "storage_overhead_x")
@@ -45,6 +45,18 @@ SERVICE_COUNT_KEYS = ("requests", "completed", "rejected", "converged",
                       "queue_wait_steps_p50", "queue_wait_steps_p99",
                       "batch_occupancy_mean")
 SERVICE_WALL_KEYS = ("elapsed_s", "solves_per_s")
+PK_GEOMETRY_KEYS = ("k_data", "nparity", "chunk_values", "itemsize",
+                    "encode_read_bytes_per_event", "parity_bytes_per_event")
+PK_FUSED_PASS_KEYS = ("update_read_bytes", "update_write_bytes",
+                      "staged_write_bytes", "total_bytes",
+                      "persist_bw_fraction", "unfused_extra_read_bytes")
+PK_COUNT_KEYS = ("iterations", "persist_events", "persist_aborts")
+PK_WALL_KEYS = ("hidden_fraction_ref", "hidden_fraction_fused",
+                "iterations_per_s_ref", "iterations_per_s_fused")
+#: the tentpole threshold for the committed (non-smoke) document: the
+#: fused route must hide strictly more than this fraction of persist
+#: cost behind compute (ISSUE 10 acceptance; smoke walls are too noisy)
+PK_MIN_FUSED_HIDDEN_FRACTION = 0.94
 
 
 class BenchError(Exception):
@@ -125,6 +137,53 @@ def validate(doc: dict, path: str = "<doc>") -> None:
         _require(isinstance(wall, dict) and _numeric(
                      wall.get("hidden_fraction")),
                  f"{where}.wall.hidden_fraction must be numeric")
+    pk = doc["persist_kernels"]
+    where = f"{path}: persist_kernels"
+    _require(isinstance(pk, dict), f"{where} must be an object")
+    _require(isinstance(pk.get("spec"), str) and pk["spec"],
+             f"{where}.spec must be a non-empty string")
+    geom = pk.get("geometry")
+    _require(isinstance(geom, dict), f"{where}.geometry must be an object")
+    for k in PK_GEOMETRY_KEYS:
+        _require(_numeric(geom.get(k)), f"{where}.geometry.{k} must be "
+                                        f"numeric")
+    fp = geom.get("fused_pass")
+    _require(isinstance(fp, dict), f"{where}.geometry.fused_pass must be "
+                                   f"an object")
+    for k in PK_FUSED_PASS_KEYS:
+        _require(_numeric(fp.get(k)),
+                 f"{where}.geometry.fused_pass.{k} must be numeric")
+    _require(fp["total_bytes"] == fp["update_read_bytes"]
+             + fp["update_write_bytes"] + fp["staged_write_bytes"],
+             f"{where}.geometry.fused_pass: traffic terms do not sum to "
+             f"total_bytes")
+    counts = pk.get("counts")
+    _require(isinstance(counts, dict), f"{where}.counts must be an object")
+    for k in PK_COUNT_KEYS:
+        _require(_numeric(counts.get(k)), f"{where}.counts.{k} must be "
+                                          f"numeric")
+    # the exactness cross-checks are part of the gate, not just data:
+    # a fused route that drifts from the numpy route fails validation
+    _require(counts.get("bit_identical") is True,
+             f"{where}.counts.bit_identical: fused and numpy persist "
+             f"routes must produce bit-identical solves")
+    _require(counts.get("counts_match_ref") is True,
+             f"{where}.counts.counts_match_ref: fused route's persist "
+             f"accounting must match the numpy route")
+    wall = pk.get("wall")
+    _require(isinstance(wall, dict), f"{where}.wall must be an object")
+    for k in PK_WALL_KEYS:
+        _require(_numeric(wall.get(k)), f"{where}.wall.{k} must be numeric")
+    for k in ("hidden_fraction_ref", "hidden_fraction_fused"):
+        _require(0.0 <= wall[k] <= 1.0,
+                 f"{where}.wall.{k} must lie in [0, 1]")
+    if not doc["smoke"]:
+        _require(wall["hidden_fraction_fused"]
+                 > PK_MIN_FUSED_HIDDEN_FRACTION,
+                 f"{where}.wall.hidden_fraction_fused = "
+                 f"{wall['hidden_fraction_fused']:.4f} must exceed "
+                 f"{PK_MIN_FUSED_HIDDEN_FRACTION} on the committed "
+                 f"non-smoke run (ISSUE 10 acceptance)")
     service = doc["service"]
     _require(isinstance(service, dict),
              f"{path}: service must be an object")
@@ -168,6 +227,9 @@ def strip_nondeterministic(doc: dict) -> dict:
         load: ({k: v for k, v in entry.items() if k != "wall"}
                if isinstance(entry, dict) else entry)
         for load, entry in doc.get("service", {}).items()}
+    out["persist_kernels"] = {
+        k: v for k, v in doc.get("persist_kernels", {}).items()
+        if k != "wall"}
     return out
 
 

@@ -120,4 +120,50 @@ class UnseededRngRule(Rule):
                     f"seeded — unreproducible")
 
 
-RULES: List[Rule] = [RawReductionRule(), WallClockRule(), UnseededRngRule()]
+class FusedEncodeRouteRule(Rule):
+    rule_id = "RL204"
+    title = "fused GF(256) encode bypassing the registered toggle in nvm/"
+    hint = "call repro.kernels.ops.rs_encode(shards, nparity, mode=...) " \
+           "— the one seam that dispatches between numpy and the " \
+           "fused Pallas kernel"
+    invariant = "ISSUE 10 / DESIGN.md §13: backends route every parity " \
+                "encode through the registered toggle so one seam " \
+                "decides the route and both stay bit-identical"
+
+    #: direct-entry points only the kernels package itself may touch
+    KERNEL_MODULE = "repro.kernels.gf256_encode"
+    KERNEL_CALLS = ("gf256_rs_encode_pallas",
+                    "fused_cg_update_persist_pallas")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if not ctx.in_dir("nvm"):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.startswith(self.KERNEL_MODULE):
+                        yield self.finding(
+                            ctx, node, f"direct import of {alias.name} "
+                            f"from a persistence backend")
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod.startswith(self.KERNEL_MODULE):
+                    yield self.finding(
+                        ctx, node, f"direct import from {mod} from a "
+                        f"persistence backend")
+                elif any(a.name in self.KERNEL_CALLS for a in node.names):
+                    yield self.finding(
+                        ctx, node, "direct import of a fused persist "
+                        "kernel entry point from a persistence backend")
+            elif isinstance(node, ast.Call):
+                func = node.func
+                name = func.attr if isinstance(func, ast.Attribute) \
+                    else getattr(func, "id", "")
+                if name in self.KERNEL_CALLS:
+                    yield self.finding(
+                        ctx, node, f"direct call to {name}(...) from a "
+                        f"persistence backend")
+
+
+RULES: List[Rule] = [RawReductionRule(), WallClockRule(), UnseededRngRule(),
+                     FusedEncodeRouteRule()]
